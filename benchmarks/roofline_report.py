@@ -1,0 +1,53 @@
+"""Deliverable (g): the roofline table, read from dry-run artifacts.
+
+Emits one row per (arch x shape x mesh) record under results/dryrun:
+all three terms (seconds), dominant bottleneck, MODEL_FLOPS ratio, and
+whether the cell fits HBM. benchmarks/run.py prints it as CSV; the same
+data renders EXPERIMENTS.md section Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path("results/dryrun_final")
+if not RESULTS.exists():  # fall back to ad-hoc runs
+    RESULTS = pathlib.Path("results/dryrun")
+
+
+def iter_records(mesh: str | None = None):
+    if not RESULTS.exists():
+        return
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        yield r
+
+
+def run(emit):
+    n = 0
+    for r in iter_records():
+        key = f"roofline/{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r["status"] == "skip":
+            emit(key, 0.0, "SKIP (long_500k needs sub-quadratic attention)")
+            continue
+        if r["status"] != "ok":
+            emit(key, 0.0, f"ERROR {r.get('error', '?')[:80]}")
+            continue
+        t = r["roofline"]
+        dom_s = {"compute": t["compute_s"], "memory": t["memory_s"],
+                 "collective": t["collective_s"]}[t["dominant"]]
+        emit(key, dom_s * 1e6,
+             f"compute_s={t['compute_s']:.4f} memory_s={t['memory_s']:.4f} "
+             f"collective_s={t['collective_s']:.4f} "
+             f"dominant={t['dominant']} "
+             f"useful_flops_ratio={t['useful_flops_ratio']:.3f} "
+             f"hbm_gib={r['per_device_hbm_bytes']/2**30:.2f} "
+             f"fits={r['fits_hbm']}")
+        n += 1
+    if n == 0:
+        emit("roofline/none", 0.0,
+             "no dry-run artifacts found — run `python -m "
+             "repro.launch.dryrun --all` first")

@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,stream,...]
+
+Suites:
+  fig1         paper Figure 1 analogue — s_W variants by algorithm
+  stream       paper Appendix A2 — STREAM copy/scale/add/triad
+  sweep        paper section 2 workload envelope (n, n_perms scaling)
+  pa_roofline  PERMANOVA arithmetic-intensity roofline on TPU v5e
+  roofline     LM-zoo roofline table from dry-run artifacts (deliverable g)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig1_sw_variants, permanova_roofline,
+                        roofline_report, stream_triad, sweep_scale)
+
+SUITES = {
+    "fig1": fig1_sw_variants.run,
+    "stream": stream_triad.run,
+    "sweep": sweep_scale.run,
+    "pa_roofline": permanova_roofline.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            SUITES[name](lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Paper Appendix A2: STREAM bandwidth probe (copy/scale/add/triad).
+
+The paper calibrates its roofline with measured STREAM numbers (CPU 0.2,
+GPU 3.0, datasheet 5.3 TB/s). We run the same probe on this host via jnp
+(XLA-compiled) and report achieved GB/s; on a real TPU the Pallas kernels
+in repro/kernels/stream run the identical probe against HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+from repro.kernels.stream.ops import BYTES_PER_ELEM
+from repro.utils.timing import time_fn
+
+N = 4_000_000   # 16 MB/array: fits host caches poorly, like STREAM intends
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    s = 3.0
+
+    ops = {
+        "copy": jax.jit(lambda a, b: a + 0.0),
+        "scale": jax.jit(lambda a, b: s * a),
+        "add": jax.jit(lambda a, b: a + b),
+        "triad": jax.jit(lambda a, b: a + s * b),
+    }
+    for name, fn in ops.items():
+        t = time_fn(fn, a, b, iters=5, warmup=2)
+        bytes_moved = BYTES_PER_ELEM[name] * 4 * N
+        gbps = bytes_moved / t / 1e9
+        emit(f"stream/{name}", t * 1e6,
+             f"host_gbps={gbps:.2f} "
+             f"(paper MI300A: cpu={hw.MI300A_CPU_STREAM_TRIAD/1e12:.2f} "
+             f"gpu={hw.MI300A_GPU_STREAM_TRIAD/1e12:.2f} TB/s; "
+             f"target v5e HBM={hw.TPU_V5E.hbm_bandwidth/1e12:.2f} TB/s)")

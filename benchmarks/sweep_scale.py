@@ -1,0 +1,42 @@
+"""Paper section 2 workload envelope: scaling in matrix size and
+permutation count ("1k^2..100k^2 elements, 1k..1M permutations").
+
+Verifies the implementation's scaling laws on host CPU: brute is linear in
+n^2 * perms; the matmul form amortizes mat2 reads over the perm block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fstat, permutations
+from repro.utils.timing import time_fn
+
+
+def _instance(n, p, g=8, seed=0):
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), g)
+    gperms = permutations.permutation_batch(jax.random.key(0),
+                                            jnp.asarray(grouping), 0, p)
+    return jnp.asarray(d * d), gperms, inv_gs
+
+
+def run(emit):
+    fn = jax.jit(lambda m, g, w: fstat.sw_matmul(m, g, w, perm_block=32))
+    for n in (256, 512, 1024):
+        m2, gp, ig = _instance(n, 32)
+        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
+        emit(f"sweep/n{n}_perms32", t * 1e6,
+             f"per_perm_us={t/32*1e6:.1f}")
+    for p in (16, 64, 256):
+        m2, gp, ig = _instance(512, p)
+        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
+        emit(f"sweep/n512_perms{p}", t * 1e6,
+             f"per_perm_us={t/p*1e6:.1f}")

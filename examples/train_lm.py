@@ -1,0 +1,80 @@
+"""End-to-end training driver: train a small LM for a few hundred steps on
+the synthetic token stream, with checkpoints and a mid-run failure+restart.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+--size 100m builds a ~100M-param dense model (cluster-scale CPUs/TPUs);
+the default ~10M keeps a 1-core CPU run in minutes.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import SMOKES
+from repro.data.tokens import SyntheticTokenDataset
+from repro.models.model import build_model
+from repro.optim import adamw, warmup_cosine
+from repro.runtime.trainer import FaultTolerantTrainer
+from repro.train.step import make_train_state_init, make_train_step
+from repro.utils.tree import tree_count
+
+SIZES = {
+    # name: (layers, d_model, heads, kv, d_ff)
+    "10m": (4, 256, 8, 4, 1024),
+    "30m": (6, 512, 8, 4, 2048),
+    "100m": (12, 768, 12, 6, 3072),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--size", default="10m", choices=sorted(SIZES))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    l, d, h, kv, ff = SIZES[args.size]
+    cfg = SMOKES["internlm2-1.8b"].replace(
+        name=f"train-lm-{args.size}", n_layers=l, d_model=d, n_heads=h,
+        n_kv_heads=kv, d_head=d // h, d_ff=ff, vocab=8192,
+        attn_q_chunk=64)
+    model = build_model(cfg)
+    opt = adamw()
+    schedule = warmup_cosine(peak=args.lr, warmup_steps=args.steps // 20 + 1,
+                             total_steps=args.steps)
+    step = jax.jit(make_train_step(model, opt, schedule=schedule))
+    init = make_train_state_init(model, opt)
+    n_params = tree_count(jax.eval_shape(init, jax.random.key(0)).params)
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    ds = SyntheticTokenDataset(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch, seed=0)
+    trainer = FaultTolerantTrainer(train_step=step, init_state=init,
+                                   dataset=ds, ckpt_dir=args.ckpt_dir,
+                                   checkpoint_every=50)
+    t0 = time.time()
+    report = trainer.run(n_steps=args.steps, seed=0,
+                         fail_at_step=args.fail_at)
+    dt = time.time() - t0
+    losses = report.losses
+    k = max(len(losses) // 10, 1)
+    print(f"[train_lm] done in {dt:.0f}s "
+          f"({report.steps_run * args.batch * args.seq / dt:.0f} tok/s) "
+          f"restarts={report.restarts}")
+    print(f"[train_lm] loss: start={np.mean(losses[:k]):.3f} "
+          f"end={np.mean(losses[-k:]):.3f}")
+    assert np.mean(losses[-k:]) < np.mean(losses[:k]) - 0.3, \
+        "training should reduce loss"
+    print("OK: loss decreased.")
+
+
+if __name__ == "__main__":
+    main()

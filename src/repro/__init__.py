@@ -1,0 +1,20 @@
+"""repro — a multi-pod JAX framework reproducing and extending
+*Comparing CPU and GPU compute of PERMANOVA on MI300A* (Sfiligoi, PEARC25).
+
+Layers:
+  core/       PERMANOVA statistics engine (the paper's contribution)
+  kernels/    Pallas TPU kernels for the hot loops (+ jnp oracles)
+  models/     assigned LM-architecture zoo (dense / MoE / SSM / hybrid / enc-dec)
+  sharding/   logical-axis -> mesh partition rules
+  train/      training step, microbatching, remat
+  serve/      KV-cache prefill/decode serving
+  optim/      optimizers, schedules, gradient compression
+  data/       synthetic pipelines (tokens + microbiome abundance)
+  checkpoint/ sharded checkpoints with async write + resume
+  runtime/    fault tolerance: heartbeats, elastic re-mesh, stragglers
+  roofline/   compiled-HLO roofline analysis (compute/memory/collective)
+  configs/    architecture + experiment configs
+  launch/     mesh construction, dry-run, train/serve/permanova drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    save_pytree,
+    load_pytree,
+)

@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES  # noqa: F401
+from repro.configs.registry import (  # noqa: F401
+    ARCHS,
+    get_arch,
+    get_smoke,
+    list_archs,
+)

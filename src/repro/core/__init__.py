@@ -1,0 +1,18 @@
+"""PERMANOVA statistics engine — the paper's primary contribution in JAX.
+
+Public API:
+  permanova(dm, grouping, ...)            single-host full test
+  permanova_distributed(mesh, dm, ...)    sharded over (pod, data, model)
+  fstat.sw_{brute,tiled,matmul}           the paper's hot-loop variants
+  distance.distance_matrix(x, metric)     input construction
+"""
+
+from repro.core import fstat, permutations, distance, distributed  # noqa: F401
+from repro.core.permanova import (  # noqa: F401
+    PermanovaResult,
+    f_from_sw,
+    p_value_from_null,
+    permanova,
+    s_total,
+)
+from repro.core.distributed import permanova_distributed, sw_distributed  # noqa: F401

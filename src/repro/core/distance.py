@@ -1,0 +1,101 @@
+"""Distance-matrix construction — the substrate feeding PERMANOVA.
+
+The paper's input was an Unweighted-UniFrac matrix over EMP data (computed by
+a separate tool, ref [9]); the PERMANOVA code path consumes an arbitrary
+symmetric zero-diagonal matrix. We provide the standard ecology metrics on
+abundance tables plus a blockwise driver so 100k-sample tables stream in row
+blocks instead of materializing (n, n, d) intermediates.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def euclidean(x: Array) -> Array:
+    """Pairwise Euclidean via the Gram trick (MXU-friendly)."""
+    sq = jnp.sum(x * x, axis=-1)
+    g = x @ x.T
+    d2 = sq[:, None] + sq[None, :] - 2.0 * g
+    d2 = jnp.maximum(d2, 0.0)
+    d = jnp.sqrt(d2)
+    return _zero_diag(d)
+
+
+def braycurtis(x: Array, *, block: int = 256) -> Array:
+    """Bray-Curtis dissimilarity: sum|xi-xj| / sum(xi+xj), blocked over rows."""
+    def rows(xb):
+        num = jnp.sum(jnp.abs(xb[:, None, :] - x[None, :, :]), axis=-1)
+        den = jnp.sum(xb[:, None, :] + x[None, :, :], axis=-1)
+        return num / jnp.maximum(den, 1e-30)
+    return _zero_diag(_blocked_rows(rows, x, block))
+
+
+def jaccard(x: Array, *, block: int = 256) -> Array:
+    """Binary Jaccard distance on presence/absence (x > 0)."""
+    b = (x > 0)
+    def rows(bb):
+        inter = jnp.sum(bb[:, None, :] & b[None, :, :], axis=-1)
+        union = jnp.sum(bb[:, None, :] | b[None, :, :], axis=-1)
+        return 1.0 - inter / jnp.maximum(union, 1)
+    return _zero_diag(_blocked_rows(rows, b, block).astype(jnp.float32))
+
+
+def aitchison(x: Array, *, pseudocount: float = 0.5) -> Array:
+    """Aitchison distance: Euclidean over clr-transformed compositions."""
+    xp = x + pseudocount
+    logx = jnp.log(xp)
+    clr = logx - jnp.mean(logx, axis=-1, keepdims=True)
+    return euclidean(clr)
+
+
+METRICS: dict[str, Callable] = {
+    "euclidean": euclidean,
+    "braycurtis": braycurtis,
+    "jaccard": jaccard,
+    "aitchison": aitchison,
+}
+
+
+def distance_matrix(x: Array, metric: str = "braycurtis", **kw) -> Array:
+    return METRICS[metric](x, **kw)
+
+
+def _zero_diag(d: Array) -> Array:
+    n = d.shape[0]
+    return d * (1.0 - jnp.eye(n, dtype=d.dtype))
+
+
+def _blocked_rows(row_fn: Callable, x: Array, block: int) -> Array:
+    """Apply row_fn to row blocks via scan (bounds peak memory)."""
+    n = x.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        xp = jnp.pad(x, widths)
+    else:
+        xp = x
+    blocks = xp.reshape(-1, block, *x.shape[1:])
+
+    def body(_, xb):
+        return None, row_fn(xb)
+
+    _, rows = jax.lax.scan(body, None, blocks)
+    return rows.reshape(-1, n)[:n]
+
+
+def validate_distance_matrix(d: Array, *, atol: float = 1e-5) -> dict:
+    """Structural checks the PERMANOVA engine relies on."""
+    sym = float(jnp.max(jnp.abs(d - d.T)))
+    diag = float(jnp.max(jnp.abs(jnp.diagonal(d))))
+    neg = float(jnp.min(d))
+    ok = sym <= atol and diag <= atol and neg >= -atol
+    return {"symmetric_maxerr": sym, "diag_maxabs": diag,
+            "min_value": neg, "ok": ok}

@@ -1,0 +1,285 @@
+"""PERMANOVA pseudo-F partial statistic (`permanova_f_stat_sW`) — the paper's
+hot loop — in several algorithmic forms.
+
+The paper (Sfiligoi, PEARC25) studies exactly this computation:
+
+    s_W[p] = sum_{row < col} mat[row,col]^2
+             * 1[g_p[row] == g_p[col]] * inv_group_sizes[g_p[row]]
+
+over 1k..1M permutations `p` of the grouping labels, with `mat` a distance
+matrix of 1k^2..100k^2 elements. Variants implemented here:
+
+  sw_algorithm1_numpy  literal numpy transcription of the paper's Algorithm 1
+                       (brute force, scalar loops) — the correctness oracle.
+  sw_brute_one         vectorized brute force for ONE permutation (the
+                       GPU-style Algorithm 3: parallel over the (row,col)
+                       triangle). jnp, O(n^2) intermediate.
+  sw_tiled_one         structural transcription of the paper's Algorithm 2
+                       (CPU-tiled): explicit TILE x TILE loop nest with the
+                       inv_group_sizes hoist. Same math, tiled dataflow.
+  sw_brute             brute force over a batch of permutations (scan over
+                       permutation blocks x vmap inside a block).
+  sw_matmul            beyond-paper one-hot matmul reformulation: for a block
+                       of P permutations build E in {0,sqrt(w_g)}^{n x (P*G)}
+                       and compute s_W via M2 @ E on the MXU. Raises the
+                       arithmetic intensity per M2 byte from ~3/4 flop/B to
+                       ~P*G/2 flop/B (see DESIGN.md section 3).
+  sw_rows_partial      row-sharded partial statistic for the distributed
+                       runner (each shard owns a row block; triangle masking
+                       uses global row offsets).
+
+All functions take `mat2 = mat * mat` precomputed — squaring is a one-off
+O(n^2) pass shared by every permutation, mirroring the paper's use of `val*val`
+inside the loop only because OpenMP cannot hoist it; in JAX we hoist it.
+`sw_*` results are identical either way (tests assert this).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Oracle: literal Algorithm 1 (numpy, scalar loops). Slow; tests only.
+# ---------------------------------------------------------------------------
+
+def sw_algorithm1_numpy(mat: np.ndarray, groupings: np.ndarray,
+                        inv_group_sizes: np.ndarray) -> np.ndarray:
+    """Literal transcription of the paper's ALGORITHM 1 (brute force)."""
+    mat = np.asarray(mat, dtype=np.float32)
+    groupings = np.asarray(groupings)
+    inv_group_sizes = np.asarray(inv_group_sizes, dtype=np.float32)
+    n_perms, n_dims = groupings.shape
+    out = np.zeros((n_perms,), dtype=np.float32)
+    for p in range(n_perms):
+        grouping = groupings[p]
+        s_w = np.float32(0.0)
+        for row in range(n_dims - 1):          # no columns in last row
+            group_idx = grouping[row]
+            mat_row = mat[row]
+            local = np.float32(0.0)
+            for col in range(row + 1, n_dims):  # diagonal is always zero
+                if grouping[col] == group_idx:
+                    val = mat_row[col]
+                    local += val * val
+            s_w += local * inv_group_sizes[group_idx]
+        out[p] = s_w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Brute force (paper Algorithm 3 dataflow), one permutation, vectorized.
+# ---------------------------------------------------------------------------
+
+def sw_brute_one(mat2: Array, grouping: Array, inv_group_sizes: Array) -> Array:
+    """Vectorized brute force over the strict upper triangle.
+
+    Matches Algorithm 3: every (row < col) pair contributes
+    mat2[row,col] * w[g[row]] iff g[col] == g[row].
+    """
+    n = mat2.shape[0]
+    same = grouping[:, None] == grouping[None, :]
+    w_row = inv_group_sizes[grouping][:, None]  # hoisted weight per row
+    triu = jnp.triu(jnp.ones((n, n), dtype=bool), k=1)
+    contrib = jnp.where(same & triu, mat2 * w_row, jnp.zeros((), mat2.dtype))
+    return jnp.sum(contrib)
+
+
+def sw_full_one(mat2: Array, grouping: Array, inv_group_sizes: Array) -> Array:
+    """Full-matrix (i != j) form: exploits symmetry, sums everything and
+    halves. The distance matrix has a zero diagonal so no correction term.
+    This is the dataflow the TPU VPU prefers (no triangle mask)."""
+    same = (grouping[:, None] == grouping[None, :]).astype(mat2.dtype)
+    w_row = inv_group_sizes[grouping][:, None]
+    return 0.5 * jnp.sum(mat2 * same * w_row)
+
+
+# ---------------------------------------------------------------------------
+# Tiled (paper Algorithm 2 dataflow), one permutation.
+# ---------------------------------------------------------------------------
+
+def sw_tiled_one(mat2: Array, grouping: Array, inv_group_sizes: Array,
+                 *, tile: int = 64) -> Array:
+    """Structural transcription of the paper's ALGORITHM 2 (CPU-tiled).
+
+    Explicit TILE x TILE blocking of the upper triangle with the
+    inv_group_sizes access hoisted per row-within-tile, expressed as a
+    lax.fori_loop nest so the tiled dataflow survives tracing. n must be a
+    multiple of `tile` (callers pad; the pad region carries a sentinel group
+    that never matches).
+    """
+    n = mat2.shape[0]
+    tile = min(tile, n)
+    while n % tile != 0:   # largest divisor of n not exceeding the request
+        tile -= 1
+    nt = n // tile
+    w = inv_group_sizes[grouping]  # (n,) hoisted per-row weight
+    row_ids = jnp.arange(tile)
+    col_ids = jnp.arange(tile)
+
+    def tile_body(carry, ij):
+        s_w = carry
+        ti, tj = ij
+        r0 = ti * tile
+        c0 = tj * tile
+        m_tile = jax.lax.dynamic_slice(mat2, (r0, c0), (tile, tile))
+        g_row = jax.lax.dynamic_slice(grouping, (r0,), (tile,))
+        g_col = jax.lax.dynamic_slice(grouping, (c0,), (tile,))
+        w_row = jax.lax.dynamic_slice(w, (r0,), (tile,))
+        # strict upper triangle in GLOBAL coordinates
+        gr = r0 + row_ids[:, None]
+        gc = c0 + col_ids[None, :]
+        mask = (gc > gr) & (g_col[None, :] == g_row[:, None])
+        local = jnp.sum(jnp.where(mask, m_tile, 0.0), axis=1)  # per-row local_s_W
+        return s_w + jnp.sum(local * w_row), None
+
+    # only tiles with tj >= ti can contain upper-triangle entries
+    tis, tjs = jnp.meshgrid(jnp.arange(nt), jnp.arange(nt), indexing="ij")
+    keep = (tjs >= tis)
+    order = jnp.argsort(~keep.ravel(), stable=True)[: nt * (nt + 1) // 2]
+    ij = (tis.ravel()[order], tjs.ravel()[order])
+    s_w, _ = jax.lax.scan(tile_body, jnp.zeros((), mat2.dtype), ij)
+    return s_w
+
+
+# ---------------------------------------------------------------------------
+# Batched-permutation drivers.
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(one_fn: Callable, mat2: Array, groupings: Array,
+                 inv_group_sizes: Array, block: int) -> Array:
+    """scan over permutation blocks, vmap(one_fn) inside a block."""
+    n_perms = groupings.shape[0]
+    block = min(block, n_perms)
+    pad = (-n_perms) % block
+    if pad:
+        groupings = jnp.pad(groupings, ((0, pad), (0, 0)), mode="edge")
+    gblocks = groupings.reshape(-1, block, groupings.shape[-1])
+
+    def body(_, gb):
+        return None, jax.vmap(lambda g: one_fn(mat2, g, inv_group_sizes))(gb)
+
+    _, out = jax.lax.scan(body, None, gblocks)
+    return out.reshape(-1)[:n_perms]
+
+
+def sw_brute(mat2: Array, groupings: Array, inv_group_sizes: Array,
+             *, block: int = 32) -> Array:
+    """Brute-force s_W for a batch of permutations. (n_perms,) float."""
+    return _scan_blocks(sw_brute_one, mat2, groupings, inv_group_sizes, block)
+
+
+def sw_tiled(mat2: Array, groupings: Array, inv_group_sizes: Array,
+             *, tile: int = 64, block: int = 8) -> Array:
+    one = functools.partial(sw_tiled_one, tile=tile)
+    return _scan_blocks(one, mat2, groupings, inv_group_sizes, block)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: one-hot matmul (MXU) formulation.
+# ---------------------------------------------------------------------------
+
+def sw_matmul_block(mat2: Array, groupings_block: Array,
+                    inv_group_sizes: Array) -> Array:
+    """s_W for a block of P permutations via one big matmul.
+
+    E[p,:,g] = sqrt(w_g) * 1[g_p[i] == g]            (P, n, G)
+    s_W[p]   = 1/2 * sum_ig (M2 @ E[p])[i,g] * E[p,i,g]
+
+    The diagonal of `mat` is zero so the full i!=j sum equals twice the
+    triangle sum. The contraction M2 @ E reuses every M2 element across
+    P*G output columns — this is the MXU-native dataflow.
+    """
+    n_groups = inv_group_sizes.shape[0]
+    sqrt_w = jnp.sqrt(inv_group_sizes).astype(mat2.dtype)
+    e = jax.nn.one_hot(groupings_block, n_groups, dtype=mat2.dtype)  # (P,n,G)
+    e = e * sqrt_w[None, None, :]
+    p, n, g = e.shape
+    e2d = jnp.transpose(e, (1, 0, 2)).reshape(n, p * g)    # (n, P*G)
+    y = mat2 @ e2d                                          # (n, P*G) on MXU
+    s = jnp.sum(y.reshape(n, p, g) * jnp.transpose(e, (1, 0, 2)), axis=(0, 2))
+    return 0.5 * s
+
+
+def sw_matmul(mat2: Array, groupings: Array, inv_group_sizes: Array,
+              *, perm_block: int = 64) -> Array:
+    """MXU formulation over all permutations (scan over perm blocks)."""
+    n_perms = groupings.shape[0]
+    perm_block = min(perm_block, n_perms)
+    pad = (-n_perms) % perm_block
+    if pad:
+        groupings = jnp.pad(groupings, ((0, pad), (0, 0)), mode="edge")
+    gblocks = groupings.reshape(-1, perm_block, groupings.shape[-1])
+
+    def body(_, gb):
+        return None, sw_matmul_block(mat2, gb, inv_group_sizes)
+
+    _, out = jax.lax.scan(body, None, gblocks)
+    return out.reshape(-1)[:n_perms]
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded partial (for shard_map distribution).
+# ---------------------------------------------------------------------------
+
+def sw_rows_partial(mat2_rows: Array, row_offset: Array, groupings: Array,
+                    inv_group_sizes: Array, *, block: int = 32) -> Array:
+    """Partial s_W over a block of rows [row_offset, row_offset + n_local).
+
+    Each shard sums pairs (i, j) with i local and j > i global. Summing the
+    partials over shards (psum along the 'model' axis) yields the full s_W.
+    groupings is the FULL (n_perms, n) label array (replicated).
+    """
+    n_local, n = mat2_rows.shape
+
+    def one(grouping):
+        g_rows = jax.lax.dynamic_slice(grouping, (row_offset,), (n_local,))
+        w_row = inv_group_sizes[g_rows][:, None]
+        same = grouping[None, :] == g_rows[:, None]
+        gi = row_offset + jnp.arange(n_local)[:, None]
+        gj = jnp.arange(n)[None, :]
+        mask = same & (gj > gi)
+        return jnp.sum(jnp.where(mask, mat2_rows * w_row, 0.0))
+
+    return _scan_blocks(lambda _m, g, _w: one(g), mat2_rows, groupings,
+                        inv_group_sizes, block)
+
+
+def sw_matmul_rows_partial(mat2_rows: Array, row_offset: Array,
+                           groupings: Array, inv_group_sizes: Array,
+                           *, perm_block: int = 64) -> Array:
+    """Row-sharded partial of the MXU formulation.
+
+    Uses the full (i != j) symmetric sum: each shard computes
+    1/2 * sum over its rows i of (M2[i,:] @ E) . E[i,:] — psum over shards
+    reconstructs the global statistic exactly (zero diagonal).
+    """
+    n_local, n = mat2_rows.shape
+    n_groups = inv_group_sizes.shape[0]
+    sqrt_w = jnp.sqrt(inv_group_sizes).astype(mat2_rows.dtype)
+
+    def body(_, gb):  # gb: (P, n)
+        e = jax.nn.one_hot(gb, n_groups, dtype=mat2_rows.dtype) * sqrt_w
+        p, _, g = e.shape
+        e2d = jnp.transpose(e, (1, 0, 2)).reshape(n, p * g)
+        y = mat2_rows @ e2d                                   # (n_local, P*G)
+        e_rows = jax.lax.dynamic_slice(e, (0, row_offset, 0), (p, n_local, g))
+        s = jnp.sum(y.reshape(n_local, p, g)
+                    * jnp.transpose(e_rows, (1, 0, 2)), axis=(0, 2))
+        return None, 0.5 * s
+
+    n_perms = groupings.shape[0]
+    perm_block = min(perm_block, n_perms)
+    pad = (-n_perms) % perm_block
+    if pad:
+        groupings = jnp.pad(groupings, ((0, pad), (0, 0)), mode="edge")
+    gblocks = groupings.reshape(-1, perm_block, n)
+    _, out = jax.lax.scan(body, None, gblocks)
+    return out.reshape(-1)[:n_perms]

@@ -1,0 +1,59 @@
+"""Permutation engine for the PERMANOVA permutation test.
+
+Generates batches of permuted grouping vectors. Group sizes are invariant
+under label permutation, so `inv_group_sizes` is computed once from the
+observed grouping. Permutation 0 is ALWAYS the identity (the observed
+grouping), matching the scikit-bio convention where the observed statistic
+joins the null distribution denominator.
+
+The generator is deliberately splittable/stateless (one fold of the PRNG key
+per permutation index) so that:
+  * distributed shards generate their own permutation ranges without
+    communication (shard p-range [lo, hi) folds keys lo..hi-1), and
+  * straggler re-dispatch / elastic re-meshing re-generates identical
+    permutations on a different host (idempotent recovery — DESIGN.md section 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def group_sizes(grouping: Array, n_groups: int) -> Array:
+    """(n_groups,) counts of each label value in the observed grouping."""
+    return jnp.bincount(grouping, length=n_groups)
+
+
+def inv_group_sizes(grouping: Array, n_groups: int) -> Array:
+    sizes = group_sizes(grouping, n_groups).astype(jnp.float32)
+    return jnp.where(sizes > 0, 1.0 / jnp.maximum(sizes, 1.0), 0.0)
+
+
+def permute_grouping(key: jax.Array, grouping: Array) -> Array:
+    """One random relabeling: grouping composed with a random permutation."""
+    perm = jax.random.permutation(key, grouping.shape[0])
+    return grouping[perm]
+
+
+def permutation_batch(key: jax.Array, grouping: Array, lo: int, hi: int,
+                      *, identity_first: bool = True) -> Array:
+    """Grouping vectors for permutation indices [lo, hi).
+
+    Index 0 is the identity when identity_first. Key folding is by GLOBAL
+    permutation index, so any shard holding any index range produces the
+    same labels as a single-host run.
+    """
+    idx = jnp.arange(lo, hi)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    perms = jax.vmap(lambda k: permute_grouping(k, grouping))(keys)
+    if identity_first:
+        perms = jnp.where((idx == 0)[:, None], grouping[None, :], perms)
+    return perms
+
+
+def permutation_batch_host(key: jax.Array, grouping, n_perms: int):
+    """Convenience full-batch generator (host-side, small studies)."""
+    return permutation_batch(key, jnp.asarray(grouping), 0, n_perms)

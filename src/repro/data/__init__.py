@@ -1,0 +1,3 @@
+from repro.data.tokens import SyntheticTokenDataset, make_token_batches  # noqa: F401
+from repro.data.microbiome import synthetic_abundance, synthetic_study  # noqa: F401
+from repro.data.loader import PrefetchLoader, ShardedLoader  # noqa: F401

@@ -1,0 +1,43 @@
+"""Synthetic microbiome-style abundance tables for the PERMANOVA pipeline.
+
+The paper's input was the EMP Unweighted-UniFrac matrix (25145 samples).
+We generate compositional abundance tables with planted group structure so
+the end-to-end pipeline (abundance -> distance -> PERMANOVA) has a known
+ground truth: effect_size=0 gives uniform p-values (the null calibration
+test), effect_size>>0 gives p ~ 1/(n_perms+1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def synthetic_abundance(n_samples: int, n_features: int, *, seed: int = 0,
+                        sparsity: float = 0.7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(0.7, 1.0, size=(n_samples, n_features))
+    mask = rng.random((n_samples, n_features)) < sparsity
+    x[mask] = 0.0
+    return x.astype(np.float32)
+
+
+def synthetic_study(n_samples: int, n_features: int, n_groups: int, *,
+                    effect_size: float = 0.0, seed: int = 0,
+                    sparsity: float = 0.7):
+    """(abundance (n, d), grouping (n,)) with a planted group effect.
+
+    effect_size shifts each group's mean abundance on a random subset of
+    features; 0.0 = exact null (labels independent of data).
+    """
+    rng = np.random.default_rng(seed)
+    x = synthetic_abundance(n_samples, n_features, seed=seed + 1,
+                            sparsity=sparsity)
+    grouping = rng.integers(0, n_groups, size=n_samples).astype(np.int32)
+    if effect_size > 0:
+        for g in range(n_groups):
+            feat = rng.choice(n_features, size=max(n_features // 10, 1),
+                              replace=False)
+            bump = rng.gamma(effect_size, 1.0,
+                             size=(int((grouping == g).sum()), len(feat)))
+            x[np.ix_(grouping == g, feat)] += bump.astype(np.float32)
+    return x, grouping

@@ -1,0 +1,59 @@
+"""Target-hardware constants used by the roofline model.
+
+The container is CPU-only; TPU v5e is the *target*. All roofline terms in
+benchmarks/ and roofline/ are derived from compiled HLO + these constants.
+
+Sources: spec-provided numbers (197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI). MI300A constants retained for paper-comparison context
+(STREAM triad measurements from the paper's Appendix A2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    peak_flops_f32: float   # FLOP/s per chip (MXU f32 ~= 1/2 bf16 on v5e-class)
+    hbm_bandwidth: float    # B/s per chip
+    hbm_bytes: float        # HBM capacity per chip
+    ici_link_bandwidth: float  # B/s per link
+    ici_links: int          # links per chip
+    vmem_bytes: float       # on-chip vector memory
+    mxu_tile: int = 128     # systolic array dim
+    vpu_lanes: tuple = (8, 128)
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 1024**2,
+)
+
+# Paper's machine, for the Fig.1 / STREAM comparison tables only.
+MI300A_CPU_STREAM_TRIAD = 0.209e12   # B/s measured (paper App. A2)
+MI300A_GPU_STREAM_TRIAD = 3.160e12   # B/s measured (paper App. A2)
+MI300A_HBM_PEAK = 5.3e12             # B/s datasheet
+
+# Paper's benchmark workload (Fig. 1)
+PAPER_N_DIMS = 25145
+PAPER_N_PERMS = 3999
+
+TARGET = TPU_V5E
+
+
+def ridge_point_bf16(chip: ChipSpec = TARGET) -> float:
+    """FLOP/byte where the chip transitions memory-bound -> compute-bound."""
+    return chip.peak_flops_bf16 / chip.hbm_bandwidth
+
+
+def ridge_point_f32(chip: ChipSpec = TARGET) -> float:
+    return chip.peak_flops_f32 / chip.hbm_bandwidth

@@ -1,0 +1,1 @@
+from repro.kernels.distance.ops import pairwise_distance  # noqa: F401

@@ -1,0 +1,51 @@
+"""jit'd wrappers for the pairwise-distance Pallas kernels (with padding)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(v: int, cap: int) -> int:
+    t = 1
+    while t * 2 <= min(v, cap):
+        t *= 2
+    return max(t, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tile_r", "tile_c",
+                                             "feat_block", "interpret"))
+def pairwise_distance(x, *, metric="braycurtis", tile_r=128, tile_c=128,
+                      feat_block=128, interpret: bool | None = None):
+    """(n, n) distance matrix from (n, d) features via the Pallas kernels.
+
+    Pads n/d to tile multiples; zero-padded features are exact for both
+    metrics (|0-0| = 0 contributes nothing; pad rows are sliced off).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = x.shape
+    tile_r = _pick(n, tile_r)
+    tile_c = _pick(n, tile_c)
+    feat_block = _pick(d, feat_block)
+    n_pad = (-n) % max(tile_r, tile_c)
+    d_pad = (-d) % feat_block
+    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
+    if metric == "braycurtis":
+        out = _k.braycurtis_pallas(xp, tile_r=tile_r, tile_c=tile_c,
+                                   feat_block=feat_block, interpret=interpret)
+    elif metric == "euclidean":
+        out = _k.euclidean_pallas(xp, tile_r=tile_r, tile_c=tile_c,
+                                  feat_block=feat_block, interpret=interpret)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    out = out[:n, :n]
+    return out * (1.0 - jnp.eye(n, dtype=out.dtype))  # exact zero diagonal

@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the pairwise-distance Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distance as _d
+
+
+def braycurtis_ref(x: jax.Array) -> jax.Array:
+    return _d.braycurtis(x)
+
+
+def euclidean_ref(x: jax.Array) -> jax.Array:
+    return _d.euclidean(x)

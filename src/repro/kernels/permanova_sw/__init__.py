@@ -1,0 +1,1 @@
+from repro.kernels.permanova_sw.ops import permanova_sw  # noqa: F401

@@ -1,0 +1,197 @@
+"""Pallas TPU kernels for the PERMANOVA pseudo-F partial statistic s_W.
+
+Three dataflows, mirroring the paper's study (DESIGN.md section 2):
+
+  brute      paper Algorithm 3 (the GPU winner on MI300A): grid =
+             (perm, row-tile, col-tile); each permutation re-streams the
+             mat^2 tiles HBM->VMEM. VPU masked square-accumulate.
+             HBM traffic ~= 4 * n^2 * n_perms bytes.
+
+  permblock  the paper's CPU tiling insight transplanted to TPU: grid =
+             (perm-block, row-tile, col-tile); ONE VMEM-resident mat^2 tile
+             serves a BLOCK of P permutations (VMEM plays the role of the
+             MI300A's L2). HBM traffic divided by P.
+
+  matmul     beyond-paper MXU formulation: the grouping indicator becomes a
+             one-hot matmul, so each mat^2 tile feeds a (TR,TC)x(TC,G*P)
+             systolic contraction. Arithmetic intensity ~P*G/2 flop/byte —
+             past the v5e ridge point for P*G >= ~512 (see DESIGN.md sec. 3).
+
+Grid convention (TPU): the LAST grid dimension is innermost. All kernels
+accumulate over the (row-tile, col-tile) inner dims into an output block
+indexed only by the outer perm dim — the Pallas-safe write-once-per-block
+accumulation pattern (init at first inner step via pl.when).
+
+Padding contract (enforced by ops.py): n padded to the tile multiple with
+ZERO rows/cols in mat2 (zero distances contribute nothing regardless of the
+pad labels); n_perms padded to the perm-block multiple by repeating the last
+permutation (excess entries sliced off).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_weights(g_row, w):
+    """w[g] gather via one-hot contraction (MXU/VPU-safe, G is small)."""
+    n_groups = w.shape[-1]
+    onehot = (g_row[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_groups), 1)).astype(w.dtype)
+    return onehot @ w.reshape(n_groups, 1)  # (..., 1)
+
+
+# ---------------------------------------------------------------------------
+# brute: grid (n_perms, nti, ntj)
+# ---------------------------------------------------------------------------
+
+def _sw_brute_body(g_row_ref, g_col_ref, w_ref, m2_ref, o_ref, *,
+                   tile_r: int, tile_c: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g_r = g_row_ref[0, :]                      # (TR,)
+    g_c = g_col_ref[0, :]                      # (TC,)
+    m2 = m2_ref[...]                           # (TR, TC)
+    w = w_ref[0, :]                            # (G,)
+
+    rows = i * tile_r + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 0)
+    cols = j * tile_c + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 1)
+    # strict upper triangle + same-group indicator (paper Alg. 3 inner ifs)
+    mask = (g_c[None, :] == g_r[:, None]) & (cols > rows)
+    local = jnp.sum(jnp.where(mask, m2, 0.0), axis=1)      # per-row local_s_W
+    w_row = _row_weights(g_r, w)[:, 0]                     # hoisted weight
+    o_ref[0] += jnp.sum(local * w_row)
+
+
+def sw_brute_pallas(mat2, groupings, w, *, tile_r=256, tile_c=256,
+                    interpret=True):
+    n_perms, n = groupings.shape
+    grid = (n_perms, n // tile_r, n // tile_c)
+    kernel = functools.partial(_sw_brute_body, tile_r=tile_r, tile_c=tile_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_r), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1, tile_c), lambda p, i, j: (p, j)),
+            pl.BlockSpec((1, w.shape[-1]), lambda p, i, j: (0, 0)),
+            pl.BlockSpec((tile_r, tile_c), lambda p, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda p, i, j: (p,)),
+        out_shape=jax.ShapeDtypeStruct((n_perms,), jnp.float32),
+        interpret=interpret,
+    )(groupings, groupings, w.reshape(1, -1), mat2)
+
+
+# ---------------------------------------------------------------------------
+# permblock: grid (n_perm_blocks, nti, ntj); PB perms share each mat2 tile
+# ---------------------------------------------------------------------------
+
+def _sw_permblock_body(g_row_ref, g_col_ref, w_ref, m2_ref, o_ref, *,
+                       tile_r: int, tile_c: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g_r = g_row_ref[...]                       # (PB, TR)
+    g_c = g_col_ref[...]                       # (PB, TC)
+    m2 = m2_ref[...]                           # (TR, TC)
+    w = w_ref[0, :]                            # (G,)
+
+    rows = i * tile_r + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 0)
+    cols = j * tile_c + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 1)
+    tri = (cols > rows)[None, :, :]
+    mask = (g_c[:, None, :] == g_r[:, :, None]) & tri      # (PB, TR, TC)
+    local = jnp.sum(jnp.where(mask, m2[None, :, :], 0.0), axis=2)  # (PB, TR)
+    w_row = _row_weights(g_r, w)[..., 0]                   # (PB, TR)
+    o_ref[...] += jnp.sum(local * w_row, axis=1)
+
+
+def sw_permblock_pallas(mat2, groupings, w, *, perm_block=8, tile_r=256,
+                        tile_c=256, interpret=True):
+    n_perms, n = groupings.shape
+    grid = (n_perms // perm_block, n // tile_r, n // tile_c)
+    kernel = functools.partial(_sw_permblock_body, tile_r=tile_r, tile_c=tile_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((perm_block, tile_r), lambda p, i, j: (p, i)),
+            pl.BlockSpec((perm_block, tile_c), lambda p, i, j: (p, j)),
+            pl.BlockSpec((1, w.shape[-1]), lambda p, i, j: (0, 0)),
+            pl.BlockSpec((tile_r, tile_c), lambda p, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((perm_block,), lambda p, i, j: (p,)),
+        out_shape=jax.ShapeDtypeStruct((n_perms,), jnp.float32),
+        interpret=interpret,
+    )(groupings, groupings, w.reshape(1, -1), mat2)
+
+
+# ---------------------------------------------------------------------------
+# matmul: grid (n_perm_blocks, nti, ntj); MXU one-hot contraction
+# ---------------------------------------------------------------------------
+
+def _sw_matmul_body(g_row_ref, g_col_ref, sqrtw_ref, m2_ref, o_ref, *,
+                    n_groups: int, acc_dtype):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g_r = g_row_ref[...]                       # (PB, TR)
+    g_c = g_col_ref[...]                       # (PB, TC)
+    m2 = m2_ref[...]                           # (TR, TC)
+    sqrt_w = sqrtw_ref[0, :]                   # (G,)
+
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_groups), 2)
+    e_col = (g_c[:, :, None] == iota_g).astype(m2.dtype) * sqrt_w  # (PB,TC,G)
+    e_row = (g_r[:, :, None] == iota_g).astype(m2.dtype) * sqrt_w  # (PB,TR,G)
+    # MXU contraction: (TR,TC) x (PB,TC,G) -> (PB,TR,G)
+    y = jax.lax.dot_general(
+        e_col, m2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )                                           # (PB, G, TR)
+    s = jnp.sum(y * jnp.transpose(e_row, (0, 2, 1)).astype(acc_dtype),
+                axis=(1, 2))                    # (PB,)
+    o_ref[...] += 0.5 * s.astype(jnp.float32)
+
+
+def sw_matmul_pallas(mat2, groupings, w, *, perm_block=16, tile_r=256,
+                     tile_c=256, n_groups=None, interpret=True):
+    """Full (i != j) symmetric sum, halved — zero diagonal makes it exact.
+    mat2 may be bf16 (accumulation is always fp32)."""
+    n_perms, n = groupings.shape
+    if n_groups is None:
+        n_groups = w.shape[-1]
+    grid = (n_perms // perm_block, n // tile_r, n // tile_c)
+    sqrt_w = jnp.sqrt(w).astype(mat2.dtype)
+    kernel = functools.partial(_sw_matmul_body, n_groups=n_groups,
+                               acc_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((perm_block, tile_r), lambda p, i, j: (p, i)),
+            pl.BlockSpec((perm_block, tile_c), lambda p, i, j: (p, j)),
+            pl.BlockSpec((1, n_groups), lambda p, i, j: (0, 0)),
+            pl.BlockSpec((tile_r, tile_c), lambda p, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((perm_block,), lambda p, i, j: (p,)),
+        out_shape=jax.ShapeDtypeStruct((n_perms,), jnp.float32),
+        interpret=interpret,
+    )(groupings, groupings, sqrt_w.reshape(1, -1), mat2)

@@ -1,0 +1,87 @@
+"""jit'd wrappers around the permanova_sw Pallas kernels.
+
+Handles the padding contract, variant dispatch, and interpret-mode selection
+(interpret=True everywhere except a real TPU backend). These wrappers are the
+`sw_fn` plug-ins for core.permanova.permanova(...).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.permanova_sw import kernel as _k
+
+VARIANTS = ("brute", "permblock", "matmul")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_inputs(mat2, groupings, *, tile_r, tile_c, perm_block):
+    n_perms, n = groupings.shape
+    tile = max(tile_r, tile_c)
+    n_pad = (-n) % tile
+    p_pad = (-n_perms) % perm_block
+    if n_pad:
+        mat2 = jnp.pad(mat2, ((0, n_pad), (0, n_pad)))
+        groupings = jnp.pad(groupings, ((0, 0), (0, n_pad)))
+    if p_pad:
+        groupings = jnp.pad(groupings, ((0, p_pad), (0, 0)), mode="edge")
+    return mat2, groupings, n_perms
+
+
+def _auto_tiles(n: int, tile_r: int, tile_c: int):
+    """Shrink tiles for small problems (tests use n << 256)."""
+    t = 1
+    while t * 2 <= min(n, tile_r):
+        t *= 2
+    return min(tile_r, max(t, 8)), min(tile_c, max(t, 8))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "tile_r", "tile_c", "perm_block", "interpret"))
+def permanova_sw(mat2, groupings, inv_group_sizes, *, variant="matmul",
+                 tile_r=256, tile_c=256, perm_block=16,
+                 interpret: bool | None = None):
+    """s_W for a batch of permutations via the Pallas kernel `variant`.
+
+    mat2:            (n, n) squared distances, zero diagonal (f32 or bf16
+                     for the matmul variant; accumulation is fp32).
+    groupings:       (n_perms, n) int32 permuted labels.
+    inv_group_sizes: (n_groups,) f32.
+    Returns (n_perms,) f32.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = mat2.shape[0]
+    tile_r, tile_c = _auto_tiles(n, tile_r, tile_c)
+    perm_block = min(perm_block, groupings.shape[0])
+    mat2, groupings, n_perms = _pad_inputs(
+        mat2, groupings, tile_r=tile_r, tile_c=tile_c, perm_block=perm_block)
+    w = inv_group_sizes.astype(jnp.float32)
+    if variant == "brute":
+        out = _k.sw_brute_pallas(mat2, groupings, w, tile_r=tile_r,
+                                 tile_c=tile_c, interpret=interpret)
+    elif variant == "permblock":
+        out = _k.sw_permblock_pallas(mat2, groupings, w,
+                                     perm_block=perm_block, tile_r=tile_r,
+                                     tile_c=tile_c, interpret=interpret)
+    elif variant == "matmul":
+        out = _k.sw_matmul_pallas(mat2, groupings, w, perm_block=perm_block,
+                                  tile_r=tile_r, tile_c=tile_c,
+                                  interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS}")
+    return out[:n_perms]
+
+
+def make_sw_fn(variant: str = "matmul", **kw):
+    """Adapter producing the (mat2, groupings, inv_gs) -> s_W signature that
+    core.permanova.permanova(sw_fn=...) expects."""
+    def fn(mat2, groupings, inv_gs):
+        return permanova_sw(mat2, groupings, inv_gs, variant=variant, **kw)
+    return fn

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the permanova_sw Pallas kernels.
+
+The oracle is the vectorized brute-force statistic (which the tests tie back
+to the literal numpy Algorithm 1 transcription in core.fstat). All kernel
+variants — brute, permblock, matmul — must match this within fp32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fstat
+
+Array = jax.Array
+
+
+def sw_ref(mat2: Array, groupings: Array, inv_group_sizes: Array) -> Array:
+    """(n_perms,) s_W via the vectorized upper-triangle brute force."""
+    return fstat.sw_brute(mat2, groupings, inv_group_sizes,
+                          block=min(8, groupings.shape[0]))
+
+
+def sw_ref_f64(mat2, groupings, inv_group_sizes):
+    """Higher-precision reference (numpy float64) for tolerance calibration."""
+    import numpy as np
+    mat2 = np.asarray(mat2, np.float64)
+    groupings = np.asarray(groupings)
+    w = np.asarray(inv_group_sizes, np.float64)
+    n = mat2.shape[0]
+    triu = np.triu(np.ones((n, n), bool), k=1)
+    out = []
+    for g in groupings:
+        same = g[:, None] == g[None, :]
+        out.append(np.sum(np.where(same & triu, mat2 * w[g][:, None], 0.0)))
+    return np.asarray(out)

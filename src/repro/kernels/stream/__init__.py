@@ -1,0 +1,1 @@
+from repro.kernels.stream.ops import stream_op  # noqa: F401

@@ -1,0 +1,23 @@
+"""Oracles for the STREAM kernels (paper Appendix A2)."""
+
+import jax.numpy as jnp
+
+
+def copy_ref(a, b, s):
+    return a
+
+
+def scale_ref(a, b, s):
+    return s * a
+
+
+def add_ref(a, b, s):
+    return a + b
+
+
+def triad_ref(a, b, s):
+    return a + s * b
+
+
+REFS = {"copy": copy_ref, "scale": scale_ref, "add": add_ref,
+        "triad": triad_ref}

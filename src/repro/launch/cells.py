@@ -1,0 +1,224 @@
+"""Cell builder: one (architecture x input-shape x mesh) dry-run unit.
+
+A *cell* bundles the step function to lower (train_step for train shapes,
+prefill for prefill shapes, serve_step for decode shapes), ShapeDtypeStruct
+stand-ins for every input (`input_specs`), and in/out shardings derived from
+the logical-axis rules. launch/dryrun.py lowers and compiles cells;
+roofline/ reads the compiled artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, \
+    shape_applicable
+from repro.configs.registry import ARCHS, SMOKES
+from repro.models.model import build_model
+from repro.serve.engine import make_serve_step
+from repro.sharding.rules import rules_for_mesh
+from repro.sharding.state import (axes_to_shardings, batch_axes,
+                                  train_state_axes)
+from repro.train.step import (default_optimizer_for, make_train_state_init,
+                              make_train_step)
+
+WHISPER_DECODE_ENC_LEN = 1500   # realistic 30 s audio context
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                   # train | prefill | decode
+    fn: Any                     # callable to jit/lower
+    args_abs: tuple             # abstract inputs (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any          # pytree prefix or None (auto)
+    n_microbatches: int = 1
+    notes: str = ""
+    donate_argnums: tuple = ()  # state/caches alias their outputs
+
+
+def pick_microbatches(cfg: ArchConfig, shape: ShapeConfig,
+                      data_ways: int = 16) -> int:
+    """Gradient-accumulation depth so train activations fit 16 GB/chip."""
+    if not shape.is_train:
+        return 1
+    if cfg.d_model >= 6144 or cfg.moe_n_experts >= 32:
+        nm = 16
+    elif cfg.d_model >= 4096:
+        nm = 8
+    else:
+        nm = 4
+    # microbatch rows must stay divisible by the batch-sharding ways
+    # (data, x pod when present): a smaller micro drops batch sharding
+    # and REPLICATES activations per device
+    return min(nm, max(shape.global_batch // data_ways, 1))
+
+
+def input_specs(arch_name: str, shape_name: str, *, smoke: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = (SMOKES if smoke else ARCHS)[arch_name]
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    if smoke:
+        b, s = min(b, 4), min(s, 64)
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, min(s, cfg.max_enc_len),
+                                                cfg.d_model), cfg.jnp_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_vision_tokens
+            return {
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_vision_tokens, cfg.d_model), cfg.jnp_dtype),
+                "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
+                "targets": jax.ShapeDtypeStruct((b, s_text), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_len"] = min(WHISPER_DECODE_ENC_LEN, cfg.max_enc_len)
+    caches = model.init_caches(batch=b, max_len=s, abstract=True, **kw)
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "caches": caches,
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+        "key_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+
+
+def _cache_logical_axes(model, caches):
+    cfg = model.cfg
+
+    def kv(tree):
+        # decode caches: SEQUENCE-sharded over 'model' (partial attention
+        # + reduce beats per-step cache all-gathers; kv lanes replicated)
+        return jax.tree.map(lambda x: ("layers", "batch", "kv_seq", None),
+                            tree)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv(caches)
+    if cfg.family == "encdec":
+        return {"self": kv(caches["self"]), "cross": kv(caches["cross"])}
+    if cfg.family == "hybrid":
+        return {
+            "mamba": {"conv": ("layers", "batch", None, "mlp"),
+                      "ssm": ("layers", "batch", "heads", None, None)},
+            "shared": kv(caches["shared"]),
+        }
+    if cfg.family == "xlstm":
+        out = {}
+        if "mlstm" in caches:
+            out["mlstm"] = {
+                "c": ("layers", "layers", "batch", "heads", None, None),
+                "n": ("layers", "layers", "batch", "heads", None),
+                "m": ("layers", "layers", "batch", "heads"),
+                "conv": ("layers", "layers", "batch", None, "mlp"),
+            }
+            out["slstm"] = {k: ("layers", "batch", None)
+                            for k in ("c", "n", "h", "m")}
+        if "mlstm_tail" in caches:
+            out["mlstm_tail"] = {
+                "c": ("layers", "batch", "heads", None, None),
+                "n": ("layers", "batch", "heads", None),
+                "m": ("layers", "batch", "heads"),
+                "conv": ("layers", "batch", None, "mlp"),
+            }
+        return out
+    raise ValueError(cfg.family)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh, *,
+               smoke: bool = False) -> Optional[Cell]:
+    cfg = (SMOKES if smoke else ARCHS)[arch_name]
+    shape = SHAPES[shape_name]
+    runs, reason = shape_applicable(cfg, shape)
+    if not runs:
+        return Cell(arch=arch_name, shape=shape_name, kind="skip",
+                    fn=None, args_abs=(), in_shardings=(),
+                    out_shardings=None, notes=f"SKIP: {reason}")
+    rules = rules_for_mesh(mesh)
+    model = build_model(cfg)
+    specs = input_specs(arch_name, shape_name, smoke=smoke)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind in ("train", "prefill"):
+        batch_abs = specs
+        batch_sh = axes_to_shardings(batch_axes(batch_abs), batch_abs,
+                                     mesh, rules)
+        if shape.kind == "train":
+            data_ways = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+            nm = pick_microbatches(cfg, shape, data_ways=data_ways)
+            if smoke:
+                nm = 1
+            opt = default_optimizer_for(cfg)
+            accum_dtype = {"float32": jnp.float32,
+                           "bfloat16": jnp.bfloat16}[cfg.grad_accum_dtype]
+            step = make_train_step(model, opt, n_microbatches=nm,
+                                   accum_dtype=accum_dtype)
+            init = make_train_state_init(model, opt)
+            state_abs = jax.eval_shape(init, jax.random.key(0))
+            state_axes = train_state_axes(model, opt, state_abs)
+            state_sh = axes_to_shardings(state_axes, state_abs, mesh, rules)
+            return Cell(arch=arch_name, shape=shape_name, kind="train",
+                        fn=step, args_abs=(state_abs, batch_abs),
+                        in_shardings=(state_sh, batch_sh),
+                        out_shardings=(state_sh, repl),
+                        n_microbatches=nm,
+                        notes=f"optimizer={opt.name} microbatches={nm}",
+                        donate_argnums=(0,))
+        # prefill
+        params_abs = model.abstract_params()
+        param_sh = axes_to_shardings(model.param_axes(), params_abs, mesh,
+                                     rules)
+        max_len = shape.seq_len
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len=max_len)
+
+        logits_abs, caches_abs = jax.eval_shape(prefill_fn, params_abs,
+                                                batch_abs)
+        cache_sh = axes_to_shardings(
+            _cache_logical_axes(model, caches_abs), caches_abs, mesh, rules)
+        from repro.sharding.rules import logical_to_spec
+        logits_sh = NamedSharding(mesh, logical_to_spec(
+            ("batch", None, None), logits_abs.shape, mesh, rules))
+        return Cell(arch=arch_name, shape=shape_name, kind="prefill",
+                    fn=prefill_fn, args_abs=(params_abs, batch_abs),
+                    in_shardings=(param_sh, batch_sh),
+                    out_shardings=(logits_sh, cache_sh), notes="prefill")
+
+    # decode
+    params_abs = model.abstract_params()
+    param_sh = axes_to_shardings(model.param_axes(), params_abs, mesh,
+                                 rules)
+    caches_abs = specs["caches"]
+    cache_axes = _cache_logical_axes(model, caches_abs)
+    cache_sh = axes_to_shardings(cache_axes, caches_abs, mesh, rules)
+    serve = make_serve_step(model)
+    token_sh = axes_to_shardings({"t": ("batch", None)},
+                                 {"t": specs["token"]}, mesh, rules)["t"]
+    return Cell(
+        arch=arch_name, shape=shape_name, kind="decode",
+        fn=serve,
+        args_abs=(params_abs, specs["token"], caches_abs,
+                  specs["cache_len"], specs["key_bits"]),
+        in_shardings=(param_sh, token_sh, cache_sh, repl, repl),
+        out_shardings=(token_sh, repl, cache_sh),
+        notes="serve_step: 1 token vs seq_len cache",
+        donate_argnums=(2,))

@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/roofline artifacts.
+
+  single pod : (16, 16)     ("data", "model")          = 256 chips
+  multi-pod  : (2, 16, 16)  ("pod", "data", "model")   = 512 chips
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks at
+first init). Only this entry point forces 512 host devices — tests and
+benchmarks see the real device count.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh both --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import hw
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, list_archs
+from repro.launch.cells import build_cell, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.roofline.analysis import analyze_compiled, model_flops
+from repro.sharding.rules import set_active
+
+
+def _mem_dict(mem):
+    return {
+        "argument_size_in_bytes": mem.argument_size_in_bytes,
+        "output_size_in_bytes": mem.output_size_in_bytes,
+        "temp_size_in_bytes": mem.temp_size_in_bytes,
+        "alias_size_in_bytes": mem.alias_size_in_bytes,
+        "generated_code_size_in_bytes": mem.generated_code_size_in_bytes,
+    }
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: pathlib.Path,
+             verbose: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "chips": 512 if multi_pod else 256, "status": "?"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape, mesh)
+        if cell.kind == "skip":
+            record.update(status="skip", notes=cell.notes)
+            _write(out_dir, record)
+            if verbose:
+                print(f"[dryrun] {arch} x {shape} x {mesh_name}: "
+                      f"SKIP ({cell.notes})")
+            return record
+        record["kind"] = cell.kind
+        record["notes"] = cell.notes
+
+        with set_active(mesh):
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args_abs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cfg = ARCHS[arch]
+        sh = SHAPES[shape]
+        tokens = (sh.global_batch * sh.seq_len
+                  if cell.kind in ("train", "prefill")
+                  else sh.global_batch)
+        model = build_model(cfg)
+        mf = model_flops(cfg, model.abstract_params(), model.param_axes(),
+                         tokens=tokens,
+                         kind="train" if cell.kind == "train"
+                         else "inference")
+        terms = analyze_compiled(compiled, chips=record["chips"],
+                                 model_flops_total=mf)
+
+        per_dev_hbm = (mem.argument_size_in_bytes
+                       + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes
+                       - mem.alias_size_in_bytes)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory_analysis=_mem_dict(mem),
+            per_device_hbm_bytes=int(per_dev_hbm),
+            fits_hbm=bool(per_dev_hbm <= hw.TARGET.hbm_bytes),
+            roofline=terms.as_dict(),
+        )
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+            print(f"  memory_analysis: {mem}")
+            print(f"  per-device HBM: {per_dev_hbm/2**30:.2f} GiB "
+                  f"(fits 16 GiB: {record['fits_hbm']})")
+            print(f"  cost: flops/dev={terms.flops:.3e} "
+                  f"bytes/dev={terms.hbm_bytes:.3e} "
+                  f"coll/dev={terms.collective_bytes:.3e}")
+            print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+                  f"memory={terms.memory_s*1e3:.2f}ms "
+                  f"collective={terms.collective_s*1e3:.2f}ms "
+                  f"-> dominant={terms.dominant} "
+                  f"useful_flops_ratio={terms.useful_flops_ratio:.3f}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: "
+                  f"ERROR {type(e).__name__}: {e}")
+    record["wall_s"] = round(time.time() - t0, 2)
+    _write(out_dir, record)
+    return record
+
+
+def _write(out_dir: pathlib.Path, record: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / (f"{record['arch']}__{record['shape']}__"
+                      f"{record['mesh']}.json")
+    path.write_text(json.dumps(record, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape id (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out_dir = pathlib.Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: ok={n_ok} skip={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

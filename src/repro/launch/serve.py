@@ -1,0 +1,59 @@
+"""Serving launcher: batched decode with continuous batching.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+      --smoke --requests 12 --batch 4 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS, SMOKES
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeLoop, temperature_sample
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
+    if cfg.family == "encdec":
+        raise SystemExit("use a decoder-only arch for the serve demo")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(4,))
+                    .astype(np.int32), max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+    loop = ServeLoop(model, params, batch_size=args.batch,
+                     max_len=args.max_len,
+                     sampler=temperature_sample(args.temperature))
+    t0 = time.time()
+    done = loop.run(reqs, max_steps=args.max_len * 4,
+                    key=jax.random.key(args.seed))
+    dt = time.time() - t0
+    n_tok = sum(len(r.generated) for r in done)
+    print(f"[serve] arch={cfg.name} requests={len(done)} "
+          f"generated={n_tok} tok wall={dt:.1f}s tok/s={n_tok/dt:.1f}")
+    for i, r in enumerate(done[:3]):
+        print(f"  req{i}: prompt={r.prompt.tolist()} -> "
+              f"{r.generated[:12]}{'...' if len(r.generated) > 12 else ''}")
+    assert all(r.done for r in done), "unfinished requests"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,294 @@
+"""Grouped-query attention: training/prefill (chunked, memory-bounded) and
+single-token decode against a KV cache.
+
+Memory strategy: full (S x S) score materialization is impossible at the
+assigned shapes (32k prefill), so prefill/training attention scans over
+query chunks with an fp32 online softmax over key blocks — the
+FlashAttention recurrence expressed in pure JAX (the Pallas splash kernel is
+a TPU-runtime drop-in; the lax.scan form is what we can validate on CPU and
+what XLA pipelines well).
+
+Layouts:
+  q:       (B, S, H, Dh)
+  k, v:    (B, S, KVH, Dh)
+  cache:   (B, Smax, KVH*Dh) flattened so the head dim shards over 'model'
+           even when KVH < model-axis size (DESIGN.md: decode sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn, rope
+from repro.sharding import shard_activation
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def attention_spec(cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads * cfg.d_head
+    kvh = cfg.n_kv_heads * cfg.d_head
+    return {
+        "wq": nn.dense_spec(d, h, "embed", "heads", bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wk": nn.dense_spec(d, kvh, "embed", "kv", bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wv": nn.dense_spec(d, kvh, "embed", "kv", bias=cfg.qkv_bias,
+                            dtype=dtype),
+        "wo": nn.dense_spec(h, d, "heads", "embed", bias=cfg.out_bias,
+                            dtype=dtype, init="fanin_deep",
+                            scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _project_qkv(params, cfg, x, positions):
+    b, s, _ = x.shape
+    q = nn.dense(params["wq"], x).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = nn.dense(params["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = nn.dense(params["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.rope_fraction > 0:
+        q = rope.apply_rope(q, positions, theta=cfg.rope_theta,
+                            fraction=cfg.rope_fraction)
+        k = rope.apply_rope(k, positions, theta=cfg.rope_theta,
+                            fraction=cfg.rope_fraction)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """(B,S,KVH,Dh) -> (B,S,H,Dh) repeating each kv head onto its group.
+
+    Repeat-KV keeps the HEAD dim intact so it shards over 'model' even when
+    KVH < mesh ways (KVH=8 on a 16-way axis): the fp32 attention logits
+    stay head-sharded instead of replicating — 16x smaller score buffers
+    (the grouped (KVH, G) layout defeats GSPMD propagation).
+    """
+    b, s, kvh, dh = k.shape
+    rep = jnp.broadcast_to(k[:, :, :, None, :],
+                           (b, s, kvh, n_heads // kvh, dh))
+    return rep.reshape(b, s, n_heads, dh)
+
+
+def _attend_block(q, k, v, mask, softmax_scale):
+    """One (q-chunk x full-kv) attention with fp32 softmax.
+
+    q: (B,Sq,H,Dh)  k,v: (B,Sk,H,Dh) (kv pre-repeated)  mask broadcastable
+    to (B,H,Sq,Sk) or None.
+    """
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    logits *= softmax_scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out
+
+
+def full_attention(params, cfg, x, positions, *, causal=True,
+                   q_chunk: int = 1024, segment_mask=None):
+    """Training / prefill attention, scanned over query chunks.
+
+    Peak score memory = q_chunk * S per (batch, head) instead of S^2.
+    Returns (out, (k, v)) so prefill can seed the decode cache.
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = shard_activation(q, ("batch", None, "heads", None))
+    k_rep = shard_activation(_repeat_kv(k, cfg.n_heads),
+                             ("batch", None, "heads", None))
+    v_rep = shard_activation(_repeat_kv(v, cfg.n_heads),
+                             ("batch", None, "heads", None))
+    scale = cfg.d_head ** -0.5
+
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk != 0:
+        q_chunk = s  # fallback: irregular lengths take the unchunked path
+    n_chunks = s // q_chunk
+    kv_pos = jnp.arange(s)
+
+    def one_chunk(ci, qc):
+        q_pos = ci * q_chunk + jnp.arange(q_chunk)
+        if causal:
+            m = (kv_pos[None, :] <= q_pos[:, None])[None, None]
+        else:
+            m = None
+        if segment_mask is not None:
+            sm = segment_mask(q_pos, kv_pos)
+            m = sm if m is None else (m & sm)
+        return _attend_block(qc, k_rep, v_rep, m, scale)
+
+    if n_chunks == 1:
+        out = one_chunk(0, q)
+    else:
+        qs = q.reshape(b, n_chunks, q_chunk, *q.shape[2:])
+        qs = jnp.moveaxis(qs, 1, 0)
+
+        def body(ci, qc):
+            return ci + 1, one_chunk(ci, qc)
+
+        _, outs = jax.lax.scan(body, 0, qs)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, *q.shape[2:])
+
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    out = shard_activation(out, ("batch", None, "heads"))
+    return nn.dense(params["wo"], out), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCacheSpec:
+    batch: int
+    max_len: int
+    n_kv_heads: int
+    d_head: int
+    dtype: object = jnp.bfloat16
+
+    def zeros(self):
+        flat = self.n_kv_heads * self.d_head
+        return {
+            "k": jnp.zeros((self.batch, self.max_len, flat), self.dtype),
+            "v": jnp.zeros((self.batch, self.max_len, flat), self.dtype),
+        }
+
+    def abstract(self):
+        flat = self.n_kv_heads * self.d_head
+        return {
+            "k": jax.ShapeDtypeStruct((self.batch, self.max_len, flat),
+                                      self.dtype),
+            "v": jax.ShapeDtypeStruct((self.batch, self.max_len, flat),
+                                      self.dtype),
+        }
+
+    @property
+    def logical_axes(self):
+        return {"k": ("batch", None, "kv"), "v": ("batch", None, "kv")}
+
+
+def decode_attention_readonly(params, cfg, x, cache, cache_len):
+    """One-token decode WITHOUT writing the cache.
+
+    Attends over cache positions [0, cache_len) plus the current token's
+    own k/v, and returns (out, k_new, v_new) so the caller batches ONE
+    dynamic-update-slice per step across all layers — the scan then reads
+    the cache as a streamed input instead of carrying a second full-size
+    output buffer (halves decode HBM residency; see launch/cells.py).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    s_max = cache["k"].shape[1]
+    k = _repeat_kv(cache["k"].reshape(b, s_max, cfg.n_kv_heads,
+                                      cfg.d_head).astype(x.dtype),
+                   cfg.n_heads)
+    v = _repeat_kv(cache["v"].reshape(b, s_max, cfg.n_kv_heads,
+                                      cfg.d_head).astype(x.dtype),
+                   cfg.n_heads)
+    scale = cfg.d_head ** -0.5
+
+    logits_c = jnp.einsum("bqhd,bshd->bhqs", q.astype(k.dtype),
+                          k).astype(jnp.float32) * scale
+    valid = (jnp.arange(s_max) < cache_len)[None, None, None, :]
+    logits_c = jnp.where(valid, logits_c, NEG_INF)
+    kn = k_new.astype(k.dtype).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    vn = v_new.astype(v.dtype).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    kn_r = _repeat_kv(kn, cfg.n_heads)
+    vn_r = _repeat_kv(vn, cfg.n_heads)
+    logit_self = jnp.einsum("bqhd,bshd->bhqs", q.astype(k.dtype),
+                            kn_r).astype(jnp.float32) * scale
+    logits = jnp.concatenate([logits_c, logit_self], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs[..., :-1], v) \
+        + jnp.einsum("bhqs,bshd->bqhd", probs[..., -1:], vn_r)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    y = nn.dense(params["wo"], out)
+    return y, kn.reshape(b, 1, -1), vn.reshape(b, 1, -1)
+
+
+def decode_attention(params, cfg, x, cache, cache_len):
+    """One-token decode: x (B, 1, D); cache k/v (B, Smax, KVH*Dh).
+
+    Returns (out (B,1,D), updated cache). Writes the new k/v at cache_len.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    flat = cfg.n_kv_heads * cfg.d_head
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.reshape(b, 1, flat).astype(cache["k"].dtype),
+        (0, cache_len, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.reshape(b, 1, flat).astype(cache["v"].dtype),
+        (0, cache_len, 0))
+    # cache layout: sequence-sharded over 'model' (matches launch/cells
+    # decode sharding) — partial attention + reduce, no cache gathers
+    k_cache = shard_activation(k_cache, ("batch", "kv_seq", None))
+    v_cache = shard_activation(v_cache, ("batch", "kv_seq", None))
+
+    s_max = cache["k"].shape[1]
+    k = _repeat_kv(k_cache.reshape(b, s_max, cfg.n_kv_heads,
+                                   cfg.d_head).astype(x.dtype),
+                   cfg.n_heads)
+    v = _repeat_kv(v_cache.reshape(b, s_max, cfg.n_kv_heads,
+                                   cfg.d_head).astype(x.dtype),
+                   cfg.n_heads)
+
+    valid = (jnp.arange(s_max) <= cache_len)[None, None, None, :]
+    out = _attend_block(q.astype(k.dtype), k, v, valid, cfg.d_head ** -0.5)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    y = nn.dense(params["wo"], out)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention(params, cfg, x, enc_out=None, kv_flat=None):
+    """Encoder-decoder cross attention (whisper). No positional rotation,
+    no causal mask. Either enc_out (B,Se,D) — k/v computed here — or
+    precomputed flattened kv_flat {'k','v'}: (B,Se,KVH*Dh)."""
+    b, s, _ = x.shape
+    q = nn.dense(params["wq"], x).reshape(b, s, cfg.n_heads, cfg.d_head)
+    if kv_flat is None:
+        se = enc_out.shape[1]
+        k = nn.dense(params["wk"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, cfg.d_head)
+        v = nn.dense(params["wv"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, cfg.d_head)
+    else:
+        se = kv_flat["k"].shape[1]
+        k = kv_flat["k"].reshape(b, se, cfg.n_kv_heads,
+                                 cfg.d_head).astype(x.dtype)
+        v = kv_flat["v"].reshape(b, se, cfg.n_kv_heads,
+                                 cfg.d_head).astype(x.dtype)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    out = _attend_block(q.astype(k.dtype), k, v, None, cfg.d_head ** -0.5)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return nn.dense(params["wo"], out)
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute flattened cross-attention K/V from encoder output."""
+    b, se, _ = enc_out.shape
+    flat = cfg.n_kv_heads * cfg.d_head
+    return {"k": nn.dense(params["wk"], enc_out).reshape(b, se, flat),
+            "v": nn.dense(params["wv"], enc_out).reshape(b, se, flat)}
+
+
+def seed_cache(cache, k, v, *, start: int = 0):
+    """Write prefill k/v (B,S,KVH,Dh) into a decode cache at position start."""
+    b, s, kvh, dh = k.shape
+    kf = k.reshape(b, s, kvh * dh).astype(cache["k"].dtype)
+    vf = v.reshape(b, s, kvh * dh).astype(cache["v"].dtype)
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], kf, (0, start, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], vf, (0, start, 0)),
+    }

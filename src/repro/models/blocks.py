@@ -1,0 +1,443 @@
+"""Transformer-family blocks + scanned layer stacks.
+
+Homogeneous layer stacks are lax.scan'd over stacked params (compile time
+independent of depth — mandatory for the 80-layer archs on the 512-device
+dry-run). Heterogeneous stacks (zamba2 hybrid, xlstm interleave) use the
+*segmented* pattern: params of the repeating segment are stacked
+(n_segments, seg_len, ...) and a python loop over segments runs
+[scan(seg) -> special block], keeping compiled size O(segment), not O(L).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, nn, ssm, xlstm
+from repro.sharding import shard_activation
+
+Array = jax.Array
+
+
+def _norm(cfg):
+    if cfg.norm == "layernorm":
+        return nn.layernorm_spec, nn.layernorm
+    return nn.rmsnorm_spec, nn.rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder block
+# ---------------------------------------------------------------------------
+
+def decoder_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    spec = {
+        "ln1": norm_spec(cfg.d_model, dtype=dtype),
+        "attn": attention.attention_spec(cfg, dtype),
+        "ln2": norm_spec(cfg.d_model, dtype=dtype),
+    }
+    if cfg.family == "moe":
+        spec["ffn"] = moe.moe_spec(cfg, dtype)
+    elif cfg.act == "gelu":
+        spec["ffn"] = mlp.gelu_mlp_spec(cfg.d_model, cfg.d_ff, cfg.n_layers,
+                                        dtype, bias=cfg.out_bias)
+    else:
+        spec["ffn"] = mlp.swiglu_spec(cfg.d_model, cfg.d_ff, cfg.n_layers,
+                                      dtype)
+    return spec
+
+
+def decoder_block(params, cfg, x, positions, *, causal=True,
+                  q_chunk=1024):
+    """Returns (x, aux, (k, v)) — aux is the MoE balance loss (0 if dense).
+
+    The residual stream is SEQUENCE-PARALLEL over 'model' (Megatron SP):
+    the scan carry — which remat saves per layer — is 1/TP the size;
+    attention/MLP interiors re-gather via their own activation
+    constraints. No-op without an active mesh or when seq %% TP != 0.
+    """
+    _, norm_fn = _norm(cfg)
+    x = shard_activation(x, ("batch", "act_seq", None))
+    h, (k, v) = attention.full_attention(
+        params["attn"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        positions, causal=causal, q_chunk=q_chunk)
+    h = shard_activation(h, ("batch", "act_seq", None))
+    x = x + h
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe.moe_ffn(params["ffn"], cfg, y)
+    elif cfg.act == "gelu":
+        f, aux = mlp.gelu_mlp(params["ffn"], y), jnp.zeros((), jnp.float32)
+    else:
+        f, aux = mlp.swiglu(params["ffn"], y), jnp.zeros((), jnp.float32)
+    f = shard_activation(f, ("batch", "act_seq", None))
+    return x + f, aux, (k, v)
+
+
+def decoder_block_decode(params, cfg, x, cache, cache_len):
+    _, norm_fn = _norm(cfg)
+    h, cache = attention.decode_attention(
+        params["attn"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        cache, cache_len)
+    x = x + h
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        f, _ = moe.moe_ffn(params["ffn"], cfg, y)
+    elif cfg.act == "gelu":
+        f = mlp.gelu_mlp(params["ffn"], y)
+    else:
+        f = mlp.swiglu(params["ffn"], y)
+    return x + f, cache
+
+
+def decoder_block_decode_readonly(params, cfg, x, cache, cache_len):
+    """Decode block that does NOT write the cache; returns (x, k_new,
+    v_new) for a single batched cache update at the end of the step."""
+    _, norm_fn = _norm(cfg)
+    h, k_new, v_new = attention.decode_attention_readonly(
+        params["attn"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        cache, cache_len)
+    x = x + h
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        f, _ = moe.moe_ffn(params["ffn"], cfg, y)
+    elif cfg.act == "gelu":
+        f = mlp.gelu_mlp(params["ffn"], y)
+    else:
+        f = mlp.swiglu(params["ffn"], y)
+    return x + f, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Scanned stacks
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy is None or policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(policy)
+
+
+def stack_forward(stacked, cfg, x, positions, *, causal=True, q_chunk=1024,
+                  remat: Optional[str] = "dots", collect_kv=False):
+    """scan the decoder stack. Returns (x, aux_sum, stacked (k, v) or None)."""
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a, kv = decoder_block(layer_params, cfg, x, positions,
+                                 causal=causal, q_chunk=q_chunk)
+        out = kv if collect_kv else None
+        return (x, aux + a), out
+
+    body = _maybe_remat(body, remat)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 stacked)
+    return x, aux, kvs
+
+
+def stack_decode(stacked, cfg, x, caches, cache_len):
+    """scan decode across layers; caches: {'k': (L,B,S,KV), 'v': ...}."""
+
+    def body(x, inp):
+        layer_params, cache = inp
+        x, cache = decoder_block_decode(layer_params, cfg, x, cache,
+                                        cache_len)
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, caches
+
+
+def stack_decode_readonly(stacked, cfg, x, caches, cache_len, *,
+                          unroll: bool = False):
+    """Decode across layers reading caches without rewriting them; emits
+    per-layer new k/v (L, B, 1, KV) for one batched DUS by the caller.
+
+    unroll=True python-loops the layers: no while-loop xs buffering (XLA
+    CPU double-buffers scanned cache slices — ~2x cache HBM), at the cost
+    of compiled-code size O(L). The decode body is small, so unrolled
+    compiles stay tractable even at 80 layers."""
+    if unroll:
+        n_layers = jax.tree.leaves(stacked)[0].shape[0]
+        k_news, v_news = [], []
+        for l in range(n_layers):
+            layer_params = jax.tree.map(lambda p: p[l], stacked)
+            cache = jax.tree.map(lambda c: c[l], caches)
+            x, k_new, v_new = decoder_block_decode_readonly(
+                layer_params, cfg, x, cache, cache_len)
+            k_news.append(k_new)
+            v_news.append(v_new)
+        return x, jnp.stack(k_news), jnp.stack(v_news)
+
+    def body(x, inp):
+        layer_params, cache = inp
+        x, k_new, v_new = decoder_block_decode_readonly(
+            layer_params, cfg, x, cache, cache_len)
+        return x, (k_new, v_new)
+
+    x, (k_news, v_news) = jax.lax.scan(body, x, (stacked, caches))
+    return x, k_news, v_news
+
+
+def write_cache_column(caches, k_news, v_news, cache_len):
+    """One dynamic-update-slice per cache tensor: insert the (L, B, 1, KV)
+    new column at cache_len."""
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            caches["k"], k_news.astype(caches["k"].dtype),
+            (0, 0, cache_len, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            caches["v"], v_news.astype(caches["v"].dtype),
+            (0, 0, cache_len, 0)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder block (whisper encoder: bidirectional, pre-LN)
+# ---------------------------------------------------------------------------
+
+def encoder_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    return {
+        "ln1": norm_spec(cfg.d_model, dtype=dtype),
+        "attn": attention.attention_spec(cfg, dtype),
+        "ln2": norm_spec(cfg.d_model, dtype=dtype),
+        "ffn": mlp.gelu_mlp_spec(cfg.d_model, cfg.d_ff, cfg.enc_layers,
+                                 dtype, bias=cfg.out_bias),
+    }
+
+
+def encoder_block(params, cfg, x, positions, *, q_chunk=1024):
+    _, norm_fn = _norm(cfg)
+    h, _ = attention.full_attention(
+        params["attn"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        positions, causal=False, q_chunk=q_chunk)
+    x = x + h
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    return x + mlp.gelu_mlp(params["ffn"], y)
+
+
+def encoder_stack(stacked, cfg, x, positions, *, q_chunk=1024,
+                  remat="dots"):
+    def body(x, layer_params):
+        return encoder_block(layer_params, cfg, x, positions,
+                             q_chunk=q_chunk), None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec decoder block (self-attn + cross-attn + FFN)
+# ---------------------------------------------------------------------------
+
+def encdec_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    return {
+        "ln1": norm_spec(cfg.d_model, dtype=dtype),
+        "self": attention.attention_spec(cfg, dtype),
+        "lnx": norm_spec(cfg.d_model, dtype=dtype),
+        "cross": attention.attention_spec(cfg, dtype),
+        "ln2": norm_spec(cfg.d_model, dtype=dtype),
+        "ffn": mlp.gelu_mlp_spec(cfg.d_model, cfg.d_ff, cfg.n_layers, dtype,
+                                 bias=cfg.out_bias),
+    }
+
+
+def encdec_block(params, cfg, x, enc_out, positions, *, q_chunk=1024):
+    _, norm_fn = _norm(cfg)
+    h, kv = attention.full_attention(
+        params["self"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        positions, causal=True, q_chunk=q_chunk)
+    x = x + h
+    x = x + attention.cross_attention(
+        params["cross"], cfg, norm_fn(params["lnx"], x, eps=cfg.norm_eps),
+        enc_out=enc_out)
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    return x + mlp.gelu_mlp(params["ffn"], y), kv
+
+
+def encdec_stack(stacked, cfg, x, enc_out, positions, *, q_chunk=1024,
+                 remat="dots", collect_kv=False):
+    def body(x, layer_params):
+        x, kv = encdec_block(layer_params, cfg, x, enc_out, positions,
+                             q_chunk=q_chunk)
+        return x, (kv if collect_kv else None)
+
+    body = _maybe_remat(body, remat)
+    x, kvs = jax.lax.scan(body, x, stacked)
+    return x, kvs
+
+
+def encdec_block_decode(params, cfg, x, self_cache, cross_kv, cache_len):
+    _, norm_fn = _norm(cfg)
+    h, self_cache = attention.decode_attention(
+        params["self"], cfg, norm_fn(params["ln1"], x, eps=cfg.norm_eps),
+        self_cache, cache_len)
+    x = x + h
+    x = x + attention.cross_attention(
+        params["cross"], cfg, norm_fn(params["lnx"], x, eps=cfg.norm_eps),
+        kv_flat=cross_kv)
+    y = norm_fn(params["ln2"], x, eps=cfg.norm_eps)
+    return x + mlp.gelu_mlp(params["ffn"], y), self_cache
+
+
+def encdec_stack_decode(stacked, cfg, x, self_caches, cross_kvs, cache_len):
+    def body(x, inp):
+        layer_params, cache, ckv = inp
+        x, cache = encdec_block_decode(layer_params, cfg, x, cache, ckv,
+                                       cache_len)
+        return x, cache
+
+    x, self_caches = jax.lax.scan(body, x, (stacked, self_caches, cross_kvs))
+    return x, self_caches
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+def mamba_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    return {
+        "ln": norm_spec(cfg.d_model, dtype=dtype),
+        "mixer": ssm.mamba2_spec(cfg, dtype),
+    }
+
+
+def mamba_block(params, cfg, x, *, chunk=128, state=None):
+    _, norm_fn = _norm(cfg)
+    y, new_state = ssm.mamba2_forward(
+        params["mixer"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        chunk=chunk, state=state)
+    return x + y, new_state
+
+
+def mamba_block_decode(params, cfg, x, state):
+    _, norm_fn = _norm(cfg)
+    y, new_state = ssm.mamba2_decode(
+        params["mixer"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        state)
+    return x + y, new_state
+
+
+def mamba_stack(stacked, cfg, x, *, chunk=128, remat="dots"):
+    def body(x, layer_params):
+        x, _ = mamba_block(layer_params, cfg, x, chunk=chunk)
+        return x, None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def mamba_stack_decode(stacked, cfg, x, states):
+    def body(x, inp):
+        layer_params, st = inp
+        x, st = mamba_block_decode(layer_params, cfg, x, st)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, (stacked, states))
+    return x, states
+
+
+def mamba_stack_prefill(stacked, cfg, x, *, chunk=128, remat="dots"):
+    """scan the stack collecting each layer's final (conv, ssm) state."""
+
+    def body(x, layer_params):
+        x, st = mamba_block(layer_params, cfg, x, chunk=chunk)
+        return x, st
+
+    body = _maybe_remat(body, remat)
+    x, states = jax.lax.scan(body, x, stacked)
+    return x, states
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (pre-norm residual wrappers)
+# ---------------------------------------------------------------------------
+
+def mlstm_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    return {"ln": norm_spec(cfg.d_model, dtype=dtype),
+            "cell": xlstm.mlstm_spec(cfg, dtype)}
+
+
+def mlstm_block(params, cfg, x, *, chunk=256):
+    _, norm_fn = _norm(cfg)
+    return x + xlstm.mlstm_forward(
+        params["cell"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        chunk=chunk)
+
+
+def mlstm_block_decode(params, cfg, x, state):
+    _, norm_fn = _norm(cfg)
+    y, state = xlstm.mlstm_decode(
+        params["cell"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        state)
+    return x + y, state
+
+
+def slstm_block_spec(cfg, dtype):
+    norm_spec, _ = _norm(cfg)
+    return {"ln": norm_spec(cfg.d_model, dtype=dtype),
+            "cell": xlstm.slstm_spec(cfg, dtype)}
+
+
+def slstm_block(params, cfg, x, *, state=None):
+    _, norm_fn = _norm(cfg)
+    y, new_state = xlstm.slstm_forward(
+        params["cell"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        state=state)
+    return x + y, new_state
+
+
+def slstm_block_decode(params, cfg, x, state):
+    _, norm_fn = _norm(cfg)
+    y, state = xlstm.slstm_decode(
+        params["cell"], cfg, norm_fn(params["ln"], x, eps=cfg.norm_eps),
+        state)
+    return x + y, state
+
+
+def mlstm_stack(stacked, cfg, x, *, chunk=256, remat="dots"):
+    def body(x, layer_params):
+        return mlstm_block(layer_params, cfg, x, chunk=chunk), None
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def mlstm_stack_decode(stacked, cfg, x, states):
+    def body(x, inp):
+        layer_params, st = inp
+        x, st = mlstm_block_decode(layer_params, cfg, x, st)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, (stacked, states))
+    return x, states
+
+
+def mlstm_stack_prefill(stacked, cfg, x, *, chunk=256, remat="dots"):
+    _, norm_fn = _norm(cfg)
+
+    def body(x, layer_params):
+        y, st = xlstm.mlstm_forward(
+            layer_params["cell"], cfg,
+            norm_fn(layer_params["ln"], x, eps=cfg.norm_eps),
+            chunk=chunk, return_state=True)
+        return x + y, st
+
+    body = _maybe_remat(body, remat)
+    x, states = jax.lax.scan(body, x, stacked)
+    return x, states

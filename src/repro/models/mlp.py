@@ -1,0 +1,46 @@
+"""Dense MLP blocks: SwiGLU (LLaMA-family default) and GELU (whisper/ViT)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sharding import shard_activation
+
+Array = jax.Array
+
+
+def swiglu_spec(d_model: int, d_ff: int, n_layers: int, dtype):
+    return {
+        "w_gate": nn.dense_spec(d_model, d_ff, "embed", "mlp", dtype=dtype),
+        "w_up": nn.dense_spec(d_model, d_ff, "embed", "mlp", dtype=dtype),
+        "w_down": nn.dense_spec(d_ff, d_model, "mlp", "embed", dtype=dtype,
+                                init="fanin_deep",
+                                scale=1.0 / max(n_layers, 1) ** 0.5),
+    }
+
+
+def swiglu(params, x: Array) -> Array:
+    g = nn.dense(params["w_gate"], x)
+    u = nn.dense(params["w_up"], x)
+    h = jax.nn.silu(g) * u
+    h = shard_activation(h, ("batch", None, "mlp"))
+    return nn.dense(params["w_down"], h)
+
+
+def gelu_mlp_spec(d_model: int, d_ff: int, n_layers: int, dtype,
+                  *, bias: bool = True):
+    return {
+        "w_in": nn.dense_spec(d_model, d_ff, "embed", "mlp", bias=bias,
+                              dtype=dtype),
+        "w_out": nn.dense_spec(d_ff, d_model, "mlp", "embed", bias=bias,
+                               dtype=dtype, init="fanin_deep",
+                               scale=1.0 / max(n_layers, 1) ** 0.5),
+    }
+
+
+def gelu_mlp(params, x: Array) -> Array:
+    h = jax.nn.gelu(nn.dense(params["w_in"], x))
+    h = shard_activation(h, ("batch", None, "mlp"))
+    return nn.dense(params["w_out"], h)

@@ -1,0 +1,651 @@
+"""Top-level language models for every assigned architecture family.
+
+  DecoderLM  dense | moe | vlm   (vlm = dense + precomputed vision prefix)
+  HybridLM   zamba2: scanned mamba2 segments + a SHARED attention block
+  XLSTMLM    interleaved mLSTM / sLSTM segments
+  EncDecLM   whisper: encoder stack + cross-attending decoder
+
+Uniform interface (consumed by train/serve/launch):
+  param_specs() / init(key) / abstract_params()
+  loss(params, batch)                       -> (scalar, metrics)
+  init_caches(batch, max_len[, abstract])   -> decode caches / states
+  prefill(params, batch)                    -> (last_logits, caches)
+  decode_step(params, token, caches, cache_len) -> (logits, caches)
+
+The LM head loss is CHUNKED over the sequence (never materializes the full
+(B, S, V) logits — 1M tokens x 152k vocab would be ~0.6 TB; DESIGN.md sec 7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, blocks, nn
+from repro.sharding import shard_activation
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _unembed_spec(cfg, dtype):
+    return {"w": nn.ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                              init="fanin", dtype=dtype)}
+
+
+def chunked_cross_entropy(x, targets, mask, w_unembed, *, chunk: int = 1024):
+    """Mean NLL over masked positions, scanned over sequence chunks.
+
+    x: (B,S,D) final hidden; targets: (B,S) int32; mask: (B,S) float32.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xcc, tcc, mcc = inp
+        logits = (xcc @ w_unembed).astype(jnp.float32)
+        logits = shard_activation(logits, ("batch", None, "act_vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tcc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mcc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mcc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _positions(b, s, offset=0):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :] + offset,
+                            (b, s))
+
+
+def _logits_last(cfg, params, h_last):
+    """(B,1,D) -> (B,1,V) logits for decode/prefill outputs."""
+    return (h_last @ params["unembed"]["w"]).astype(jnp.float32)
+
+
+class BaseLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = cfg.jnp_dtype
+
+    # --- params -----------------------------------------------------------
+    def param_specs(self):
+        raise NotImplementedError
+
+    def init(self, key):
+        return nn.init_params(key, self.param_specs())
+
+    def abstract_params(self):
+        return nn.abstract_params(self.param_specs())
+
+    def param_axes(self):
+        return nn.logical_axes(self.param_specs())
+
+    # --- API defaults ------------------------------------------------------
+    def loss(self, params, batch):
+        raise NotImplementedError
+
+    def init_caches(self, batch: int, max_len: int, abstract: bool = False):
+        raise NotImplementedError
+
+    def cache_axes(self, caches):
+        """Logical axes tree for decode caches (batch/kv sharding)."""
+        def one(x):
+            if x.ndim >= 3:
+                return ("layers", "batch") + (None,) * (x.ndim - 3) + ("kv",)
+            return (None,) * x.ndim
+        return jax.tree.map(one, caches)
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM: dense | moe | vlm
+# ---------------------------------------------------------------------------
+
+class DecoderLM(BaseLM):
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        spec = {
+            "embed": nn.embedding_spec(cfg.vocab, cfg.d_model, dtype=dt),
+            "layers": nn.stack_specs(blocks.decoder_block_spec(cfg, dt),
+                                     cfg.n_layers),
+            "final_norm": (nn.layernorm_spec if cfg.norm == "layernorm"
+                           else nn.rmsnorm_spec)(cfg.d_model, dtype=dt),
+            "unembed": _unembed_spec(cfg, dt),
+        }
+        return spec
+
+    def _final_norm(self, params, h):
+        fn = nn.layernorm if self.cfg.norm == "layernorm" else nn.rmsnorm
+        return fn(params["final_norm"], h, eps=self.cfg.norm_eps)
+
+    def _embed_input(self, params, batch):
+        cfg = self.cfg
+        h = nn.embed(params["embed"], batch["tokens"]).astype(self.dtype)
+        n_vis = 0
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            vis = batch["vision_embeds"].astype(self.dtype)
+            h = jnp.concatenate([vis, h], axis=1)
+            n_vis = vis.shape[1]
+        return shard_activation(h, ("batch", None, "act_embed")), n_vis
+
+    def _backbone(self, params, h, positions, collect_kv=False):
+        cfg = self.cfg
+        h, aux, kvs = blocks.stack_forward(
+            params["layers"], cfg, h, positions, causal=True,
+            q_chunk=cfg.attn_q_chunk, remat=cfg.remat, collect_kv=collect_kv)
+        return self._final_norm(params, h), aux, kvs
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, n_vis = self._embed_input(params, batch)
+        b, s, _ = h.shape
+        h, aux, _ = self._backbone(params, h, _positions(b, s))
+        if n_vis:
+            h = h[:, n_vis:, :]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(batch["targets"].shape, jnp.float32)
+        ce = chunked_cross_entropy(h, batch["targets"], mask,
+                                   params["unembed"]["w"])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # --- serving -----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        spec = attention.KVCacheSpec(batch, max_len, cfg.n_kv_heads,
+                                     cfg.d_head, dtype=cfg.jnp_kv_dtype)
+        one = spec.abstract() if abstract else spec.zeros()
+
+        def stack(x):
+            if abstract:
+                return jax.ShapeDtypeStruct((cfg.n_layers,) + x.shape,
+                                            x.dtype)
+            return jnp.zeros((cfg.n_layers,) + x.shape, x.dtype)
+
+        return jax.tree.map(stack, one)
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        h, n_vis = self._embed_input(params, batch)
+        b, s, _ = h.shape
+        h, _, kvs = self._backbone(params, h, _positions(b, s),
+                                   collect_kv=True)
+        k, v = kvs  # (L, B, S, KVH, Dh)
+        flat = cfg.n_kv_heads * cfg.d_head
+        kvdt = cfg.jnp_kv_dtype
+        caches = {"k": k.reshape(cfg.n_layers, b, s, flat).astype(kvdt),
+                  "v": v.reshape(cfg.n_layers, b, s, flat).astype(kvdt)}
+        if max_len is not None and max_len > s:
+            pad = max_len - s
+            caches = jax.tree.map(
+                lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                caches)
+        logits = _logits_last(cfg, params, h[:, -1:, :])
+        return logits, caches
+
+    def decode_step(self, params, token, caches, cache_len):
+        cfg = self.cfg
+        h = nn.embed(params["embed"], token).astype(self.dtype)
+        h, k_news, v_news = blocks.stack_decode_readonly(
+            params["layers"], cfg, h, caches, cache_len,
+            unroll=cfg.decode_unroll)
+        caches = blocks.write_cache_column(caches, k_news, v_news,
+                                           cache_len)
+        h = self._final_norm(params, h)
+        return _logits_last(cfg, params, h), caches
+
+
+# ---------------------------------------------------------------------------
+# HybridLM: zamba2 — mamba segments + shared attention block
+# ---------------------------------------------------------------------------
+
+class HybridLM(BaseLM):
+    def _segments(self):
+        cfg = self.cfg
+        seg = cfg.hybrid_shared_every
+        q, r = divmod(cfg.n_layers, seg)
+        return seg, q, r
+
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        return {
+            "embed": nn.embedding_spec(cfg.vocab, cfg.d_model, dtype=dt),
+            "mamba": nn.stack_specs(blocks.mamba_block_spec(cfg, dt),
+                                    cfg.n_layers),
+            "shared_attn": blocks.decoder_block_spec(
+                dataclasses.replace(cfg, family="dense"), dt),
+            "final_norm": nn.rmsnorm_spec(cfg.d_model, dtype=dt),
+            "unembed": _unembed_spec(cfg, dt),
+        }
+
+    def n_shared_invocations(self):
+        _, q, _ = self._segments()
+        return q
+
+    def _split_stacked(self, stacked):
+        seg, q, r = self._segments()
+        head = jax.tree.map(
+            lambda p: p[:q * seg].reshape(q, seg, *p.shape[1:]), stacked)
+        tail = (jax.tree.map(lambda p: p[q * seg:], stacked)
+                if r else None)
+        return head, tail
+
+    def _forward(self, params, h, positions):
+        cfg = self.cfg
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        head, tail = self._split_stacked(params["mamba"])
+        seg, q, r = self._segments()
+        for i in range(q):
+            seg_params = jax.tree.map(lambda p: p[i], head)
+            h = blocks.mamba_stack(seg_params, cfg, h, chunk=cfg.ssd_chunk,
+                                   remat=cfg.remat)
+            h, _, _ = blocks.stack_forward(  # shared block: 1-layer "stack"
+                jax.tree.map(lambda p: p[None], params["shared_attn"]),
+                dense_cfg, h, positions, q_chunk=cfg.attn_q_chunk,
+                remat=cfg.remat)
+        if tail is not None:
+            h = blocks.mamba_stack(tail, cfg, h, chunk=cfg.ssd_chunk,
+                                   remat=cfg.remat)
+        return nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+
+    def loss(self, params, batch):
+        h = nn.embed(params["embed"], batch["tokens"]).astype(self.dtype)
+        h = shard_activation(h, ("batch", None, "act_embed"))
+        b, s, _ = h.shape
+        h = self._forward(params, h, _positions(b, s))
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(batch["targets"].shape, jnp.float32)
+        ce = chunked_cross_entropy(h, batch["targets"], mask,
+                                   params["unembed"]["w"])
+        return ce, {"ce": ce}
+
+    # --- serving -----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, abstract: bool = False):
+        from repro.models import ssm as _ssm
+        cfg = self.cfg
+        seg, q, r = self._segments()
+        mamba_one = _ssm.mamba2_state_spec(cfg, batch, dtype=self.dtype)
+
+        def stack(x, n):
+            if abstract:
+                return jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+            return jnp.zeros((n,) + x.shape, x.dtype)
+
+        mamba_states = jax.tree.map(
+            functools.partial(stack, n=cfg.n_layers), mamba_one)
+        kv = attention.KVCacheSpec(batch, max_len, cfg.n_kv_heads,
+                                   cfg.d_head, dtype=cfg.jnp_kv_dtype)
+        one = kv.abstract() if abstract else kv.zeros()
+        shared = jax.tree.map(functools.partial(stack, n=q), one)
+        return {"mamba": mamba_states, "shared": shared}
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Process the prompt, returning (last logits, decode caches)."""
+        cfg = self.cfg
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        h = nn.embed(params["embed"], tokens).astype(self.dtype)
+        h = shard_activation(h, ("batch", None, "act_embed"))
+        positions = _positions(b, s)
+        head, tail = self._split_stacked(params["mamba"])
+        seg, q, r = self._segments()
+        flat = cfg.n_kv_heads * cfg.d_head
+        m_states, sh_k, sh_v = [], [], []
+        for i in range(q):
+            seg_params = jax.tree.map(lambda p: p[i], head)
+            h, st = blocks.mamba_stack_prefill(seg_params, cfg, h,
+                                               chunk=cfg.ssd_chunk,
+                                               remat=cfg.remat)
+            m_states.append(st)
+            h, _, kvs = blocks.stack_forward(
+                jax.tree.map(lambda p: p[None], params["shared_attn"]),
+                dense_cfg, h, positions, q_chunk=cfg.attn_q_chunk,
+                remat=cfg.remat, collect_kv=True)
+            k, v = kvs  # (1, B, S, KVH, Dh)
+            sh_k.append(k.reshape(b, s, flat).astype(cfg.jnp_kv_dtype))
+            sh_v.append(v.reshape(b, s, flat).astype(cfg.jnp_kv_dtype))
+        if tail is not None:
+            h, st_tail = blocks.mamba_stack_prefill(tail, cfg, h,
+                                                    chunk=cfg.ssd_chunk,
+                                                    remat=cfg.remat)
+            m_states.append(st_tail)
+        mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *m_states)
+        pad = max_len - s
+        shared = {
+            "k": jnp.pad(jnp.stack(sh_k), ((0, 0), (0, 0), (0, pad),
+                                           (0, 0))),
+            "v": jnp.pad(jnp.stack(sh_v), ((0, 0), (0, 0), (0, pad),
+                                           (0, 0))),
+        }
+        h = nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        logits = _logits_last(cfg, params, h[:, -1:, :])
+        return logits, {"mamba": mamba, "shared": shared}
+
+    def decode_step(self, params, token, caches, cache_len):
+        cfg = self.cfg
+        dense_cfg = dataclasses.replace(cfg, family="dense")
+        h = nn.embed(params["embed"], token).astype(self.dtype)
+        head, tail = self._split_stacked(params["mamba"])
+        seg, q, r = self._segments()
+        m_states = caches["mamba"]
+        m_head = jax.tree.map(
+            lambda p: p[:q * seg].reshape(q, seg, *p.shape[1:]), m_states)
+        m_tail = (jax.tree.map(lambda p: p[q * seg:], m_states)
+                  if r else None)
+        new_head, new_shared = [], []
+        for i in range(q):
+            seg_params = jax.tree.map(lambda p: p[i], head)
+            seg_state = jax.tree.map(lambda p: p[i], m_head)
+            h, st = blocks.mamba_stack_decode(seg_params, cfg, h, seg_state)
+            new_head.append(st)
+            sh_cache = jax.tree.map(lambda c: c[i], caches["shared"])
+            h, sh_cache = blocks.decoder_block_decode(
+                params["shared_attn"], dense_cfg, h, sh_cache, cache_len)
+            new_shared.append(sh_cache)
+        new_mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                 *new_head)
+        if m_tail is not None:
+            h, st_tail = blocks.mamba_stack_decode(tail, cfg, h, m_tail)
+            new_mamba = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                new_mamba, st_tail)
+        new_shared = jax.tree.map(lambda *xs: jnp.stack(xs), *new_shared)
+        h = nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        logits = _logits_last(cfg, params, h)
+        return logits, {"mamba": new_mamba, "shared": new_shared}
+
+
+# ---------------------------------------------------------------------------
+# XLSTMLM
+# ---------------------------------------------------------------------------
+
+class XLSTMLM(BaseLM):
+    def _segments(self):
+        cfg = self.cfg
+        every = max(cfg.slstm_every, 1)
+        n_seg, rem = divmod(cfg.n_layers, every)
+        return every, n_seg, rem  # each segment: (every-1) mLSTM + 1 sLSTM
+
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        every, n_seg, rem = self._segments()
+        spec = {
+            "embed": nn.embedding_spec(cfg.vocab, cfg.d_model, dtype=dt),
+            "final_norm": nn.rmsnorm_spec(cfg.d_model, dtype=dt),
+            "unembed": _unembed_spec(cfg, dt),
+        }
+        if n_seg:
+            m_spec = nn.stack_specs(blocks.mlstm_block_spec(cfg, dt),
+                                    every - 1)
+            spec["mlstm"] = nn.stack_specs(m_spec, n_seg)
+            spec["slstm"] = nn.stack_specs(blocks.slstm_block_spec(cfg, dt),
+                                           n_seg)
+        if rem:
+            spec["mlstm_tail"] = nn.stack_specs(
+                blocks.mlstm_block_spec(cfg, dt), rem)
+        return spec
+
+    def _forward(self, params, h):
+        cfg = self.cfg
+        every, n_seg, rem = self._segments()
+        for i in range(n_seg):
+            seg = jax.tree.map(lambda p: p[i], params["mlstm"])
+            h = blocks.mlstm_stack(seg, cfg, h, remat=cfg.remat)
+            sl = jax.tree.map(lambda p: p[i], params["slstm"])
+            h, _ = blocks.slstm_block(sl, cfg, h)
+        if rem:
+            h = blocks.mlstm_stack(params["mlstm_tail"], cfg, h,
+                                   remat=cfg.remat)
+        return nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+
+    def loss(self, params, batch):
+        h = nn.embed(params["embed"], batch["tokens"]).astype(self.dtype)
+        h = shard_activation(h, ("batch", None, "act_embed"))
+        h = self._forward(params, h)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(batch["targets"].shape, jnp.float32)
+        ce = chunked_cross_entropy(h, batch["targets"], mask,
+                                   params["unembed"]["w"])
+        return ce, {"ce": ce}
+
+    def init_caches(self, batch: int, max_len: int, abstract: bool = False):
+        from repro.models import xlstm as _x
+        cfg = self.cfg
+        every, n_seg, rem = self._segments()
+        m_one = _x.mlstm_state_spec(cfg, batch, dtype=jnp.float32)
+        s_one = _x.slstm_state_spec(cfg, batch, dtype=jnp.float32)
+
+        def stack(x, dims):
+            if abstract:
+                return jax.ShapeDtypeStruct(dims + x.shape, x.dtype)
+            return jnp.zeros(dims + x.shape, x.dtype)
+
+        out = {}
+        if n_seg:
+            out["mlstm"] = jax.tree.map(
+                lambda x: stack(x, (n_seg, every - 1)), m_one)
+            out["slstm"] = jax.tree.map(lambda x: stack(x, (n_seg,)), s_one)
+        if rem:
+            out["mlstm_tail"] = jax.tree.map(lambda x: stack(x, (rem,)),
+                                             m_one)
+        return out
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        every, n_seg, rem = self._segments()
+        tokens = batch["tokens"]
+        h = nn.embed(params["embed"], tokens).astype(self.dtype)
+        h = shard_activation(h, ("batch", None, "act_embed"))
+        m_states, s_states = [], []
+        for i in range(n_seg):
+            seg = jax.tree.map(lambda p: p[i], params["mlstm"])
+            h, st = blocks.mlstm_stack_prefill(seg, cfg, h,
+                                               remat=cfg.remat)
+            m_states.append(st)
+            sl = jax.tree.map(lambda p: p[i], params["slstm"])
+            h, sst = blocks.slstm_block(sl, cfg, h)
+            s_states.append(sst)
+        caches = {}
+        if n_seg:
+            caches["mlstm"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *m_states)
+            caches["slstm"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *s_states)
+        if rem:
+            h, st_tail = blocks.mlstm_stack_prefill(
+                params["mlstm_tail"], cfg, h, remat=cfg.remat)
+            caches["mlstm_tail"] = st_tail
+        h = nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        return _logits_last(cfg, params, h[:, -1:, :]), caches
+
+    def decode_step(self, params, token, caches, cache_len):
+        cfg = self.cfg
+        every, n_seg, rem = self._segments()
+        h = nn.embed(params["embed"], token).astype(self.dtype)
+        new_m, new_s = [], []
+        for i in range(n_seg):
+            seg = jax.tree.map(lambda p: p[i], params["mlstm"])
+            st = jax.tree.map(lambda p: p[i], caches["mlstm"])
+            h, st = blocks.mlstm_stack_decode(seg, cfg, h, st)
+            new_m.append(st)
+            sl = jax.tree.map(lambda p: p[i], params["slstm"])
+            sst = jax.tree.map(lambda p: p[i], caches["slstm"])
+            h, sst = blocks.slstm_block_decode(sl, cfg, h, sst)
+            new_s.append(sst)
+        out = {}
+        if n_seg:
+            out["mlstm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            out["slstm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_s)
+        if rem:
+            h, st_tail = blocks.mlstm_stack_decode(
+                params["mlstm_tail"], cfg, h, caches["mlstm_tail"])
+            out["mlstm_tail"] = st_tail
+        h = nn.rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        return _logits_last(cfg, params, h), out
+
+
+# ---------------------------------------------------------------------------
+# EncDecLM (whisper)
+# ---------------------------------------------------------------------------
+
+class EncDecLM(BaseLM):
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        norm_spec = (nn.layernorm_spec if cfg.norm == "layernorm"
+                     else nn.rmsnorm_spec)
+        return {
+            "enc_pos": nn.ParamSpec((cfg.max_enc_len, cfg.d_model),
+                                    (None, "embed"), init="normal",
+                                    dtype=dt),
+            "enc_layers": nn.stack_specs(blocks.encoder_block_spec(cfg, dt),
+                                         cfg.enc_layers),
+            "enc_norm": norm_spec(cfg.d_model, dtype=dt),
+            "embed": nn.embedding_spec(cfg.vocab, cfg.d_model, dtype=dt),
+            "dec_pos": nn.ParamSpec((cfg.max_seq, cfg.d_model),
+                                    (None, "embed"), init="normal",
+                                    dtype=dt),
+            "dec_layers": nn.stack_specs(blocks.encdec_block_spec(cfg, dt),
+                                         cfg.n_layers),
+            "final_norm": norm_spec(cfg.d_model, dtype=dt),
+            "unembed": _unembed_spec(cfg, dt),
+        }
+
+    def _norm_fn(self):
+        return nn.layernorm if self.cfg.norm == "layernorm" else nn.rmsnorm
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        b, se, _ = frames.shape
+        h = frames.astype(self.dtype) + params["enc_pos"][None, :se, :]
+        h = shard_activation(h, ("batch", None, "act_embed"))
+        h = blocks.encoder_stack(params["enc_layers"], cfg, h,
+                                 _positions(b, se),
+                                 q_chunk=cfg.attn_q_chunk, remat=cfg.remat)
+        return self._norm_fn()(params["enc_norm"], h, eps=cfg.norm_eps)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = nn.embed(params["embed"], tokens).astype(self.dtype)
+        h = h + params["dec_pos"][None, :s, :]
+        h, _ = blocks.encdec_stack(params["dec_layers"], cfg, h, enc_out,
+                                   _positions(b, s),
+                                   q_chunk=cfg.attn_q_chunk, remat=cfg.remat)
+        h = self._norm_fn()(params["final_norm"], h, eps=cfg.norm_eps)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(batch["targets"].shape, jnp.float32)
+        ce = chunked_cross_entropy(h, batch["targets"], mask,
+                                   params["unembed"]["w"])
+        return ce, {"ce": ce}
+
+    def init_caches(self, batch: int, max_len: int, abstract: bool = False,
+                    enc_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_len = enc_len or min(cfg.max_enc_len, 1500)
+        kv = attention.KVCacheSpec(batch, max_len, cfg.n_kv_heads,
+                                   cfg.d_head, dtype=cfg.jnp_kv_dtype)
+        one = kv.abstract() if abstract else kv.zeros()
+        cross_kv = attention.KVCacheSpec(batch, enc_len, cfg.n_kv_heads,
+                                         cfg.d_head, dtype=cfg.jnp_kv_dtype)
+        cone = cross_kv.abstract() if abstract else cross_kv.zeros()
+
+        def stack(x):
+            if abstract:
+                return jax.ShapeDtypeStruct((cfg.n_layers,) + x.shape,
+                                            x.dtype)
+            return jnp.zeros((cfg.n_layers,) + x.shape, x.dtype)
+
+        return {"self": jax.tree.map(stack, one),
+                "cross": jax.tree.map(stack, cone)}
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Encode frames + run the decoder prompt, seeding self/cross
+        caches for decode."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        h = nn.embed(params["embed"], tokens).astype(self.dtype)
+        h = h + params["dec_pos"][None, :s, :]
+        h, kvs = blocks.encdec_stack(params["dec_layers"], cfg, h, enc_out,
+                                     _positions(b, s),
+                                     q_chunk=cfg.attn_q_chunk,
+                                     remat=cfg.remat, collect_kv=True)
+        k, v = kvs  # (L, B, S, KVH, Dh)
+        flat = cfg.n_kv_heads * cfg.d_head
+        pad = max_len - s
+        kvdt = cfg.jnp_kv_dtype
+        self_caches = {
+            "k": jnp.pad(k.reshape(cfg.n_layers, b, s, flat),
+                         ((0, 0), (0, 0), (0, pad), (0, 0))).astype(kvdt),
+            "v": jnp.pad(v.reshape(cfg.n_layers, b, s, flat),
+                         ((0, 0), (0, 0), (0, pad), (0, 0))).astype(kvdt),
+        }
+
+        def fill_cross(_, lp):
+            return None, attention.cross_kv(lp["cross"], cfg, enc_out)
+
+        _, cross = jax.lax.scan(fill_cross, None, params["dec_layers"])
+        cross = jax.tree.map(lambda c: c.astype(cfg.jnp_kv_dtype), cross)
+        h = self._norm_fn()(params["final_norm"], h, eps=cfg.norm_eps)
+        logits = _logits_last(cfg, params, h[:, -1:, :])
+        return logits, {"self": self_caches, "cross": cross}
+
+    def decode_step(self, params, token, caches, cache_len):
+        cfg = self.cfg
+        b = token.shape[0]
+        h = nn.embed(params["embed"], token).astype(self.dtype)
+        pos = jnp.take(params["dec_pos"],
+                       jnp.full((1,), cache_len, jnp.int32), axis=0)
+        h = h + pos[None, :, :]
+        h, self_caches = blocks.encdec_stack_decode(
+            params["dec_layers"], cfg, h, caches["self"], caches["cross"],
+            cache_len)
+        h = self._norm_fn()(params["final_norm"], h, eps=cfg.norm_eps)
+        return _logits_last(cfg, params, h), {"self": self_caches,
+                                              "cross": caches["cross"]}
+
+
+FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "hybrid": HybridLM,
+    "xlstm": XLSTMLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: ArchConfig) -> BaseLM:
+    return FAMILIES[cfg.family](cfg)
+
+
+LMModel = BaseLM

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Covers both assigned MoE architectures:
+  grok-1-314b     8 experts, top-2, no shared experts
+  qwen2-moe-a2.7b 60 routed experts top-4 + shared experts (always-on)
+
+Dispatch: tokens are routed top-k; each (token, choice) is assigned a slot
+inside its expert's capacity buffer via a cumulative-count rank. Tokens past
+capacity are dropped (their combine weight is zero) — the GShard/Switch
+convention. The dense (T, E, C) dispatch tensor is NEVER materialized: we
+scatter token vectors into the (E, C, D) buffer with one `.at[].add`, so
+peak memory is O(E*C*D + T*D), which is what makes 1M-token batches
+feasible (DESIGN.md section 7).
+
+Parallelism: expert weights carry ("expert", "embed", "mlp") logical axes —
+"mlp" is tensor-parallel inside each expert (works for any expert count);
+when n_experts divides the 'model' axis the rules can map "expert" to it for
+classic expert parallelism instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sharding import shard_activation
+
+Array = jax.Array
+
+
+def moe_spec(cfg, dtype):
+    e, d, f = cfg.moe_n_experts, cfg.d_model, cfg.moe_d_ff
+    spec = {
+        "router": nn.dense_spec(d, e, "embed", None, dtype=jnp.float32),
+        "w_gate": nn.ParamSpec((e, d, f), ("expert", "embed", "mlp"),
+                               init="fanin", dtype=dtype),
+        "w_up": nn.ParamSpec((e, d, f), ("expert", "embed", "mlp"),
+                             init="fanin", dtype=dtype),
+        "w_down": nn.ParamSpec((e, f, d), ("expert", "mlp", "embed"),
+                               init="fanin", dtype=dtype,
+                               scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.moe_n_shared > 0:
+        from repro.models import mlp
+        spec["shared"] = mlp.swiglu_spec(
+            d, cfg.moe_d_ff * cfg.moe_n_shared, cfg.n_layers, dtype)
+        spec["shared_gate"] = nn.dense_spec(d, 1, "embed", None,
+                                            dtype=jnp.float32)
+    return spec
+
+
+def _route(router_params, x2d, n_experts: int, top_k: int):
+    """Router: returns (weights (T,k) f32, expert ids (T,k) i32, aux loss)."""
+    logits = nn.dense(router_params, x2d.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], n_experts), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * (n_experts ** 2) / n_experts
+    return weights, ids, aux
+
+
+def _dispatch_indices(ids, n_experts: int, capacity: int):
+    """Slot of each (token, choice) within its expert's capacity buffer.
+
+    position = rank of this (token, choice) among all assignments to the
+    same expert, in (token, choice) order. Ranks >= capacity are dropped.
+
+    Sort-based ranking: O(T*k log) compute, O(T*k) memory. The dense
+    one-hot cumsum alternative materializes a (T*k, E) int32 tensor —
+    ~252 GB for the 1M-token x 60-expert qwen2-moe train cell — so it is
+    deliberately avoided (DESIGN.md section 7).
+    """
+    t, k = ids.shape
+    flat = ids.reshape(-1)                                 # (T*k,)
+    n = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)                 # group by expert
+    sorted_ids = flat[order]
+    counts = jnp.bincount(flat, length=n_experts)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) \
+        - offsets[sorted_ids].astype(jnp.int32)
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    keep = pos < capacity
+    return pos.reshape(t, k), keep.reshape(t, k)
+
+
+def moe_ffn(params, cfg, x: Array) -> tuple[Array, Array]:
+    """(B, S, D) -> (B, S, D); also returns the load-balance aux loss.
+
+    cfg.moe_token_chunks > 1 scans the WHOLE dispatch+FFN over sequence
+    chunks: capacity, scatter/gather buffers and their backward cotangents
+    shrink by the chunk count (grok-class models at 1M-token prefill).
+    Routing is per-token, so chunking is exact up to capacity-drop
+    boundaries (each chunk gets its own capacity budget).
+    """
+    nc = max(getattr(cfg, "moe_token_chunks", 1), 1)
+    b, s, d = x.shape
+    if nc > 1 and s % nc == 0:
+        xs = jnp.moveaxis(x.reshape(b, nc, s // nc, d), 1, 0)
+
+        def body(aux, xc):
+            yc, a = _moe_ffn_flat(params, cfg, xc)
+            return aux + a, yc
+
+        aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        return jnp.moveaxis(ys, 0, 1).reshape(b, s, d), aux / nc
+    return _moe_ffn_flat(params, cfg, x)
+
+
+def _moe_ffn_flat(params, cfg, x: Array) -> tuple[Array, Array]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_n_experts, cfg.moe_top_k
+    capacity = int(cfg.moe_capacity_factor * t * k / e) + 1
+    # explicit token-dim sharding: merging (batch, seq) through the
+    # reshape loses tuple-axis ((pod, data)) sharding in GSPMD otherwise
+    x2d = shard_activation(x.reshape(t, d), ("moe_capacity", None))
+
+    weights, ids, aux = _route(params["router"], x2d, e, k)
+    pos, keep = _dispatch_indices(ids, e, capacity)
+    weights = weights * keep.astype(weights.dtype)
+
+    # scatter tokens into (E, C, D) expert buffers
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    e_idx = ids.reshape(-1)
+    c_idx = jnp.where(keep.reshape(-1), pos.reshape(-1), capacity - 1)
+    src = jnp.where(keep.reshape(-1)[:, None], x2d[tok_idx],
+                    jnp.zeros((), x.dtype))
+    src = shard_activation(src, ("moe_capacity", None))
+    buf = buf.at[e_idx, c_idx].add(src, mode="drop")
+    buf = shard_activation(buf, ("expert", "moe_capacity", None))
+
+    # per-expert FFN ("mlp" dim tensor-parallel). When moe_scan_experts
+    # is set (grok-1: 8 experts x 32768-wide FFN), lax.scan over the
+    # expert dim bounds the FSDP weight-gather working set to ONE
+    # expert's matrices instead of all E at once.
+    if cfg.moe_scan_experts:
+        @jax.checkpoint  # recompute per-expert intermediates in backward
+        def one_expert(_, wb):
+            wg, wu, wd, be = wb
+            ge = shard_activation(be @ wg, ("moe_capacity", "mlp"))
+            ue = shard_activation(be @ wu, ("moe_capacity", "mlp"))
+            he = shard_activation(jax.nn.silu(ge) * ue,
+                                  ("moe_capacity", "mlp"))
+            return None, he @ wd
+
+        _, y_buf = jax.lax.scan(
+            one_expert, None,
+            (params["w_gate"], params["w_up"], params["w_down"], buf))
+    else:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = jax.nn.silu(g) * u
+        h = shard_activation(h, ("expert", "moe_capacity", "mlp"))
+        y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y_buf = shard_activation(y_buf, ("expert", "moe_capacity", None))
+
+    # combine: gather each (token, choice) slot back, weight, and sum over k
+    y_tk = y_buf[e_idx, c_idx]                             # (T*k, D)
+    y_tk = shard_activation(y_tk, ("moe_capacity", None))
+    y_tk = y_tk * weights.reshape(-1)[:, None].astype(y_tk.dtype)
+    y = jnp.sum(y_tk.reshape(t, k, d), axis=1)
+
+    if "shared" in params:
+        from repro.models import mlp
+        gate = jax.nn.sigmoid(
+            nn.dense(params["shared_gate"], x2d.astype(jnp.float32)))
+        y = y + (mlp.swiglu(params["shared"], x2d)
+                 * gate.astype(y.dtype))
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,162 @@
+"""Minimal module system: param specs with logical sharding axes.
+
+Design (DESIGN.md section 7): parameters are plain nested dicts of jax arrays;
+every layer declares a parallel *spec tree* of ParamSpec entries carrying the
+logical axis names of each dimension. Sharding rules (sharding/rules.py) map
+logical axes -> mesh axes, so distribution strategy is data, not code.
+
+Logical axes used across the zoo:
+  "vocab"   embedding rows / logits columns        -> tensor-parallel
+  "embed"   the d_model dimension of weight mats   -> FSDP (sharded over data)
+  "heads"   flattened n_heads*d_head projections   -> tensor-parallel
+  "kv"      flattened kv_heads*d_head projections  -> tensor-parallel
+  "mlp"     the d_ff dimension                     -> tensor-parallel
+  "expert"  MoE expert dimension                   -> expert-parallel (opt)
+  "layers"  stacked-scan layer dimension           -> never sharded
+  None      replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical axis per dim (str | None)
+    init: str = "normal"        # normal | zeros | ones | fanin | fanin_deep
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(key, spec: ParamSpec) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * 0.02) * jax.random.normal(
+            key, spec.shape, jnp.float32).astype(spec.dtype)
+    if spec.init in ("fanin", "fanin_deep"):
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else math.prod(
+            spec.shape[:-1])
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)
+                ).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key, spec_tree):
+    """Materialize a spec tree into a param tree (split key per leaf)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples mirroring the param tree."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def cast_spec_tree(spec_tree, dtype):
+    """Return a spec tree with floating dtypes replaced (bf16 dry-runs)."""
+    def _cast(s: ParamSpec):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return dataclasses.replace(s, dtype=dtype)
+        return s
+    return jax.tree.map(_cast, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Prepend a stacked 'layers' dim to every spec (for lax.scan stacks)."""
+    def _stack(s: ParamSpec):
+        return dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=("layers",) + s.axes)
+    return jax.tree.map(_stack, spec_tree, is_leaf=is_spec)
+
+
+def init_stacked(key, spec_tree, n: int):
+    """Init n layers' params stacked along axis 0 (vmap over layer keys)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_params(k, spec_tree))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Common primitives
+# ---------------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, ax_in: Optional[str],
+               ax_out: Optional[str], *, bias: bool = False,
+               dtype=jnp.float32, init: str = "fanin", scale: float = 1.0):
+    spec = {"w": ParamSpec((d_in, d_out), (ax_in, ax_out), init=init,
+                           dtype=dtype, scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (ax_out,), init="zeros", dtype=dtype)
+    return spec
+
+
+def dense(params, x: Array) -> Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(params, x: Array, *, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+            "bias": ParamSpec((d,), ("embed",), init="zeros", dtype=dtype)}
+
+
+def layernorm(params, x: Array, *, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(dt)
+
+
+def embedding_spec(vocab: int, d: int, dtype=jnp.float32):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="normal",
+                               dtype=dtype)}
+
+
+def embed(params, tokens: Array) -> Array:
+    return jnp.take(params["table"], tokens, axis=0)

@@ -1,0 +1,34 @@
+"""Rotary position embeddings (RoPE), with partial-rotary support (GLM4
+applies RoPE to half the head dim) and configurable theta."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(d_rot: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32)
+                            / d_rot))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0,
+               fraction: float = 1.0) -> Array:
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    d_head = x.shape[-1]
+    d_rot = int(d_head * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)                      # (d_rot/2,)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    xr = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr, xp], axis=-1)

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) blocks — the zamba2 hybrid backbone and the long-context
+(sub-quadratic) path of the zoo.
+
+Training/prefill uses the chunked SSD algorithm (Mamba2 paper, "minimal
+SSD"): intra-chunk quadratic term (MXU matmuls over chunk length) + an
+inter-chunk state recurrence (lax.scan over chunks). O(S * L) compute and
+O(1) state, which is what makes the long_500k shape feasible where softmax
+attention is not (DESIGN.md section 6).
+
+Decode keeps (conv_state, ssm_state) per layer and advances one token in
+O(d_inner * d_state).
+
+Simplifications vs the reference CUDA implementation (documented per the
+hardware-adaptation rule): n_groups = 1 (B, C shared across heads), no
+norm-before-gate variant, sequence length must divide the chunk size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sharding import shard_activation
+
+Array = jax.Array
+
+
+def mamba2_spec(cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n
+    return {
+        "in_proj": nn.dense_spec(d, 2 * d_inner + 2 * n + nh, "embed",
+                                 "mlp", dtype=dtype),
+        "conv_w": nn.ParamSpec((cfg.ssm_conv, conv_dim), (None, "mlp"),
+                               init="fanin", dtype=dtype),
+        "conv_b": nn.ParamSpec((conv_dim,), ("mlp",), init="zeros",
+                               dtype=dtype),
+        "a_log": nn.ParamSpec((nh,), (None,), init="zeros",
+                              dtype=jnp.float32),
+        "d_skip": nn.ParamSpec((nh,), (None,), init="ones",
+                               dtype=jnp.float32),
+        "dt_bias": nn.ParamSpec((nh,), (None,), init="zeros",
+                                dtype=jnp.float32),
+        "norm": nn.rmsnorm_spec(d_inner, dtype=dtype),
+        "out_proj": nn.dense_spec(d_inner, d, "mlp", "embed", dtype=dtype,
+                                  init="fanin_deep",
+                                  scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt  # dt: (..., nh)
+
+
+def _segsum(a):
+    """(..., l) log-decays -> (..., l, l) lower-tri cumulative sums."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, conv_state=None):
+    """Depthwise causal conv, width K. xbc: (B, S, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def ssd_chunked(x, log_a, b_mat, c_mat, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:      (B, S, H, P)  dt-scaled inputs
+    log_a:  (B, S, H)     per-step log decay (<= 0)
+    b_mat:  (B, S, N)     input->state projection (shared across heads)
+    c_mat:  (B, S, N)     state->output projection
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    while s % chunk != 0:   # largest divisor of s not exceeding the request
+        chunk -= 1
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = log_a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,L)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                                # (B,H,C,L)
+    l_mat = jnp.exp(_segsum(ac))                                   # (B,H,C,L,L)
+
+    # 1. intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bczn,bcln->bczl", cc, bc)
+    y_diag = jnp.einsum("bczl,bhczl,bclhp->bczhp", scores, l_mat, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                # (B,H,C,L)
+    states = jnp.einsum("bhcl,bcln,bclhp->bchpn", decay_states, bc, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                          # (B,H,C)
+    if initial_state is None:
+        s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def body(carry, inp):
+        st, dec = inp                                              # (B,H,P,N),(B,H)
+        prev = carry
+        new = dec[..., None, None] * prev + st.astype(jnp.float32)
+        return new, prev
+
+    st_seq = jnp.moveaxis(states, 1, 0)                            # (C,B,H,P,N)
+    dec_seq = jnp.moveaxis(chunk_decay, 2, 0)                      # (C,B,H)
+    final, prevs = jax.lax.scan(body, s0, (st_seq, dec_seq))
+    prev_states = jnp.moveaxis(prevs, 0, 1)                        # (B,C,H,P,N)
+
+    # 4. inter-chunk contribution
+    decay_out = jnp.exp(a_cum)                                     # (B,H,C,L)
+    y_off = jnp.einsum("bczn,bchpn,bhcz->bczhp", cc,
+                       prev_states.astype(x.dtype), decay_out.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def mamba2_forward(params, cfg, x, *, chunk: int = 128, state=None):
+    """Full-sequence Mamba2 mixer. Returns (y, (conv_state, ssm_state))."""
+    bsz, s, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+
+    zxbcdt = nn.dense(params["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state=conv_state)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])                      # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                  # (H,) < 0
+    log_a = dt * a                                                 # (B,S,H)
+
+    xh = xs.reshape(bsz, s, nh, cfg.ssm_headdim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    ssm_state = None if state is None else state["ssm"]
+    y, final = ssd_chunked(xdt, log_a, b_mat, c_mat, chunk=min(chunk, s),
+                           initial_state=ssm_state)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, s, d_inner)
+    y = nn.rmsnorm(params["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    y = shard_activation(y, ("batch", None, "mlp"))
+    return nn.dense(params["out_proj"], y), {"conv": new_conv, "ssm": final}
+
+
+def mamba2_decode(params, cfg, x, state):
+    """One-token step. x: (B, 1, D); state: {'conv': (B,K-1,C), 'ssm':
+    (B,H,P,N)}. O(1) in sequence length — this is what makes long_500k
+    decode run where attention cannot."""
+    bsz, _, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+
+    zxbcdt = nn.dense(params["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state=state["conv"])
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)[:, 0]                                  # (B,H)
+
+    xh = xs.reshape(bsz, nh, cfg.ssm_headdim)
+    xdt = xh * dt[:, 0, :, None].astype(xh.dtype)
+    outer = jnp.einsum("bhp,bn->bhpn", xdt, b_mat[:, 0])
+    new_ssm = decay[..., None, None].astype(xh.dtype) * state["ssm"] + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c_mat[:, 0])
+    y = y + xh * params["d_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, 1, d_inner)
+    y = nn.rmsnorm(params["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    return (nn.dense(params["out_proj"], y),
+            {"conv": new_conv, "ssm": new_ssm})
+
+
+def mamba2_state_spec(cfg, batch: int, dtype=jnp.float32):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim),
+                                     dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, nh, cfg.ssm_headdim, cfg.ssm_state), dtype),
+    }

@@ -1,0 +1,325 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent).
+
+mLSTM training/prefill uses the stabilized PARALLEL form (attention-like
+O(S^2) with gate-derived decay matrix) — quadratic in the chunk but MXU
+friendly; decode uses the recurrent form with (C, n, m) state, O(1) per
+token, which is why xlstm-350m runs the long_500k shape.
+
+sLSTM has no parallel form (true recurrence with exponential gating); it is
+a lax.scan over time. The assigned xlstm-350m interleaves one sLSTM block
+per `slstm_every` mLSTM blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sharding import shard_activation
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.xlstm_pf * d                 # projection factor 2
+    h = cfg.n_heads
+    dh = d_inner // h
+    return {
+        "up": nn.dense_spec(d, 2 * d_inner, "embed", "mlp", dtype=dtype),
+        "conv_w": nn.ParamSpec((cfg.xlstm_conv, d_inner), (None, "mlp"),
+                               init="fanin", dtype=dtype),
+        "conv_b": nn.ParamSpec((d_inner,), ("mlp",), init="zeros",
+                               dtype=dtype),
+        # row-parallel: input dim carries the model shard ("mlp"); mapping
+        # the output to "heads" too would double-assign the mesh axis
+        "wq": nn.dense_spec(d_inner, d_inner, "mlp", None, dtype=dtype),
+        "wk": nn.dense_spec(d_inner, d_inner, "mlp", None, dtype=dtype),
+        "wv": nn.dense_spec(d_inner, d_inner, "mlp", None, dtype=dtype),
+        "w_i": nn.dense_spec(d_inner, h, "mlp", None, dtype=jnp.float32),
+        "w_f": nn.dense_spec(d_inner, h, "mlp", None, dtype=jnp.float32),
+        "norm": nn.rmsnorm_spec(d_inner, dtype=dtype),
+        "down": nn.dense_spec(d_inner, d, "mlp", "embed", dtype=dtype,
+                              init="fanin_deep",
+                              scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk: int = 256, state=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    Same recurrence structure as SSD: intra-chunk parallel (decay matrix D
+    from cumulative log-f + input gates, running-max stabilized) plus an
+    inter-chunk (C, n, m) state carried by lax.scan. O(S * chunk) memory —
+    the full O(S^2) parallel form is infeasible at the 4k/32k shapes.
+
+    q,k,v: (B,S,H,Dh); i_gate,f_gate: (B,S,H) raw pre-activations.
+    Returns (out (B,S,H,Dh), final_state {c,n,m}).
+    """
+    b, s, h, dh = q.shape
+    chunk = min(chunk, s)
+    while s % chunk != 0:   # largest divisor of s not exceeding the request
+        chunk -= 1
+    nc = s // chunk
+    k = k * (dh ** -0.5)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        c0, n0, m0 = (state["c"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    def chunkify(x_):
+        return jnp.moveaxis(x_.reshape(b, nc, chunk, *x_.shape[2:]), 1, 0)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        c, n, m = carry
+        qc, kc, vc, ic, fc = inp                          # (B,L,H,*) / (B,L,H)
+        log_f = jax.nn.log_sigmoid(fc.astype(jnp.float32))
+        cum_f = jnp.cumsum(log_f, axis=1)                 # (B,L,H) inclusive
+        # intra-chunk decay D[t,s'] = F_t - F_s' + i_s'  (s' <= t)
+        dmat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+                + ic.astype(jnp.float32)[:, None, :, :])  # (B,T,S,H)
+        dmat = jnp.where(tri[None, :, :, None], dmat, NEG_INF)
+        m_intra = jnp.max(dmat, axis=2)                   # (B,T,H)
+        m_inter = cum_f + m[:, None, :]                   # (B,T,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc).astype(jnp.float32)
+        scores = scores * dexp
+        inter_scale = jnp.exp(m_inter - m_t)              # (B,T,H)
+        out_intra = jnp.einsum("btsh,bshd->bthd",
+                               scores.astype(vc.dtype), vc)
+        # c layout is (B, H, d_v, e_k): contract q with the K dim (e)
+        out_inter = jnp.einsum("bthe,bhde->bthd", qc.astype(jnp.float32), c)
+        num = (out_intra.astype(jnp.float32)
+               + inter_scale[..., None] * out_inter)
+        den_intra = jnp.sum(scores, axis=2)               # (B,T,H)
+        den_inter = jnp.einsum("bthe,bhe->bth",
+                               qc.astype(jnp.float32), n)
+        den = jnp.abs(den_intra + inter_scale * den_inter)
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        out = num / jnp.maximum(den[..., None], 1e-6)
+
+        # chunk-end state update
+        f_last = cum_f[:, -1, :]                          # (B,H)
+        decay_s = f_last[:, None, :] - cum_f \
+            + ic.astype(jnp.float32)                      # (B,L,H)
+        m_new = jnp.maximum(f_last + m, jnp.max(decay_s, axis=1))
+        w_s = jnp.exp(decay_s - m_new[:, None, :])        # (B,L,H)
+        carry_scale = jnp.exp(f_last + m - m_new)         # (B,H)
+        c_new = (carry_scale[..., None, None] * c
+                 + jnp.einsum("blh,blhd,blhe->bhde",
+                              w_s, vc.astype(jnp.float32),
+                              kc.astype(jnp.float32)))
+        n_new = (carry_scale[..., None] * n
+                 + jnp.einsum("blh,blhd->bhd", w_s,
+                              kc.astype(jnp.float32)))
+        return (c_new, n_new, m_new), out
+
+    inputs = (chunkify(q), chunkify(k), chunkify(v),
+              chunkify(i_gate), chunkify(f_gate))
+    (c_f, n_f, m_f), outs = jax.lax.scan(body, (c0, n0, m0), inputs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+    return out.astype(v.dtype), {"c": c_f, "n": n_f, "m": m_f}
+
+
+def mlstm_forward(params, cfg, x, *, chunk: int = 256, state=None,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    d_inner = cfg.xlstm_pf * d
+    h = cfg.n_heads
+    dh = d_inner // h
+    xz = nn.dense(params["up"], x)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    kw = params["conv_w"].shape[0]
+    if conv_state is not None:
+        xp = jnp.concatenate([conv_state, xi_raw], axis=1)
+        xc = sum(xp[:, i:i + s, :] * params["conv_w"][i] for i in range(kw))
+        xi = jax.nn.silu(xc + params["conv_b"])
+    else:
+        xi = _causal_conv1d(xi_raw, params["conv_w"], params["conv_b"])
+    q = nn.dense(params["wq"], xi).reshape(b, s, h, dh)
+    k = nn.dense(params["wk"], xi).reshape(b, s, h, dh)
+    v = nn.dense(params["wv"], xi).reshape(b, s, h, dh)
+    i_gate = nn.dense(params["w_i"], xi.astype(jnp.float32))
+    f_gate = nn.dense(params["w_f"], xi.astype(jnp.float32))
+    mstate = None if state is None else {k_: state[k_]
+                                         for k_ in ("c", "n", "m")}
+    o, new_state = mlstm_chunked(q, k, v, i_gate, f_gate, chunk=chunk,
+                                 state=mstate)
+    o = o.reshape(b, s, d_inner)
+    o = nn.rmsnorm(params["norm"], o, eps=cfg.norm_eps)
+    o = o * jax.nn.silu(z)
+    o = shard_activation(o, ("batch", None, "mlp"))
+    y = nn.dense(params["down"], o)
+    if return_state:
+        if conv_state is None:
+            pad = jnp.zeros((b, kw - 1, d_inner), xi_raw.dtype)
+            xp_full = jnp.concatenate([pad, xi_raw], axis=1)
+        else:
+            xp_full = jnp.concatenate([conv_state, xi_raw], axis=1)
+        new_state = dict(new_state)
+        new_state["conv"] = xp_full[:, -(kw - 1):, :]
+        return y, new_state
+    return y
+
+
+def mlstm_state_spec(cfg, batch: int, dtype=jnp.float32):
+    d_inner = cfg.xlstm_pf * cfg.d_model
+    h = cfg.n_heads
+    dh = d_inner // h
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, dh, dh), dtype),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), dtype),
+        "m": jax.ShapeDtypeStruct((batch, h), dtype),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.xlstm_conv - 1, d_inner), dtype),
+    }
+
+
+def mlstm_decode(params, cfg, x, state):
+    """Recurrent mLSTM step. x: (B,1,D). State: c (B,H,Dh,Dh), n, m, conv."""
+    b, _, d = x.shape
+    d_inner = cfg.xlstm_pf * d
+    h = cfg.n_heads
+    dh = d_inner // h
+    xz = nn.dense(params["up"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    k_w = params["conv_w"].shape[0]
+    xp = jnp.concatenate([state["conv"], xi], axis=1)
+    xc = sum(xp[:, i:i + 1, :] * params["conv_w"][i] for i in range(k_w))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    new_conv = xp[:, -(k_w - 1):, :]
+
+    q = nn.dense(params["wq"], xc).reshape(b, h, dh)
+    k = nn.dense(params["wk"], xc).reshape(b, h, dh) * (dh ** -0.5)
+    v = nn.dense(params["wv"], xc).reshape(b, h, dh)
+    i_raw = nn.dense(params["w_i"], xc.astype(jnp.float32))[:, 0]   # (B,H)
+    f_raw = nn.dense(params["w_f"], xc.astype(jnp.float32))[:, 0]
+
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+
+    c_new = (f_s[..., None, None] * state["c"]
+             + i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k))
+    n_new = f_s[..., None] * state["n"] + i_s[..., None] * k
+    hnum = jnp.einsum("bhde,bhe->bhd", c_new, q)
+    hden = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n_new, q)),
+                       jnp.exp(-m_new))
+    o = (hnum / hden[..., None]).reshape(b, 1, d_inner).astype(x.dtype)
+    o = nn.rmsnorm(params["norm"], o, eps=cfg.norm_eps) * jax.nn.silu(z)
+    y = nn.dense(params["down"], o)
+    return y, {"c": c_new, "n": n_new, "m": m_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = nn.dense_spec(d, d, "embed", "heads", dtype=dtype)
+        gates[f"r_{g}"] = nn.ParamSpec((h, dh, dh), (None, "heads", None),
+                                       init="fanin", dtype=dtype)
+        gates[f"b_{g}"] = nn.ParamSpec((d,), ("heads",), init="zeros",
+                                       dtype=jnp.float32)
+    ff = max(1, int(cfg.d_model * 4 // 3))
+    gates["norm"] = nn.rmsnorm_spec(d, dtype=dtype)
+    gates["ff_up"] = nn.dense_spec(d, 2 * ff, "embed", "mlp", dtype=dtype)
+    gates["ff_down"] = nn.dense_spec(ff, d, "mlp", "embed", dtype=dtype,
+                                     init="fanin_deep",
+                                     scale=1.0 / max(cfg.n_layers, 1) ** 0.5)
+    return gates
+
+
+def slstm_state_spec(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "c": jax.ShapeDtypeStruct((batch, d), dtype),
+        "n": jax.ShapeDtypeStruct((batch, d), dtype),
+        "h": jax.ShapeDtypeStruct((batch, d), dtype),
+        "m": jax.ShapeDtypeStruct((batch, d), dtype),
+    }
+
+
+def _slstm_cell(params, cfg, x_t, state):
+    """One sLSTM step. x_t: (B, D)."""
+    b, d = x_t.shape
+    h = cfg.n_heads
+    dh = d // h
+    h_prev = state["h"].reshape(b, h, dh)
+
+    def gate(name):
+        wx = nn.dense(params[f"w_{name}"], x_t).reshape(b, h, dh)
+        rh = jnp.einsum("bhd,hde->bhe", h_prev,
+                        params[f"r_{name}"].astype(h_prev.dtype))
+        return (wx + rh).reshape(b, d).astype(jnp.float32) \
+            + params[f"b_{name}"]
+
+    i_raw, f_raw, z_raw, o_raw = gate("i"), gate("f"), gate("z"), gate("o")
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_s * state["c"] + i_s * jnp.tanh(z_raw)
+    n_new = f_s * state["n"] + i_s
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(params, cfg, x, *, state=None):
+    """Recurrent scan over time. x: (B,S,D). Returns (y, final_state)."""
+    b, s, d = x.shape
+    if state is None:
+        state = {k: jnp.zeros((b, d), jnp.float32)
+                 for k in ("c", "n", "h", "m")}
+
+    def body(st, x_t):
+        new = _slstm_cell(params, cfg, x_t, st)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(body, state, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = nn.rmsnorm(params["norm"], y, eps=cfg.norm_eps)
+    up = nn.dense(params["ff_up"], y)
+    a, g = jnp.split(up, 2, axis=-1)
+    y = nn.dense(params["ff_down"], jax.nn.gelu(a) * g)
+    return y, final
+
+
+def slstm_decode(params, cfg, x, state):
+    new = _slstm_cell(params, cfg, x[:, 0, :], state)
+    y = new["h"][:, None, :].astype(x.dtype)
+    y = nn.rmsnorm(params["norm"], y, eps=cfg.norm_eps)
+    up = nn.dense(params["ff_up"], y)
+    a, g = jnp.split(up, 2, axis=-1)
+    return nn.dense(params["ff_down"], jax.nn.gelu(a) * g), new

@@ -1,0 +1,85 @@
+"""Gradient compression for cross-pod (DCN) data parallelism.
+
+int8 quantization with per-tensor scale and error-feedback residual
+(Seide et al. / EF-SGD): the quantization error is fed back into the next
+step's gradient, preserving convergence. Intended for the pod axis, where
+link bandwidth is ~10x lower than intra-pod ICI: an all-reduce of int8
+gradients moves 4x fewer bytes than fp32 (2x vs bf16).
+
+In the pjit/GSPMD path collectives are implicit, so this module exposes the
+shard_map-level primitive used by runtime/elastic training drivers, plus
+pure compress/decompress helpers (tested against exactness bounds).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: dict    # pytree of fp32 residuals, like grads
+
+
+def compress_int8(x: jax.Array):
+    """(int8 values, fp32 scale). Symmetric per-tensor quantization."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def error_feedback_compress(grads, state: ErrorFeedbackState):
+    """Returns (quantized tree of (q, scale), new_state).
+
+    decompress(quantized) + next-step residual == grads exactly in the
+    infinite-step limit; per step the residual carries the rounding error.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = compress_int8(corrected)
+        back = decompress_int8(q, scale)
+        return (q, scale), corrected - back
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(state.residual)
+    results = [one(g, r) for g, r in zip(g_leaves, r_leaves)]
+    quantized = jax.tree.unflatten(treedef, [r[0] for r in results])
+    residual = jax.tree.unflatten(treedef, [r[1] for r in results])
+    return quantized, ErrorFeedbackState(residual=residual)
+
+
+def allreduce_compressed(grads, state: ErrorFeedbackState, axis_name: str):
+    """shard_map-level compressed all-reduce over `axis_name` (pod axis).
+
+    Quantize -> psum int32 (exact) -> dequantize with the mean scale.
+    Scales are psum-averaged; using per-shard scales with int accumulation
+    keeps the sum exact in integer space.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = compress_int8(corrected)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale_sum = jax.lax.psum(scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        mean = total.astype(jnp.float32) * (scale_sum / n) / n
+        back = decompress_int8(q, scale)
+        return mean, corrected - back
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(state.residual)
+    results = [one(g, r) for g, r in zip(g_leaves, r_leaves)]
+    reduced = jax.tree.unflatten(treedef, [r[0] for r in results])
+    residual = jax.tree.unflatten(treedef, [r[1] for r in results])
+    return reduced, ErrorFeedbackState(residual=residual)

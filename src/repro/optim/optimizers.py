@@ -1,0 +1,156 @@
+"""Optimizers as (init, update) pairs over param pytrees.
+
+AdamW for small/medium archs; Adafactor (factored second moment, optional
+momentum off) for the 100B+ archs where full Adam state triples HBM
+(DESIGN.md: grok-1/qwen110b/internvl76b dry-runs must fit 16 GB/chip).
+Optimizer state inherits the param's sharding (same tree structure), so FSDP
+sharding of params automatically ZeRO-shards the states.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> opt_state
+    update: Callable          # (grads, opt_state, params, lr) -> (updates, opt_state)
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw(*, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mu_hat = mu / (1 - b1 ** c)
+            nu_hat = nu / (1 - b2 ** c)
+            step = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def adafactor(*, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              momentum: Optional[float] = None) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified).
+
+    2D+ params keep row/col second-moment vectors (O(n+m) state instead of
+    O(n*m)); 1D params keep a full vector. Optional bf16 first moment.
+    """
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                st = {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                      "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                      jnp.float32)}
+            else:
+                st = {"v": jnp.zeros(p.shape, jnp.float32)}
+            if momentum is not None:
+                st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+            return st
+
+        return {"f": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta2 = 1.0 - c ** (-decay)
+
+        def one(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(r * vc[..., None, :],
+                                                    eps))
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if momentum is not None:
+                m = (momentum * st["m"].astype(jnp.float32)
+                     + (1 - momentum) * u)
+                new["m"] = m.astype(jnp.bfloat16)
+                u = m
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), new
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        s_leaves = treedef.flatten_up_to(state["f"])
+        p_leaves = treedef.flatten_up_to(params)
+        results = [one(g, s, p)
+                   for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        updates = jax.tree.unflatten(treedef, [r[0] for r in results])
+        new_f = jax.tree.unflatten(treedef, [r[1] for r in results])
+        return updates, {"f": new_f, "count": count}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def sgdm(*, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        def one(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr * m).astype(p.dtype), m
+
+        flat = jax.tree.map(one, grads, state["m"], params)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m}
+
+    return Optimizer(init=init, update=update, name="sgdm")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

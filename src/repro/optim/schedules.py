@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(*, peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5
+                      * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant(value: float):
+    def schedule(step):
+        return jnp.asarray(value, jnp.float32)
+    return schedule

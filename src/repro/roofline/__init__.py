@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineTerms,
+    analyze_compiled,
+    parse_collective_bytes,
+    model_flops,
+)

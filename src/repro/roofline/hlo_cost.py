@@ -1,0 +1,346 @@
+"""Loop-aware cost accounting over optimized HLO text.
+
+XLA's built-in `compiled.cost_analysis()` counts each while-loop BODY ONCE
+(verified: a scan of 10 matmuls reports the flops of 1). Every layer stack,
+microbatch accumulation, attention chunk and CE chunk in this framework is a
+lax.scan, so the built-in numbers undercount by 1-3 orders of magnitude.
+
+This analyzer re-derives flops / HBM bytes / collective bytes from
+`compiled.as_text()` with loop multipliers taken from the
+`backend_config={"known_trip_count":{"n":...}}` annotation XLA attaches to
+`while` instructions. Accounting model (mirrors HLO cost analysis):
+
+  dot         flops = 2 * prod(result_dims) * prod(contracting_dims)
+  elementwise flops = result elements (fusions: sum over fused body)
+  bytes       operands + results of top-level instructions (fusion
+              internals are register-resident); dynamic-(update-)slice
+              counts the slice, not the full operand
+  collectives operand bytes of all-gather / all-reduce / reduce-scatter /
+              all-to-all / collective-permute (x enclosing trip counts)
+  while       body cost x known_trip_count
+  call/cond   recurse (conditional: max across branches)
+
+Shapes in the per-device SPMD module are already sharded, so totals are
+per-chip — exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0, "opaque": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "add-dependency", "partition-id",
+             "replica-id", "iota", "rng-get-and-update-state", "domain",
+             "opt-barrier"}
+
+
+def _shape_info(type_str: str):
+    """(total_bytes, list of per-shape dims). Handles tuples."""
+    total = 0
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        shapes.append(ds)
+    return total, shapes
+
+
+def _elems(type_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += mult * v
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._shape_of: dict[str, str] = {}   # instr name -> result type str
+        self._cost_cache: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                if line.strip():
+                    self.computations[cur].append(line)
+
+    # ------------------------------------------------------------------
+    def _instr_cost(self, comp: str, line: str) -> Cost:
+        c = Cost()
+        m = _INSTR_RE.match(line)
+        if not m:
+            return c
+        name, result_type, op, rest = m.groups()
+        self._shape_of[name] = result_type
+        res_bytes, res_shapes = _shape_info(result_type)
+
+        if op in _FREE_OPS:
+            return c
+
+        # operand names (top-level %refs inside the first paren group)
+        operand_names = re.findall(r"%([\w\.\-]+)", rest.split("), ")[0])
+
+        def operand_bytes():
+            tot = 0
+            for on in operand_names:
+                t = self._shape_of.get(on)
+                if t:
+                    tot += _shape_info(t)[0]
+            return tot
+
+        if op == "while":
+            body = _BODY_RE.search(rest)
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            if body:
+                c.add(self.computation_cost(body.group(1)), mult=trip)
+            return c
+
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(rest)
+            if bm:
+                best = Cost()
+                for b in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                    bc = self.computation_cost(b)
+                    if bc.flops + bc.bytes > best.flops + best.bytes:
+                        best = bc
+                c.add(best)
+            return c
+
+        if op == "call":
+            cm = _CALLS_RE.search(rest)
+            if cm:
+                c.add(self.computation_cost(cm.group(1)))
+            return c
+
+        if op == "fusion":
+            cm = _CALLS_RE.search(rest)
+            inner_name = cm.group(1) if cm else None
+            if inner_name:
+                inner = self.computation_cost(inner_name)
+                c.flops += inner.flops          # fused flops count
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll_by_kind.items():
+                    c.coll_by_kind[k] += v
+                # Look through fused dynamic-slice: an operand whose fused
+                # parameter is consumed only via dynamic-slice contributes
+                # the SLICE bytes, not the whole array (scan-over-layers
+                # passes full stacked params/residuals into fusions).
+                sliced = self._fused_param_slice_bytes(inner_name)
+                ob = 0
+                for pos, on in enumerate(operand_names):
+                    t = self._shape_of.get(on)
+                    if not t:
+                        continue
+                    full = _shape_info(t)[0]
+                    ob += min(sliced.get(pos, full), full)
+                c.bytes += ob
+                # in-place root dynamic-update-slice: count the update,
+                # not the whole aliased buffer
+                dus = self._fused_root_dus_bytes(inner_name)
+                c.bytes += dus if dus is not None else res_bytes
+            else:
+                c.bytes += operand_bytes() + res_bytes
+            return c
+
+        if op == "dot":
+            lhs_t = self._shape_of.get(operand_names[0]) if operand_names \
+                else None
+            contract = 1
+            cm = _CONTRACT_RE.search(rest)
+            if cm and lhs_t:
+                _, lhs_shapes = _shape_info(lhs_t)
+                if lhs_shapes:
+                    dims = lhs_shapes[0]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+            res_elems = _elems(result_type)
+            c.flops += 2.0 * res_elems * contract
+            c.bytes += operand_bytes() + res_bytes
+            return c
+
+        for coll in COLLECTIVES:
+            if op == coll or op == coll + "-start":
+                ob = operand_bytes()
+                c.coll_bytes += ob
+                c.coll_by_kind[coll] += ob
+                c.bytes += ob + res_bytes
+                return c
+        if op.endswith("-done"):
+            return c
+
+        if op in ("dynamic-slice",):
+            c.bytes += 2 * res_bytes
+            return c
+        if op in ("dynamic-update-slice",):
+            upd = 0
+            if len(operand_names) >= 2:
+                t = self._shape_of.get(operand_names[1])
+                if t:
+                    upd = _shape_info(t)[0]
+            c.bytes += 2 * upd
+            return c
+        if op == "scatter":
+            upd = 0
+            if len(operand_names) >= 3:
+                t = self._shape_of.get(operand_names[2])
+                if t:
+                    upd = _shape_info(t)[0]
+            c.bytes += 2 * upd + res_bytes
+            c.flops += _elems(result_type)
+            return c
+        if op == "gather":
+            c.bytes += 2 * res_bytes
+            return c
+        if op == "copy":
+            c.bytes += 2 * res_bytes
+            return c
+        if op in ("convolution",):
+            # rare here; approximate as elementwise on the result
+            c.flops += 2 * _elems(result_type)
+            c.bytes += operand_bytes() + res_bytes
+            return c
+
+        # default: elementwise-ish (add, multiply, reduce, select, ...)
+        c.flops += _elems(result_type)
+        c.bytes += operand_bytes() + res_bytes
+        return c
+
+    def _fused_param_slice_bytes(self, comp: str) -> dict:
+        """param position -> bytes, for fused params consumed ONLY by
+        dynamic-slice / gather (count the slice, not the array)."""
+        if not hasattr(self, "_slice_cache"):
+            self._slice_cache = {}
+        if comp in self._slice_cache:
+            return self._slice_cache[comp]
+        lines = self.computations.get(comp, [])
+        param_pos: dict[str, int] = {}
+        uses: dict[str, list] = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, rtype, op, rest = m.groups()
+            if op == "parameter":
+                pm = re.match(r"(\d+)\)", rest)
+                if pm:
+                    param_pos[name] = int(pm.group(1))
+                continue
+            for on in re.findall(r"%([\w\.\-]+)", rest.split("), ")[0]):
+                if on in param_pos:
+                    uses.setdefault(on, []).append((op, rtype))
+        out = {}
+        for pname, ulist in uses.items():
+            if ulist and all(u[0] in ("dynamic-slice", "gather")
+                             for u in ulist):
+                out[param_pos[pname]] = sum(
+                    _shape_info(u[1])[0] for u in ulist)
+        self._slice_cache[comp] = out
+        return out
+
+    def _fused_root_dus_bytes(self, comp: str):
+        """Update bytes (x2) if the fused root is dynamic-update-slice."""
+        for line in self.computations.get(comp, []):
+            if "ROOT" not in line:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m or m.group(3) != "dynamic-update-slice":
+                return None
+            ops = re.findall(r"%([\w\.\-]+)", m.group(4).split("), ")[0])
+            if len(ops) >= 2:
+                t = self._shape_of.get(ops[1])
+                if t:
+                    return 2 * _shape_info(t)[0]
+            return None
+        return None
+
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        total = Cost()
+        # two passes: register result shapes first (operands may be
+        # referenced before textual definition in scheduled HLO? normally
+        # defs precede uses, but be safe)
+        for line in self.computations.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if m:
+                self._shape_of[m.group(1)] = m.group(2)
+        for line in self.computations.get(comp, []):
+            total.add(self._instr_cost(comp, line))
+        self._cost_cache[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def loop_aware_cost(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

@@ -1,0 +1,3 @@
+from repro.runtime.heartbeat import HeartbeatMonitor, WorkerState  # noqa: F401
+from repro.runtime.elastic import ElasticPermutationRunner  # noqa: F401
+from repro.runtime.trainer import FaultTolerantTrainer  # noqa: F401

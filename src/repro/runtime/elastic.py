@@ -1,0 +1,107 @@
+"""Elastic, fault-tolerant, straggler-mitigated permutation execution.
+
+The PERMANOVA permutation dimension is embarrassingly parallel and
+deterministic (grouping p = f(key, p) by fold_in), so the scheduling layer
+can treat the job as a bag of idempotent BLOCKS of permutation indices:
+
+  * elastic scaling   — blocks are assigned to whichever workers are alive;
+                        workers joining/leaving only changes the assignment
+                        map, never the results;
+  * fault tolerance   — a dead worker's unfinished blocks return to the
+                        queue; any worker recomputes them bit-identically;
+  * straggler
+    mitigation        — blocks running past `straggler_factor` x the median
+                        block time are speculatively re-dispatched; first
+                        completion wins (results are identical by
+                        construction, so no reconciliation is needed).
+
+This is the cross-node layer ABOVE the per-pod pjit computation: each
+"worker" here stands for one pod-level shard_map job (DESIGN.md section 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BlockResult:
+    block_id: int
+    lo: int
+    hi: int
+    values: np.ndarray
+    worker_id: int
+    elapsed: float
+    speculative: bool = False
+
+
+class ElasticPermutationRunner:
+    def __init__(self, n_perms: int, *, block_size: int = 256,
+                 straggler_factor: float = 3.0):
+        self.n_perms = n_perms
+        self.block_size = block_size
+        self.straggler_factor = straggler_factor
+        self.blocks = [(i, lo, min(lo + block_size, n_perms))
+                       for i, lo in enumerate(range(0, n_perms, block_size))]
+        self.results: dict[int, BlockResult] = {}
+        self.history: list[str] = []
+
+    def run(self, compute_block: Callable[[int, int, int], np.ndarray], *,
+            workers: list[int], fail_at: Optional[dict] = None,
+            slow_workers: Optional[dict] = None) -> np.ndarray:
+        """Execute all blocks across `workers`.
+
+        compute_block(worker_id, lo, hi) -> (hi-lo,) statistics.
+        fail_at: {worker_id: n_blocks_before_death} for failure injection.
+        slow_workers: {worker_id: slowdown_factor} for straggler injection.
+        """
+        fail_at = dict(fail_at or {})
+        slow = dict(slow_workers or {})
+        alive = list(workers)
+        queue = list(self.blocks)
+        done_count = {w: 0 for w in workers}
+        times: list[float] = []
+
+        while queue:
+            if not alive:
+                raise RuntimeError("all workers dead")
+            next_queue = []
+            for idx, (bid, lo, hi) in enumerate(queue):
+                w = alive[idx % len(alive)]
+                if w in fail_at and done_count[w] >= fail_at[w]:
+                    # worker dies mid-assignment: block returns to queue
+                    self.history.append(f"fail worker={w} block={bid}")
+                    alive.remove(w)
+                    del fail_at[w]
+                    next_queue.append((bid, lo, hi))
+                    continue
+                t0 = time.perf_counter()
+                vals = compute_block(w, lo, hi)
+                elapsed = (time.perf_counter() - t0) * slow.get(w, 1.0)
+                median = float(np.median(times)) if times else elapsed
+                speculative = bool(
+                    times and elapsed > self.straggler_factor * median)
+                if speculative:
+                    # re-dispatch to the fastest alive worker; identical
+                    # result by determinism — first completion wins
+                    w2 = min(alive, key=lambda x: slow.get(x, 1.0))
+                    vals2 = compute_block(w2, lo, hi)
+                    assert np.allclose(vals, vals2), \
+                        "idempotence violated"
+                    self.history.append(
+                        f"straggler block={bid} worker={w} -> {w2}")
+                    vals = vals2
+                times.append(elapsed)
+                done_count[w] = done_count.get(w, 0) + 1
+                self.results[bid] = BlockResult(bid, lo, hi, vals, w,
+                                                elapsed, speculative)
+            queue = next_queue
+
+        out = np.empty((self.n_perms,), dtype=np.float64)
+        for r in self.results.values():
+            out[r.lo:r.hi] = r.values
+        return out

@@ -1,0 +1,64 @@
+"""Heartbeat-based failure detection.
+
+Each worker (host/pod) reports liveness; the monitor declares a worker dead
+after `timeout` without a beat and invokes the registered callbacks (elastic
+re-mesh, work re-dispatch). On a real cluster the transport is the cluster
+coordinator / etcd; here it is an in-process clock so the *policy* layer
+(what to do on failure) is exercised end-to-end by tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class WorkerState:
+    worker_id: int
+    last_beat: float
+    alive: bool = True
+    incarnation: int = 0
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_workers: int, *, timeout: float = 5.0,
+                 clock: Optional[Callable[[], float]] = None):
+        self.timeout = timeout
+        self.clock = clock or time.monotonic
+        now = self.clock()
+        self.workers = {i: WorkerState(i, now) for i in range(n_workers)}
+        self.on_failure: list[Callable[[int], None]] = []
+        self.on_recovery: list[Callable[[int], None]] = []
+        self._lock = threading.Lock()
+
+    def beat(self, worker_id: int):
+        with self._lock:
+            w = self.workers[worker_id]
+            w.last_beat = self.clock()
+            if not w.alive:
+                w.alive = True
+                w.incarnation += 1
+                for cb in self.on_recovery:
+                    cb(worker_id)
+
+    def check(self) -> list[int]:
+        """Returns newly-dead worker ids and fires failure callbacks."""
+        now = self.clock()
+        newly_dead = []
+        with self._lock:
+            for w in self.workers.values():
+                if w.alive and now - w.last_beat > self.timeout:
+                    w.alive = False
+                    newly_dead.append(w.worker_id)
+        for wid in newly_dead:
+            for cb in self.on_failure:
+                cb(wid)
+        return newly_dead
+
+    @property
+    def alive_workers(self) -> list[int]:
+        with self._lock:
+            return [w.worker_id for w in self.workers.values() if w.alive]

@@ -1,0 +1,7 @@
+from repro.serve.engine import (  # noqa: F401
+    make_serve_step,
+    make_prefill,
+    ServeLoop,
+    greedy_sample,
+    temperature_sample,
+)

@@ -1,0 +1,125 @@
+"""Serving: jit'd decode/prefill steps + a host-side batched loop with
+continuous batching (finished sequences are replaced in place, keeping the
+compiled batch shape fixed — the production pattern for fixed-shape XLA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def greedy_sample(logits, key):
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(temperature: float = 0.8):
+    def sample(logits, key):
+        scaled = logits[:, -1, :] / max(temperature, 1e-4)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return sample
+
+
+def make_serve_step(model, *, sampler: Optional[Callable] = None):
+    """serve_step(params, token, caches, cache_len, key)
+    -> (next_token, logits, caches). This is the function the decode-shape
+    dry-run cells lower (one new token against a seq_len KV cache)."""
+    sampler = sampler or greedy_sample
+
+    def serve_step(params, token, caches, cache_len, key_bits):
+        key = jax.random.wrap_key_data(key_bits)
+        logits, caches = model.decode_step(params, token, caches, cache_len)
+        nxt = sampler(logits, key)
+        return nxt[:, None], logits, caches
+
+    return serve_step
+
+
+def make_prefill(model):
+    def prefill(params, batch, max_len):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Host-side continuous-batching driver over the jit'd steps.
+
+    Slots hold independent sequences; when one finishes, the next queued
+    request takes its slot (cache column reset), so the device batch shape
+    never changes and nothing recompiles.
+    """
+
+    def __init__(self, model, params, *, batch_size: int, max_len: int,
+                 sampler=None, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.step_fn = jax.jit(make_serve_step(model, sampler=sampler))
+        self.caches = model.init_caches(batch=batch_size, max_len=max_len)
+        self.slots: list[Optional[Request]] = [None] * batch_size
+        self.slot_len = np.zeros(batch_size, np.int32)
+        self.tokens = np.zeros((batch_size, 1), np.int32)
+
+    def _admit(self, queue: list[Request]):
+        for i in range(self.batch):
+            if self.slots[i] is None and queue:
+                req = queue.pop(0)
+                self.slots[i] = req
+                # feed the prompt one token at a time (simple; a production
+                # engine would run prefill into this slot instead)
+                self.slot_len[i] = 0
+                self.tokens[i, 0] = req.prompt[0]
+                req._prompt_pos = 1
+
+    def run(self, requests: list[Request], *, max_steps: int = 256,
+            key=None):
+        key = key if key is not None else jax.random.key(0)
+        queue = list(requests)
+        self._admit(queue)
+        steps = 0
+        while steps < max_steps and (queue or any(
+                s is not None for s in self.slots)):
+            key, sub = jax.random.split(key)
+            active_len = int(self.slot_len.max()) if len(
+                self.slot_len) else 0
+            nxt, logits, self.caches = self.step_fn(
+                self.params, jnp.asarray(self.tokens), self.caches,
+                jnp.asarray(active_len, jnp.int32), jax.random.key_data(sub))
+            nxt = np.asarray(nxt)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                self.slot_len[i] += 1
+                if req._prompt_pos < len(req.prompt):
+                    self.tokens[i, 0] = req.prompt[req._prompt_pos]
+                    req._prompt_pos += 1
+                else:
+                    tok = int(nxt[i, 0])
+                    req.generated.append(tok)
+                    self.tokens[i, 0] = tok
+                    if (len(req.generated) >= req.max_new_tokens
+                            or (self.eos_id is not None
+                                and tok == self.eos_id)
+                            or self.slot_len[i] >= self.max_len - 1):
+                        req.done = True
+                        self.slots[i] = None
+                        self.slot_len[i] = 0
+            self._admit(queue)
+            steps += 1
+        return requests

@@ -1,0 +1,12 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    RULES_SINGLE_POD,
+    RULES_MULTI_POD,
+    rules_for_mesh,
+    logical_to_spec,
+    param_shardings,
+    shard_activation,
+    set_active,
+    get_active,
+    no_sharding,
+)

@@ -1,0 +1,161 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Strategy (DESIGN.md section 4): FSDP + TP within a pod, pure DP across pods.
+
+  tensor-parallel axes ("vocab", "heads", "kv", "mlp") -> "model"
+  FSDP axis ("embed": the d_model dim of weight matrices) -> "data"
+  batch -> ("pod", "data")  [pod only when present in the mesh]
+  "layers" (scan dim), "expert" and small params -> replicated
+
+A logical axis is silently replicated when the assigned mesh axis size does
+not divide the dimension (e.g. kv_heads*d_head=1024 shards 16-way, but a
+G=60 expert dim does not; GSPMD handles the rest). Activation constraints go
+through shard_activation() which no-ops outside an active mesh context, so
+model code runs unchanged in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict                     # logical axis -> mesh axis | tuple | None
+
+    def mesh_axes(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+
+RULES_SINGLE_POD = ShardingRules(rules={
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "embed": "data",      # FSDP
+    "expert": None,       # expert dim replicated; TP inside the expert
+    "layers": None,
+    "batch": ("data",),
+    "moe_capacity": ("data",),  # MoE (E,C,D) buffers: shard capacity like batch
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "seq": None,
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sharded over 'model' along seq (16x smaller saved
+    # activations under remat); attention/MLP interiors re-gather.
+    "act_seq": "model",
+    # decode KV caches: shard the cache SEQUENCE over 'model' (partial
+    # attention + reduction instead of per-step cache all-gathers)
+    "kv_seq": "model",
+})
+
+RULES_MULTI_POD = ShardingRules(rules={
+    **RULES_SINGLE_POD.rules,
+    "batch": ("pod", "data"),   # DP across pods; FSDP stays intra-pod
+    "moe_capacity": ("pod", "data"),
+})
+
+
+def rules_for_mesh(mesh: Mesh) -> ShardingRules:
+    return RULES_MULTI_POD if "pod" in mesh.axis_names else RULES_SINGLE_POD
+
+
+def _dim_ways(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def logical_to_spec(axes_tuple, shape, mesh: Mesh,
+                    rules: Optional[ShardingRules] = None) -> P:
+    """PartitionSpec for one array given its logical axes + shape.
+
+    Drops any assignment whose mesh-axis product does not divide the dim.
+    """
+    rules = rules or rules_for_mesh(mesh)
+    entries = []
+    for dim, logical in zip(shape, axes_tuple):
+        ax = rules.mesh_axes(logical, mesh)
+        if ax is not None and dim % _dim_ways(mesh, ax) != 0:
+            ax = None
+        entries.append(ax)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(axes_tree, abstract_tree, mesh: Mesh,
+                    rules: Optional[ShardingRules] = None):
+    """NamedSharding tree for a param tree (axes tree mirrors it)."""
+    rules = rules or rules_for_mesh(mesh)
+
+    def one(axes, arr):
+        spec = logical_to_spec(axes, arr.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (thread-local; no-op without a mesh)
+# ---------------------------------------------------------------------------
+
+class _Active(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[ShardingRules] = None
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def set_active(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    _ACTIVE.mesh = mesh
+    _ACTIVE.rules = rules or (rules_for_mesh(mesh) if mesh else None)
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+@contextlib.contextmanager
+def no_sharding():
+    with set_active(None):
+        yield
+
+
+def get_active():
+    return _ACTIVE.mesh, _ACTIVE.rules
+
+
+def shard_activation(x, logical_axes_tuple):
+    """with_sharding_constraint via logical axes; identity with no mesh."""
+    mesh = _ACTIVE.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes_tuple, x.shape, mesh, _ACTIVE.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

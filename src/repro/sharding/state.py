@@ -1,0 +1,66 @@
+"""Sharding trees for TrainState (params + optimizer state) and caches.
+
+Optimizer-state axes derive structurally from param axes:
+  adamw:     mu/nu mirror params
+  adafactor: vr drops the last dim's axis; vc drops the second-to-last
+  sgdm:      m mirrors params
+so FSDP/TP sharding of a param automatically ZeRO-shards its state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import (ShardingRules, logical_to_spec,
+                                  rules_for_mesh)
+from repro.train.step import TrainState
+
+_IS_AXES = lambda x: isinstance(x, tuple)
+
+
+def optimizer_state_axes(opt_name: str, param_axes, params_abs):
+    if opt_name == "adamw":
+        return {"mu": param_axes, "nu": param_axes, "count": ()}
+    if opt_name == "sgdm":
+        return {"m": param_axes}
+    if opt_name == "adafactor":
+        def one(axes, p):
+            if p.ndim >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        return {"f": jax.tree.map(one, param_axes, params_abs,
+                                  is_leaf=_IS_AXES),
+                "count": ()}
+    raise ValueError(f"unknown optimizer {opt_name!r}")
+
+
+def train_state_axes(model, optimizer, state_abs: TrainState):
+    param_axes = model.param_axes()
+    opt_axes = optimizer_state_axes(optimizer.name, param_axes,
+                                    state_abs.params)
+    return TrainState(params=param_axes, opt_state=opt_axes, step=())
+
+
+def axes_to_shardings(axes_tree, abs_tree, mesh: Mesh,
+                      rules: ShardingRules | None = None):
+    rules = rules or rules_for_mesh(mesh)
+
+    def one(axes, arr):
+        spec = logical_to_spec(axes, arr.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, abs_tree, is_leaf=_IS_AXES)
+
+
+def batch_axes(batch_abs):
+    """Input-batch logical axes: leading dim is always the global batch."""
+    def one(x):
+        return ("batch",) + (None,) * (x.ndim - 1)
+    return jax.tree.map(one, batch_abs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,110 @@
+"""Training step: loss -> grad -> clip -> optimizer, with optional
+microbatch gradient accumulation (scan over microbatches; one weight update
+per global batch — the standard way to fit the assigned global_batch=256 x
+4k-seq cells in HBM).
+
+The step is pjit-compiled by launch/train.py and launch/dryrun.py with
+in/out shardings derived from param logical axes (sharding/rules.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import optimizers as _opt
+from repro.utils.tree import tree_count
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: Array
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.params, self.opt_state, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda _, c: TrainState(params=c[0], opt_state=c[1], step=c[2]),
+)
+
+
+def default_optimizer_for(cfg) -> _opt.Optimizer:
+    """AdamW below ~10B params; Adafactor above (state must fit HBM)."""
+    big = cfg.n_layers * cfg.d_model * cfg.d_model > 40e9 or \
+        (cfg.moe_n_experts > 0 and cfg.d_model >= 4096)
+    return _opt.adafactor() if big else _opt.adamw()
+
+
+def make_train_state_init(model, optimizer: _opt.Optimizer):
+    def init(key):
+        params = model.init(key)
+        return TrainState(params=params,
+                          opt_state=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+    return init
+
+
+def _split_microbatches(batch, n_micro: int):
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, optimizer: _opt.Optimizer, *,
+                    schedule: Optional[Callable] = None,
+                    grad_clip: float = 1.0,
+                    n_microbatches: int = 1,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    if schedule is None:
+        schedule = lambda step: jnp.asarray(3e-4, jnp.float32)
+
+    def loss_fn(params, micro):
+        loss, metrics = model.loss(params, micro)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if n_microbatches > 1:
+            micros = _split_microbatches(batch, n_microbatches)
+
+            def accum(carry, micro):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(state.params, micro)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micros)
+            grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+            loss = lsum / n_microbatches
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+
+        grads, gnorm = _opt.clip_by_global_norm(grads, grad_clip)
+        lr = schedule(state.step)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, lr)
+        params = _opt.apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,33 @@
+"""Wall-clock timing helpers for the benchmark harness (CPU-host numbers)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+class Timer:
+    """Context-manager timer; .elapsed in seconds."""
+
+    def __enter__(self):
+        self.start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.start
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kwargs) -> float:
+    """Median wall-time (seconds) of fn(*args), block_until_ready'd."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,75 @@
+"""Checkpointing: roundtrip, atomicity, retention, async writer."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4))
+                                    .astype(np.float32)),
+                   "b": jnp.asarray(rng.normal(size=(4,))
+                                    .astype(np.float32)).astype(
+                                        jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=7, extras={"note": "x"})
+    restored, manifest = load_pytree(_tree(seed=1), tmp_path)
+    assert manifest["step"] == 7
+    assert manifest["extras"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):
+        mgr.save(_tree(s), step=s, blocking=True)
+    assert mgr.latest_step() == 30
+    kept = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert kept == ["step_00000020", "step_00000030"]
+
+
+def test_async_save_overlaps_and_waits(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(_tree(1), step=1)      # non-blocking
+    mgr.save(_tree(2), step=2)      # waits for the first internally
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Temp dirs never count as checkpoints (atomic rename contract)."""
+    d = pathlib.Path(tmp_path)
+    (d / ".tmp_step_00000099_123").mkdir(parents=True)
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_step() is None
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_pytree({"a": jnp.zeros((2,))}, tmp_path, step=1)
+    with pytest.raises(KeyError):
+        load_pytree({"a": jnp.zeros((2,)), "c": jnp.zeros((2,))},
+                    tmp_path, step=1)
+
+
+def test_manifest_records_shapes(tmp_path):
+    save_pytree(_tree(), tmp_path, step=3)
+    manifest = json.loads(
+        (pathlib.Path(tmp_path) / "step_00000003" / "manifest.json")
+        .read_text())
+    assert manifest["leaves"]["params/w"]["shape"] == [8, 4]

@@ -1,0 +1,64 @@
+"""Data pipeline: determinism, host sharding, prefetch, resume."""
+
+import numpy as np
+
+from repro.data import (PrefetchLoader, ShardedLoader, SyntheticTokenDataset,
+                        synthetic_study)
+
+
+def test_batches_deterministic_and_seekable():
+    ds = SyntheticTokenDataset(vocab=512, seq_len=32, global_batch=8, seed=3)
+    a = ds.batch(5)
+    b = ds.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    ds = SyntheticTokenDataset(vocab=512, seq_len=32, global_batch=4)
+    b = ds.batch(0)
+    assert b["tokens"].shape == (4, 32)
+    assert b["targets"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_host_shards_partition_global_batch():
+    ds = SyntheticTokenDataset(vocab=128, seq_len=8, global_batch=8, seed=1)
+    full = ds.batch(0)
+    shards = [ds.batch(0, lo=i * 2, hi=(i + 1) * 2) for i in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([s["tokens"] for s in shards]), full["tokens"])
+
+
+def test_loader_resume_matches_uninterrupted():
+    ds = SyntheticTokenDataset(vocab=128, seq_len=8, global_batch=4)
+    ref = ShardedLoader(ds)
+    seq_ref = [next(ref)["tokens"] for _ in range(6)]
+
+    l1 = ShardedLoader(ds)
+    first = [next(l1)["tokens"] for _ in range(3)]
+    state = l1.state()
+    l2 = ShardedLoader(ds)
+    l2.restore(state)
+    rest = [next(l2)["tokens"] for _ in range(3)]
+    for a, b in zip(seq_ref, first + rest):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefetch_loader_preserves_order():
+    ds = SyntheticTokenDataset(vocab=64, seq_len=4, global_batch=2)
+    base = [ds.batch(i)["tokens"] for i in range(5)]
+    pf = PrefetchLoader(iter([ds.batch(i) for i in range(5)]), depth=2)
+    got = [b["tokens"] for b in pf]
+    assert len(got) == 5
+    for a, b in zip(base, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_synthetic_study_effect_controls_structure():
+    x0, g0 = synthetic_study(40, 30, 2, effect_size=0.0, seed=0)
+    x1, g1 = synthetic_study(40, 30, 2, effect_size=5.0, seed=0)
+    np.testing.assert_array_equal(g0, g1)
+    assert x1.sum() > x0.sum()          # planted bump adds abundance
+    assert x0.shape == (40, 30)

@@ -1,0 +1,116 @@
+"""Autoregressive consistency: a decode loop with caches must reproduce the
+teacher-forced forward logits at every position, for every family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKES
+from repro.models import attention, blocks, nn
+from repro.models.model import build_model, _positions
+
+B, T = 2, 12
+TOL = 2e-4   # fp32 accumulation-order differences
+
+
+def full_hidden(model, params, tokens):
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, _ = model._embed_input(params, {"tokens": tokens})
+        h, _, _ = model._backbone(params, h, _positions(*tokens.shape))
+        return h
+    if cfg.family == "hybrid":
+        h = nn.embed(params["embed"], tokens).astype(model.dtype)
+        return model._forward(params, h, _positions(*tokens.shape))
+    if cfg.family == "xlstm":
+        h = nn.embed(params["embed"], tokens).astype(model.dtype)
+        return model._forward(params, h)
+    raise ValueError(cfg.family)
+
+
+CASES = [
+    ("internlm2-1.8b", {}),
+    ("qwen1.5-110b", {}),
+    ("command-r-35b", {}),
+    ("glm4-9b", {}),
+    ("grok-1-314b", {"moe_capacity_factor": 8.0}),   # no-drop for parity
+    ("qwen2-moe-a2.7b", {"moe_capacity_factor": 8.0}),
+    ("zamba2-1.2b", {}),
+    ("xlstm-350m", {}),
+]
+
+
+@pytest.mark.parametrize("arch,over", CASES)
+def test_decode_matches_teacher_forced(arch, over):
+    cfg = SMOKES[arch].replace(**over) if over else SMOKES[arch]
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.key(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      size=(B, T)).astype(np.int32))
+    h = full_hidden(model, params, tokens)
+    ref = np.asarray((h @ params["unembed"]["w"]).astype(jnp.float32))
+    caches = model.init_caches(batch=B, max_len=T + 4)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        logits, caches = step(params, tokens[:, t:t + 1], caches,
+                              jnp.asarray(t, jnp.int32))
+        err = np.max(np.abs(np.asarray(logits[:, 0]) - ref[:, t]))
+        assert err < TOL, f"{arch} step {t}: err={err}"
+
+
+def test_whisper_decode_matches_teacher_forced():
+    cfg = SMOKES["whisper-base"]
+    model = build_model(cfg)
+    rng = np.random.default_rng(2)
+    params = model.init(jax.random.key(0))
+    frames = jnp.asarray(rng.normal(size=(B, 16, cfg.d_model))
+                         .astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      size=(B, T)).astype(np.int32))
+    enc_out = model.encode(params, frames)
+    h = nn.embed(params["embed"], tokens).astype(model.dtype) \
+        + params["dec_pos"][None, :T, :]
+    h, _ = blocks.encdec_stack(params["dec_layers"], cfg, h, enc_out,
+                               _positions(B, T), q_chunk=cfg.attn_q_chunk,
+                               remat=cfg.remat)
+    h = nn.layernorm(params["final_norm"], h, eps=cfg.norm_eps)
+    ref = np.asarray((h @ params["unembed"]["w"]).astype(jnp.float32))
+
+    caches = model.init_caches(batch=B, max_len=T + 4, enc_len=16)
+
+    def fill_cross(_, lp):
+        return None, attention.cross_kv(lp["cross"], cfg, enc_out)
+
+    _, ckv = jax.lax.scan(fill_cross, None, params["dec_layers"])
+    caches = {"self": caches["self"], "cross": ckv}
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        logits, caches = step(params, tokens[:, t:t + 1], caches,
+                              jnp.asarray(t, jnp.int32))
+        err = np.max(np.abs(np.asarray(logits[:, 0]) - ref[:, t]))
+        assert err < TOL, f"whisper step {t}: err={err}"
+
+
+def test_prefill_matches_decode_loop():
+    """prefill() + one decode == decode loop from scratch (dense)."""
+    cfg = SMOKES["internlm2-1.8b"]
+    model = build_model(cfg)
+    rng = np.random.default_rng(3)
+    params = model.init(jax.random.key(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      size=(B, T)).astype(np.int32))
+    logits_p, caches_p = model.prefill(params, {"tokens": tokens},
+                                       max_len=T + 4)
+    caches = model.init_caches(batch=B, max_len=T + 4)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        logits_d, caches = step(params, tokens[:, t:t + 1], caches,
+                                jnp.asarray(t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               atol=TOL)
+    for a, b in zip(jax.tree.leaves(caches_p), jax.tree.leaves(caches)):
+        np.testing.assert_allclose(
+            np.asarray(a[:, :, :T]).astype(np.float32),
+            np.asarray(b[:, :, :T]).astype(np.float32), atol=TOL)

@@ -1,0 +1,76 @@
+"""Dry-run machinery on reduced configs in a small-mesh subprocess: every
+family's cell kinds lower + compile, and roofline terms come out sane."""
+
+import json
+
+import pytest
+
+CODE = r"""
+import jax, json
+from repro.launch.cells import build_cell, input_specs
+from repro.launch.mesh import make_mesh
+from repro.sharding.rules import set_active
+from repro.roofline.analysis import analyze_compiled
+
+mesh = make_mesh((2, 2), ("data", "model"))
+results = {}
+cells = [
+    ("internlm2-1.8b", "train_4k"),      # dense train
+    ("grok-1-314b", "train_4k"),         # moe train (scan experts)
+    ("zamba2-1.2b", "decode_32k"),       # hybrid decode
+    ("xlstm-350m", "decode_32k"),        # xlstm decode
+    ("whisper-base", "prefill_32k"),     # encdec prefill
+    ("internvl2-76b", "train_4k"),       # vlm train
+    ("qwen1.5-110b", "long_500k"),       # skip rule
+]
+for arch, shape in cells:
+    cell = build_cell(arch, shape, mesh, smoke=True)
+    if cell.kind == "skip":
+        results[f"{arch}|{shape}"] = {"status": "skip"}
+        continue
+    with set_active(mesh):
+        c = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings,
+                    donate_argnums=cell.donate_argnums
+                    ).lower(*cell.args_abs).compile()
+    terms = analyze_compiled(c, chips=4)
+    assert terms.flops > 0, (arch, shape)
+    assert terms.hbm_bytes > 0, (arch, shape)
+    assert terms.dominant in ("compute", "memory", "collective")
+    results[f"{arch}|{shape}"] = {
+        "status": "ok", "dominant": terms.dominant,
+        "flops": terms.flops, "coll": terms.collective_bytes}
+print("CELLS-JSON:" + json.dumps(results))
+"""
+
+
+def test_smoke_cells_lower_compile_and_analyze():
+    from conftest import run_subprocess
+    out = run_subprocess(CODE, devices=4, timeout=900)
+    payload = [l for l in out.splitlines() if l.startswith("CELLS-JSON:")]
+    assert payload, out
+    results = json.loads(payload[0][len("CELLS-JSON:"):])
+    assert results["qwen1.5-110b|long_500k"]["status"] == "skip"
+    ok = [k for k, v in results.items() if v["status"] == "ok"]
+    assert len(ok) == 6, results
+    # sharded programs must actually communicate
+    assert any(v.get("coll", 0) > 0 for v in results.values()), results
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs.base import SHAPES, shape_applicable
+    from repro.configs.registry import ARCHS, list_archs
+    from repro.launch.cells import input_specs
+
+    n_cells = n_skip = 0
+    for arch in list_archs():
+        for shape_name, shape in SHAPES.items():
+            runs, _ = shape_applicable(ARCHS[arch], shape)
+            if not runs:
+                n_skip += 1
+                continue
+            specs = input_specs(arch, shape_name, smoke=True)
+            assert specs, (arch, shape_name)
+            n_cells += 1
+    assert n_cells + n_skip == 40
+    assert n_skip == 8   # 8 full-attention archs skip long_500k

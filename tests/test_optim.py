@@ -1,0 +1,96 @@
+"""Optimizers, schedules, clipping, and gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+def _quadratic_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    target = {"a": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss_fn(p):
+        return sum(jnp.sum((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    return params, target, loss_fn
+
+
+@pytest.mark.parametrize("make_opt,lr", [
+    (optim.adamw, 0.05),
+    (optim.adafactor, 0.5),
+    (optim.sgdm, 0.02),
+])
+def test_optimizer_descends(make_opt, lr):
+    params, target, loss_fn = _quadratic_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        grads = jax.grad(loss_fn)(params)
+        updates, state = opt.update(grads, state, params, lr)
+        params = optim.apply_updates(params, updates)
+    l1 = float(loss_fn(params))
+    assert l1 < 0.2 * l0, (opt.name, l0, l1)
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,))}
+    st = optim.adafactor().init(params)
+    assert st["f"]["w"]["vr"].shape == (16,)
+    assert st["f"]["w"]["vc"].shape == (8,)
+    assert st["f"]["b"]["v"].shape == (8,)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, gnorm = optim.clip_by_global_norm(grads, 1.0)
+    assert abs(float(gnorm) - 10.0) < 1e-5
+    total = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(clipped))
+    assert abs(float(jnp.sqrt(total)) - 1.0) < 1e-5
+
+
+def test_warmup_cosine_schedule():
+    from repro.optim import warmup_cosine
+    sch = warmup_cosine(peak=1.0, warmup_steps=10, total_steps=100)
+    assert float(sch(0)) == 0.0
+    assert abs(float(sch(10)) - 1.0) < 1e-6
+    assert float(sch(5)) == pytest.approx(0.5)
+    assert float(sch(100)) == pytest.approx(0.1, abs=1e-3)
+    assert float(sch(50)) < float(sch(20))
+
+
+def test_int8_compression_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, s = optim.compress_int8(x)
+    back = optim.decompress_int8(q, s)
+    assert q.dtype == jnp.int8
+    err = np.max(np.abs(np.asarray(back - x)))
+    assert err <= float(s) / 2 + 1e-7    # half-ulp of the quant grid
+
+
+def test_error_feedback_accumulates_residual():
+    """Sum of decompressed updates converges to the true sum (EF-SGD)."""
+    rng = np.random.default_rng(1)
+    grads_seq = [
+        {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32)
+                          * 1e-3)}
+        for _ in range(50)]
+    state = optim.init_error_feedback(grads_seq[0])
+    total_sent = np.zeros(64, np.float32)
+    total_true = np.zeros(64, np.float32)
+    for g in grads_seq:
+        quantized, state = optim.error_feedback_compress(g, state)
+        q, s = quantized["w"]
+        total_sent += np.asarray(optim.decompress_int8(q, s))
+        total_true += np.asarray(g["w"])
+    # residual bounds the gap
+    gap = np.abs(total_sent + np.asarray(state.residual["w"]) - total_true)
+    assert np.max(gap) < 1e-5

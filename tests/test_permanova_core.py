@@ -1,0 +1,124 @@
+"""Core PERMANOVA correctness: every s_W variant against the literal
+Algorithm 1 transcription, full-test statistics, p-value semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fstat, permutations, s_total, f_from_sw, \
+    p_value_from_null, permanova
+from repro.core.permanova import SW_IMPLS
+
+N_PERMS = 9
+
+
+def _perms(grouping, n):
+    return np.asarray(permutations.permutation_batch(
+        jax.random.key(3), jnp.asarray(grouping), 0, n))
+
+
+class TestSwVariants:
+    @pytest.mark.parametrize("impl", sorted(SW_IMPLS))
+    def test_matches_algorithm1(self, small_study, impl):
+        dm, grouping, inv_gs, mat2 = small_study
+        gperms = _perms(grouping, N_PERMS)
+        oracle = fstat.sw_algorithm1_numpy(dm, gperms, inv_gs)
+        got = np.asarray(SW_IMPLS[impl](
+            jnp.asarray(mat2), jnp.asarray(gperms), jnp.asarray(inv_gs)))
+        np.testing.assert_allclose(got, oracle, rtol=2e-5)
+
+    def test_full_matrix_form_equals_triangle(self, small_study):
+        dm, grouping, inv_gs, mat2 = small_study
+        gperms = _perms(grouping, 4)
+        tri = np.asarray(fstat.sw_brute(jnp.asarray(mat2),
+                                        jnp.asarray(gperms),
+                                        jnp.asarray(inv_gs)))
+        full = np.asarray(jax.vmap(
+            lambda g: fstat.sw_full_one(jnp.asarray(mat2), g,
+                                        jnp.asarray(inv_gs)))(
+            jnp.asarray(gperms)))
+        np.testing.assert_allclose(full, tri, rtol=2e-5)
+
+    def test_row_partials_sum_to_total(self, small_study):
+        dm, grouping, inv_gs, mat2 = small_study
+        gperms = _perms(grouping, 5)
+        oracle = fstat.sw_algorithm1_numpy(dm, gperms, inv_gs)
+        for fn in (fstat.sw_rows_partial, fstat.sw_matmul_rows_partial):
+            parts = [np.asarray(fn(jnp.asarray(mat2[o:o + 16]), o,
+                                   jnp.asarray(gperms),
+                                   jnp.asarray(inv_gs)))
+                     for o in (0, 16, 32)]
+            np.testing.assert_allclose(sum(parts), oracle, rtol=2e-5)
+
+
+class TestFullTest:
+    def test_identity_perm_first(self, small_study):
+        dm, grouping, _, _ = small_study
+        gperms = _perms(grouping, 3)
+        np.testing.assert_array_equal(gperms[0], grouping)
+
+    def test_partition_identity(self, small_study):
+        """s_A + s_W = s_T for every permutation."""
+        dm, grouping, inv_gs, mat2 = small_study
+        gperms = _perms(grouping, N_PERMS)
+        s_w = np.asarray(fstat.sw_brute(jnp.asarray(mat2),
+                                        jnp.asarray(gperms),
+                                        jnp.asarray(inv_gs)))
+        st = float(s_total(jnp.asarray(mat2)))
+        # s_A is defined as s_T - s_W: check s_W <= s_T (non-negativity
+        # of the between-group term) for the observed grouping
+        assert np.all(s_w <= st + 1e-4)
+
+    def test_p_value_bounds_and_f_positive(self, small_study):
+        dm, grouping, _, _ = small_study
+        res = permanova(jnp.asarray(dm), jnp.asarray(grouping),
+                        n_perms=49, sw_impl="brute")
+        assert 1.0 / 50 <= float(res.p_value) <= 1.0
+        assert float(res.f_stat) > 0
+        assert res.f_perms.shape == (50,)
+
+    def test_impls_agree_end_to_end(self, small_study):
+        dm, grouping, _, _ = small_study
+        results = {impl: permanova(jnp.asarray(dm), jnp.asarray(grouping),
+                                   n_perms=29, sw_impl=impl)
+                   for impl in sorted(SW_IMPLS)}
+        f = [float(r.f_stat) for r in results.values()]
+        p = [float(r.p_value) for r in results.values()]
+        np.testing.assert_allclose(f, f[0], rtol=1e-4)
+        np.testing.assert_allclose(p, p[0], atol=1e-6)
+
+    def test_planted_effect_gives_small_p(self):
+        from repro.core import distance
+        from repro.data.microbiome import synthetic_study
+        x, grouping = synthetic_study(60, 40, 2, effect_size=5.0, seed=1)
+        dm = distance.braycurtis(jnp.asarray(x))
+        res = permanova(dm, jnp.asarray(grouping), n_perms=99)
+        assert float(res.p_value) <= 0.05
+
+    def test_null_p_is_not_extreme(self):
+        from repro.core import distance
+        from repro.data.microbiome import synthetic_study
+        x, grouping = synthetic_study(60, 40, 2, effect_size=0.0, seed=2)
+        dm = distance.braycurtis(jnp.asarray(x))
+        res = permanova(dm, jnp.asarray(grouping), n_perms=99,
+                        key=jax.random.key(11))
+        assert float(res.p_value) > 0.05
+
+
+class TestPermutations:
+    def test_group_sizes_invariant(self, small_study):
+        _, grouping, _, _ = small_study
+        gperms = _perms(grouping, 20)
+        base = np.bincount(grouping, minlength=3)
+        for g in gperms:
+            np.testing.assert_array_equal(np.bincount(g, minlength=3), base)
+
+    def test_global_index_folding_shard_equivalence(self, small_study):
+        """Any shard holding range [lo,hi) generates the same labels."""
+        _, grouping, _, _ = small_study
+        key = jax.random.key(5)
+        g = jnp.asarray(grouping)
+        full = np.asarray(permutations.permutation_batch(key, g, 0, 16))
+        lo_hi = np.asarray(permutations.permutation_batch(key, g, 4, 12))
+        np.testing.assert_array_equal(full[4:12], lo_hi)

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the PERMANOVA engine's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fstat, permutations
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _random_instance(draw):
+    n = draw(st.integers(min_value=6, max_value=24))
+    g = draw(st.integers(min_value=2, max_value=4))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    # ensure every group non-empty
+    grouping[:g] = np.arange(g)
+    return d, grouping, g, rng
+
+
+@st.composite
+def instances(draw):
+    return _random_instance(draw)
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_variants_agree(inst):
+    d, grouping, g, rng = inst
+    inv_gs = np.asarray(permutations.inv_group_sizes(
+        jnp.asarray(grouping), g))
+    gperms = np.stack([rng.permutation(grouping) for _ in range(3)])
+    mat2 = jnp.asarray(d * d)
+    oracle = fstat.sw_algorithm1_numpy(d, gperms, inv_gs)
+    for fn, kw in ((fstat.sw_brute, {}), (fstat.sw_matmul,
+                                          {"perm_block": 2})):
+        got = np.asarray(fn(mat2, jnp.asarray(gperms),
+                            jnp.asarray(inv_gs), **kw))
+        np.testing.assert_allclose(got, oracle, rtol=5e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_distance_scaling(inst):
+    """d -> c*d scales s_W by c^2 (pure quadratic statistic)."""
+    d, grouping, g, rng = inst
+    inv_gs = jnp.asarray(np.asarray(permutations.inv_group_sizes(
+        jnp.asarray(grouping), g)))
+    gperms = jnp.asarray(grouping[None, :])
+    c = 2.5
+    s1 = np.asarray(fstat.sw_brute(jnp.asarray(d * d), gperms, inv_gs))
+    s2 = np.asarray(fstat.sw_brute(jnp.asarray((c * d) ** 2), gperms,
+                                   inv_gs))
+    np.testing.assert_allclose(s2, c * c * s1, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_label_renaming_invariance(inst):
+    """Permuting the group LABEL VALUES (not assignments) leaves s_W
+    unchanged: the statistic depends only on the partition."""
+    d, grouping, g, rng = inst
+    relabel = rng.permutation(g)
+    grouping2 = relabel[grouping].astype(np.int32)
+    mat2 = jnp.asarray(d * d)
+    for gr in (grouping, grouping2):
+        pass
+    inv1 = permutations.inv_group_sizes(jnp.asarray(grouping), g)
+    inv2 = permutations.inv_group_sizes(jnp.asarray(grouping2), g)
+    s1 = np.asarray(fstat.sw_brute(mat2, jnp.asarray(grouping[None]), inv1))
+    s2 = np.asarray(fstat.sw_brute(mat2, jnp.asarray(grouping2[None]), inv2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_sw_nonnegative_and_bounded(inst):
+    d, grouping, g, rng = inst
+    inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), g)
+    gperms = np.stack([rng.permutation(grouping) for _ in range(4)])
+    mat2 = jnp.asarray(d * d)
+    s_w = np.asarray(fstat.sw_brute(mat2, jnp.asarray(gperms), inv_gs))
+    s_t = float(jnp.sum(mat2) / 2.0 / d.shape[0])
+    assert np.all(s_w >= -1e-6)
+    assert np.all(s_w <= s_t * d.shape[0] + 1e-4)  # loose upper bound
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_permutation_batch_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    grouping = jnp.asarray(rng.integers(0, 3, size=12).astype(np.int32))
+    key = jax.random.key(seed % 1000)
+    a = np.asarray(permutations.permutation_batch(key, grouping, 0, 6))
+    b = np.asarray(permutations.permutation_batch(key, grouping, 0, 6))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,137 @@
+"""Unit parity for the recurrent mixers: chunked/parallel forms vs the
+step-by-step recurrences they must equal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKES
+from repro.models import ssm, xlstm
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 16, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32))
+    log_a = jnp.asarray(-np.abs(rng.normal(size=(b, s, h))
+                                ).astype(np.float32) * 0.1)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+
+    # naive: S_t = a_t S_{t-1} + x_t B_t^T ; y_t = S_t C_t
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = []
+    for t in range(s):
+        a = np.exp(np.asarray(log_a[:, t], np.float64))
+        outer = np.einsum("bhp,bn->bhpn", np.asarray(x[:, t], np.float64),
+                          np.asarray(bm[:, t], np.float64))
+        state = a[..., None, None] * state + outer
+        ys.append(np.einsum("bhpn,bn->bhp", state,
+                            np.asarray(cm[:, t], np.float64)))
+    want = np.stack(ys, axis=1)
+
+    for chunk in (4, 8, 16):
+        got, final = ssm.ssd_chunked(x, log_a, bm, cm, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(final), state, rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence in two with state carry == one pass."""
+    rng = np.random.default_rng(1)
+    b, s, h, p, n = 1, 12, 2, 4, 3
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32))
+    log_a = jnp.asarray(-np.abs(rng.normal(size=(b, s, h))
+                                ).astype(np.float32) * 0.2)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    full, _ = ssm.ssd_chunked(x, log_a, bm, cm, chunk=4)
+    y1, st = ssm.ssd_chunked(x[:, :8], log_a[:, :8], bm[:, :8], cm[:, :8],
+                             chunk=4)
+    y2, _ = ssm.ssd_chunked(x[:, 8:], log_a[:, 8:], bm[:, 8:], cm[:, 8:],
+                            chunk=4, initial_state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_block_decode_matches_forward():
+    cfg = SMOKES["zamba2-1.2b"]
+    from repro.models import blocks, nn
+    spec = blocks.mamba_block_spec(cfg, jnp.float32)
+    params = nn.init_params(jax.random.key(0), spec)
+    rng = np.random.default_rng(2)
+    b, s = 2, 10
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model))
+                    .astype(np.float32) * 0.1)
+    y_full, _ = blocks.mamba_block(params, cfg, x, chunk=5)
+
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_headdim
+    state = {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state),
+                          jnp.float32),
+        "ssm": jnp.zeros((b, nh, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+    }
+    outs = []
+    for t in range(s):
+        y, state = blocks.mamba_block_decode(params, cfg, x[:, t:t + 1],
+                                             state)
+        outs.append(np.asarray(y[:, 0]))
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, np.asarray(y_full), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_mlstm_chunked_matches_decode_recurrence():
+    cfg = SMOKES["xlstm-350m"]
+    from repro.models import blocks, nn
+    spec = blocks.mlstm_block_spec(cfg, jnp.float32)
+    params = nn.init_params(jax.random.key(3), spec)
+    rng = np.random.default_rng(4)
+    b, s = 2, 12
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model))
+                    .astype(np.float32) * 0.3)
+    y_full = blocks.mlstm_block(params, cfg, x, chunk=4)
+
+    d_inner = cfg.xlstm_pf * cfg.d_model
+    h = cfg.n_heads
+    dh = d_inner // h
+    state = {
+        "c": jnp.zeros((b, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, h, dh), jnp.float32),
+        "m": jnp.full((b, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((b, cfg.xlstm_conv - 1, d_inner), jnp.float32),
+    }
+    outs = []
+    for t in range(s):
+        y, state = blocks.mlstm_block_decode(params, cfg, x[:, t:t + 1],
+                                             state)
+        outs.append(np.asarray(y[:, 0]))
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, np.asarray(y_full), rtol=2e-3,
+                               atol=3e-4)
+
+
+def test_slstm_forward_matches_stepwise():
+    cfg = SMOKES["xlstm-350m"]
+    from repro.models import blocks, nn
+    spec = blocks.slstm_block_spec(cfg, jnp.float32)
+    params = nn.init_params(jax.random.key(5), spec)
+    rng = np.random.default_rng(6)
+    b, s = 2, 9
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model))
+                    .astype(np.float32) * 0.3)
+    y_full, _ = blocks.slstm_block(params, cfg, x)
+    state = {k: jnp.zeros((b, cfg.d_model), jnp.float32)
+             for k in ("c", "n", "h", "m")}
+    outs = []
+    for t in range(s):
+        y, state = blocks.slstm_block_decode(params, cfg, x[:, t:t + 1],
+                                             state)
+        outs.append(np.asarray(y[:, 0]))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(y_full),
+                               rtol=2e-3, atol=3e-4)
