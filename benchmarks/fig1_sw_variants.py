@@ -7,8 +7,10 @@ scaled-down shape and report:
   * effective matrix-stream bandwidth (bytes of mat2 consumed / s),
   * the projected time at the paper's full shape (linear in n^2 * perms).
 
-Variants: jnp brute / tiled / permblock-matmul, plus the Pallas kernels in
-interpret mode (correctness-path timing, not TPU performance).
+Variants come from the engine registry (the unified s_W impl table): the
+jnp brute / tiled / permblock-matmul forms, plus the Pallas kernels in
+interpret mode (correctness-path timing, not TPU performance). The suite
+also reports what the hardware-aware planner picks for this backend/shape.
 """
 
 from __future__ import annotations
@@ -17,13 +19,21 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import hw
-from repro.core import fstat, permutations
+from repro import engine, hw
+from repro.core import permutations
 from repro.utils.timing import time_fn
 
 N = 1024
 N_PERMS = 64
 N_GROUPS = 8
+
+# fig1/jnp_* CSV names are stable across PRs; tuning mirrors the pre-engine
+# hand-picked values.
+JNP_TUNING = {
+    "brute": {"block": 16},
+    "tiled": {"tile": 256, "block": 4},
+    "matmul": {"perm_block": 32},
+}
 
 
 def _instance(n=N, p=N_PERMS, g=N_GROUPS, seed=0):
@@ -44,34 +54,33 @@ def run(emit):
     n, p = mat2.shape[0], gperms.shape[0]
     stream_bytes = 4.0 * n * n * p          # brute-force mat2 traffic
 
-    variants = {
-        "fig1/jnp_brute": jax.jit(lambda m, g, w: fstat.sw_brute(
-            m, g, w, block=16)),
-        "fig1/jnp_tiled": jax.jit(lambda m, g, w: fstat.sw_tiled(
-            m, g, w, tile=256, block=4)),
-        "fig1/jnp_matmul": jax.jit(lambda m, g, w: fstat.sw_matmul(
-            m, g, w, perm_block=32)),
-    }
     results = {}
-    for name, fn in variants.items():
+    for name in engine.names(kind="jnp"):
+        fn = jax.jit(engine.get(name).bound(**JNP_TUNING.get(name, {})))
         t = time_fn(fn, mat2, gperms, inv_gs, iters=3, warmup=1)
         results[name] = t
         gbps = stream_bytes / t / 1e9
         scale = (hw.PAPER_N_DIMS / n) ** 2 * (hw.PAPER_N_PERMS / p)
-        emit(name, t * 1e6, f"host_gbps={gbps:.2f} "
+        emit(f"fig1/jnp_{name}", t * 1e6, f"host_gbps={gbps:.2f} "
              f"projected_paper_shape_s={t * scale:.1f}")
 
-    speedup = results["fig1/jnp_brute"] / results["fig1/jnp_matmul"]
+    speedup = results["brute"] / results["matmul"]
     emit("fig1/matmul_speedup_over_brute", 0.0, f"x{speedup:.2f} "
          f"(paper: GPU brute 6x over CPU brute; here the MXU-form "
          f"reformulation is the analogous winner)")
 
+    # What would the planner run here? (the paper's finding as dispatch)
+    pl = engine.plan(n, p, N_GROUPS)
+    emit("fig1/planner_pick", 0.0, f"impl={pl.impl} ({pl.reason})")
+    for backend in ("cpu", "gpu", "tpu"):
+        pl_b = engine.plan(hw.PAPER_N_DIMS, hw.PAPER_N_PERMS, N_GROUPS,
+                           backend=backend)
+        emit(f"fig1/planner_paper_shape_{backend}", 0.0, f"impl={pl_b.impl}")
+
     # Pallas kernels, interpret mode, smaller shape (interpreter overhead)
-    from repro.kernels.permanova_sw import ops
     m2s, gps, igs = _instance(n=256, p=8)
-    for variant in ops.VARIANTS:
-        fn = lambda a, b, c: ops.permanova_sw(
-            a, b, c, variant=variant, tile_r=128, tile_c=128, perm_block=4)
+    for name in engine.names(kind="pallas"):
+        fn = engine.get(name).bound(tile_r=128, tile_c=128, perm_block=4)
         t = time_fn(fn, m2s, gps, igs, iters=2, warmup=1)
-        emit(f"fig1/pallas_{variant}_interpret", t * 1e6,
+        emit(f"fig1/{name}_interpret", t * 1e6,
              "correctness-path timing (CPU interpreter, not TPU)")

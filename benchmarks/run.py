@@ -1,7 +1,7 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness (deliverable d).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig1,stream,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,stream,...] [--json]
 
 Suites:
   fig1         paper Figure 1 analogue — s_W variants by algorithm
@@ -9,13 +9,23 @@ Suites:
   sweep        paper section 2 workload envelope (n, n_perms scaling)
   pa_roofline  PERMANOVA arithmetic-intensity roofline on TPU v5e
   roofline     LM-zoo roofline table from dry-run artifacts (deliverable g)
+
+--json writes one BENCH_<suite>.json per suite (rows + host metadata) into
+--json-dir (default: cwd) — the machine-readable perf trajectory consumed
+by CI across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
+import time
 import traceback
+
+import jax
 
 from benchmarks import (fig1_sw_variants, permanova_roofline,
                         roofline_report, stream_triad, sweep_scale)
@@ -29,21 +39,59 @@ SUITES = {
 }
 
 
+def _host_meta() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<suite>.json per suite")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<suite>.json files")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
     failed = []
     for name in names:
+        rows = []
+
+        def emit(row_name, us, derived, _rows=rows):
+            print(f"{row_name},{us:.1f},{derived}")
+            _rows.append({"name": row_name, "us_per_call": round(us, 1),
+                          "derived": derived})
+
+        t0 = time.time()
+        ok = True
         try:
-            SUITES[name](lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+            SUITES[name](emit)
         except Exception:  # noqa: BLE001
+            ok = False
             failed.append(name)
             traceback.print_exc()
+        if args.json:
+            os.makedirs(args.json_dir, exist_ok=True)
+            payload = {
+                "suite": name,
+                "ok": ok,
+                "wall_s": round(time.time() - t0, 2),
+                "host": _host_meta(),
+                "rows": rows,
+            }
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"# wrote {path}", file=sys.stderr)
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

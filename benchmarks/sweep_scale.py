@@ -2,16 +2,22 @@
 permutation count ("1k^2..100k^2 elements, 1k..1M permutations").
 
 Verifies the implementation's scaling laws on host CPU: brute is linear in
-n^2 * perms; the matmul form amortizes mat2 reads over the perm block.
+n^2 * perms; the matmul form amortizes mat2 reads over the perm block. The
+large-permutation rows go through the engine's streaming scheduler, which
+executes the sweep in fixed-memory chunks (labels regenerated on device per
+chunk) — the path that makes 100k..1M permutation runs single-host viable.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fstat, permutations
+from repro import engine
+from repro.core import permutations
 from repro.utils.timing import time_fn
 
 
@@ -25,18 +31,35 @@ def _instance(n, p, g=8, seed=0):
     inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), g)
     gperms = permutations.permutation_batch(jax.random.key(0),
                                             jnp.asarray(grouping), 0, p)
-    return jnp.asarray(d * d), gperms, inv_gs
+    return jnp.asarray(d * d), gperms, inv_gs, jnp.asarray(grouping)
 
 
 def run(emit):
-    fn = jax.jit(lambda m, g, w: fstat.sw_matmul(m, g, w, perm_block=32))
+    fn = jax.jit(engine.get("matmul").bound(perm_block=32))
     for n in (256, 512, 1024):
-        m2, gp, ig = _instance(n, 32)
+        m2, gp, ig, _ = _instance(n, 32)
         t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
         emit(f"sweep/n{n}_perms32", t * 1e6,
              f"per_perm_us={t/32*1e6:.1f}")
     for p in (16, 64, 256):
-        m2, gp, ig = _instance(512, p)
+        m2, gp, ig, _ = _instance(512, p)
         t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
         emit(f"sweep/n512_perms{p}", t * 1e6,
              f"per_perm_us={t/p*1e6:.1f}")
+
+    # streaming scheduler: fixed-memory chunked sweep, labels never
+    # materialized as an (n_perms, n) tensor
+    n, n_perms = 512, 8192
+    m2, _, ig, grouping = _instance(n, 1)
+    key = jax.random.key(0)
+    for chunk in (512, 2048):
+        # warm the jitted step (one chunk) so rows time steady state, like
+        # the time_fn(warmup=1) rows above
+        engine.sw_streaming(m2, grouping, ig, key, chunk, fn, chunk=chunk)
+        t0 = time.perf_counter()
+        _, stats = engine.sw_streaming(m2, grouping, ig, key, n_perms,
+                                       fn, chunk=chunk)
+        t = time.perf_counter() - t0
+        emit(f"sweep/stream_perms{n_perms}_chunk{chunk}", t * 1e6,
+             f"per_perm_us={t/n_perms*1e6:.2f} chunks={stats.n_chunks} "
+             f"peak_label_mb={stats.peak_label_bytes/2**20:.2f}")

@@ -3,6 +3,8 @@
 
 Layers:
   core/       PERMANOVA statistics engine (the paper's contribution)
+  engine/     hardware-aware execution layer: s_W impl registry,
+              planner/autotuner, streaming permutation scheduler
   kernels/    Pallas TPU kernels for the hot loops (+ jnp oracles)
   models/     assigned LM-architecture zoo (dense / MoE / SSM / hybrid / enc-dec)
   sharding/   logical-axis -> mesh partition rules

@@ -5,6 +5,11 @@ Public API:
   permanova_distributed(mesh, dm, ...)    sharded over (pod, data, model)
   fstat.sw_{brute,tiled,matmul}           the paper's hot-loop variants
   distance.distance_matrix(x, metric)     input construction
+
+Both permanova entry points are thin wrappers over repro.engine — the
+hardware-aware execution layer (impl registry + planner + streaming
+permutation scheduler). Pass sw_impl='auto' (the default) to let the
+planner encode the paper's CPU-tiled vs GPU-brute result.
 """
 
 from repro.core import fstat, permutations, distance, distributed  # noqa: F401

@@ -24,6 +24,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fstat, permutations, permanova as _permanova
 
+try:  # jax >= 0.5 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 Array = jax.Array
 
 
@@ -55,29 +60,37 @@ def _my_perm_range(mesh: Mesh, n_perms_padded: int):
     return idx * per, per
 
 
+def resolve_impl(impl: str, n: int, n_perms: int, n_groups: int) -> str:
+    """Map an impl request ('auto' or a registry name) to a concrete
+    registry impl via the engine planner."""
+    from repro import engine  # deferred: engine imports core modules
+    pinned = None if impl == "auto" else impl
+    return engine.plan(n, n_perms, n_groups, impl=pinned).impl
+
+
 def make_sw_shard_fn(mesh: Mesh, *, impl: str = "matmul",
                      n_groups: int, identity_first: bool = True,
                      perm_block: int = 64):
     """Build the shard-local body: generate my permutations, compute my
     row-partial s_W, psum over 'model'. Returns f(mat2_rows, grouping, inv_gs,
-    key, n_perms_padded) -> (local_perms,) s_W."""
+    key, n_perms_padded) -> (local_perms,) s_W.
+
+    The row-sharded partial is looked up in the engine registry: the exact
+    impl's companion when it has one, else the nearest family member
+    (tiled -> brute rows, pallas_* -> matmul rows)."""
+    from repro import engine  # deferred: engine imports core modules
+    partial_fn = engine.get_sharded(impl)
+    tuning_key = ("perm_block" if partial_fn is fstat.sw_matmul_rows_partial
+                  else "block")
 
     def shard_body(mat2_rows, grouping, inv_gs, key, n_perms_padded):
         n_local = mat2_rows.shape[0]
         row_offset = jax.lax.axis_index("model") * n_local
         lo, per = _my_perm_range(mesh, n_perms_padded)
-        idx = lo + jnp.arange(per)
-        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
-        gperms = jax.vmap(
-            lambda k: permutations.permute_grouping(k, grouping))(keys)
-        if identity_first:
-            gperms = jnp.where((idx == 0)[:, None], grouping[None, :], gperms)
-        if impl == "matmul":
-            part = fstat.sw_matmul_rows_partial(
-                mat2_rows, row_offset, gperms, inv_gs, perm_block=perm_block)
-        else:
-            part = fstat.sw_rows_partial(
-                mat2_rows, row_offset, gperms, inv_gs, block=perm_block)
+        gperms = permutations.permutation_batch_dyn(
+            key, grouping, lo, per, identity_first=identity_first)
+        part = partial_fn(mat2_rows, row_offset, gperms, inv_gs,
+                          **{tuning_key: perm_block})
         return jax.lax.psum(part, axis_name="model")
 
     return shard_body
@@ -97,9 +110,10 @@ def sw_distributed(mesh: Mesh, mat2: Array, grouping: Array, inv_gs: Array,
     mat2p, _ = pad_to_multiple(mat2, model_ways, axis=0)
     n_groups = inv_gs.shape[0]
 
+    impl = resolve_impl(impl, mat2.shape[0], n_perms, n_groups)
     body = make_sw_shard_fn(mesh, impl=impl, n_groups=n_groups,
                             perm_block=perm_block)
-    fn = jax.shard_map(
+    fn = _shard_map(
         functools.partial(body, n_perms_padded=n_perms_padded),
         mesh=mesh,
         in_specs=(P("model", None), P(), P(), P()),

@@ -111,16 +111,22 @@ def sw_tiled_one(mat2: Array, grouping: Array, inv_group_sizes: Array,
 
     Explicit TILE x TILE blocking of the upper triangle with the
     inv_group_sizes access hoisted per row-within-tile, expressed as a
-    lax.fori_loop nest so the tiled dataflow survives tracing. n must be a
-    multiple of `tile` (callers pad; the pad region carries a sentinel group
-    that never matches).
+    lax.fori_loop nest so the tiled dataflow survives tracing. When n is not
+    a multiple of `tile` (e.g. prime n), the matrix is zero-padded up to the
+    requested tile and the pad region carries a sentinel group (-1) with
+    zero weight, so every pad pair contributes exactly 0 — the tiled
+    dataflow is preserved instead of degrading toward tile=1.
     """
     n = mat2.shape[0]
     tile = min(tile, n)
-    while n % tile != 0:   # largest divisor of n not exceeding the request
-        tile -= 1
-    nt = n // tile
     w = inv_group_sizes[grouping]  # (n,) hoisted per-row weight
+    pad = (-n) % tile
+    if pad:
+        mat2 = jnp.pad(mat2, ((0, pad), (0, pad)))
+        grouping = jnp.pad(grouping, (0, pad), constant_values=-1)
+        w = jnp.pad(w, (0, pad))
+        n = n + pad
+    nt = n // tile
     row_ids = jnp.arange(tile)
     col_ids = jnp.arange(tile)
 

@@ -25,6 +25,9 @@ from repro.core import fstat, permutations
 
 Array = jax.Array
 
+# Legacy alias kept for external callers/tests; the authoritative impl table
+# (these three + the Pallas variants + sharded partials, with capability
+# metadata) lives in repro.engine.registry.
 SW_IMPLS = {
     "brute": fstat.sw_brute,
     "tiled": fstat.sw_tiled,
@@ -43,6 +46,7 @@ class PermanovaResult:
     n_groups: int
     n_perms: int
     method: str = "permanova"
+    plan: str = ""         # engine execution plan (impl, tuning, chunking)
 
     def __repr__(self):  # pragma: no cover - cosmetic
         return (f"PermanovaResult(F={float(self.f_stat):.6g}, "
@@ -74,36 +78,25 @@ def p_value_from_null(f_perms: Array) -> Array:
 
 def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
               key: Optional[jax.Array] = None, n_groups: Optional[int] = None,
-              sw_impl: str = "matmul",
-              sw_fn: Optional[Callable] = None) -> PermanovaResult:
-    """Run the full PERMANOVA test on one host.
+              sw_impl: str = "auto",
+              sw_fn: Optional[Callable] = None,
+              memory_budget_bytes: Optional[float] = None,
+              chunk: Optional[int] = None,
+              autotune: bool = False) -> PermanovaResult:
+    """Run the full PERMANOVA test on one host (thin engine wrapper).
 
     dm:        (n, n) symmetric distance matrix, zero diagonal.
     grouping:  (n,) int labels in [0, n_groups).
-    sw_impl:   'brute' | 'tiled' | 'matmul' (or pass sw_fn directly, e.g. a
+    sw_impl:   'auto' (hardware-aware planner; the paper's CPU-tiled vs
+               GPU-brute result) or any repro.engine.registry name:
+               'brute' | 'tiled' | 'matmul' | 'pallas_{brute,permblock,matmul}'.
+    sw_fn:     bypass the registry with a custom batch callable (e.g. a
                Pallas kernel wrapper from repro.kernels.permanova_sw.ops).
+    memory_budget_bytes / chunk: cap the live label tensor; larger sweeps
+               run through the engine's streaming permutation scheduler.
     """
-    if key is None:
-        key = jax.random.key(0)
-    dm = jnp.asarray(dm)
-    grouping = jnp.asarray(grouping, dtype=jnp.int32)
-    n = dm.shape[0]
-    if n_groups is None:
-        n_groups = int(jnp.max(grouping)) + 1
-    mat2 = dm * dm
-    inv_gs = permutations.inv_group_sizes(grouping, n_groups)
-    groupings = permutations.permutation_batch(key, grouping, 0, n_perms + 1)
-    fn = sw_fn if sw_fn is not None else SW_IMPLS[sw_impl]
-    s_w_all = fn(mat2, groupings, inv_gs)
-    s_t = s_total(mat2)
-    f_all = f_from_sw(s_w_all, s_t, n, n_groups)
-    return PermanovaResult(
-        f_stat=f_all[0],
-        p_value=p_value_from_null(f_all),
-        s_t=s_t,
-        s_w=s_w_all[0],
-        f_perms=f_all,
-        n_objects=n,
-        n_groups=n_groups,
-        n_perms=n_perms,
-    )
+    from repro import engine  # deferred: engine imports this module
+    return engine.run(dm, grouping, n_perms=n_perms, key=key,
+                      n_groups=n_groups, impl=sw_impl, sw_fn=sw_fn,
+                      memory_budget_bytes=memory_budget_bytes, chunk=chunk,
+                      autotune=autotune)

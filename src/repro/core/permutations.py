@@ -46,7 +46,20 @@ def permutation_batch(key: jax.Array, grouping: Array, lo: int, hi: int,
     permutation index, so any shard holding any index range produces the
     same labels as a single-host run.
     """
-    idx = jnp.arange(lo, hi)
+    return permutation_batch_dyn(key, grouping, lo, hi - lo,
+                                 identity_first=identity_first)
+
+
+def permutation_batch_dyn(key: jax.Array, grouping: Array, lo: Array,
+                          chunk: int, *, identity_first: bool = True) -> Array:
+    """permutation_batch with a TRACED start index.
+
+    Same key-folding-by-global-index semantics, but `lo` may be a traced
+    scalar, so one jitted program serves every chunk of a streaming sweep
+    (the scheduler re-invokes it with lo = 0, chunk, 2*chunk, ... without
+    retracing). `chunk` must be static.
+    """
+    idx = lo + jnp.arange(chunk)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
     perms = jax.vmap(lambda k: permute_grouping(k, grouping))(keys)
     if identity_first:

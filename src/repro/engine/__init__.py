@@ -1,0 +1,23 @@
+"""Hardware-aware PERMANOVA execution engine.
+
+The paper's result — optimal s_W dataflow depends on the hardware (CPU wants
+cache-tiled, GPU wants brute force) — made first-class:
+
+  registry    every s_W implementation behind one batch interface with
+              capability metadata (backends, working set, pad contract,
+              row-sharded companion)
+  planner     backend + shape -> impl + tuning + streaming chunk; optional
+              empirical autotune (measure-and-cache on real operands)
+  scheduler   fixed-memory streaming permutation sweeps (labels regenerated
+              on device per chunk by global-index key folding)
+  api         run() single-study entry, permanova_many() batched studies
+
+All repo entry points (core.permanova.permanova, core.distributed, the
+launch CLI, benchmarks) route through this package.
+"""
+
+from repro.engine import api, planner, registry, scheduler  # noqa: F401
+from repro.engine.api import PermanovaManyResult, permanova_many, run  # noqa: F401
+from repro.engine.planner import Plan, autotune, chunk_for_budget, plan  # noqa: F401
+from repro.engine.registry import SwImpl, get, get_sharded, names  # noqa: F401
+from repro.engine.scheduler import StreamStats, sw_batch, sw_streaming  # noqa: F401

@@ -1,0 +1,195 @@
+"""Engine entry points: every PERMANOVA path in the repo routes through here.
+
+run()              single-host full test; planner-driven impl selection,
+                   streaming scheduler for large permutation counts.
+permanova_many()   batched multi-study API: vmaps one plan over a stack of
+                   distance matrices (the many-users serving scenario).
+
+core.permanova.permanova() and core.distributed.permanova_distributed()
+remain the public signatures; they are thin wrappers over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permutations
+# NOTE: `from repro.core import permanova` would resolve to the *function*
+# (the package __init__ rebinds the submodule name); import symbols directly.
+from repro.core.permanova import (PermanovaResult, f_from_sw,
+                                  p_value_from_null, s_total)
+from repro.engine import planner, registry, scheduler
+
+Array = jax.Array
+
+
+def run(dm: Array, grouping: Array, *, n_perms: int = 999,
+        key: Optional[jax.Array] = None, n_groups: Optional[int] = None,
+        impl: str = "auto", sw_fn: Optional[Callable] = None,
+        memory_budget_bytes: Optional[float] = None,
+        chunk: Optional[int] = None, autotune: bool = False,
+        backend: Optional[str] = None) -> "PermanovaResult":
+    """Full PERMANOVA through the hardware-aware engine.
+
+    impl:  'auto' (planner heuristics; `autotune=True` upgrades to the
+           empirical measure-and-cache pass) or any registry name.
+    sw_fn: escape hatch — bypass the registry with a custom batch callable.
+    memory_budget_bytes / chunk: bound the live label tensor; sweeps larger
+           than the chunk run through the streaming scheduler.
+    """
+    if key is None:
+        key = jax.random.key(0)
+    dm = jnp.asarray(dm)
+    grouping = jnp.asarray(grouping, dtype=jnp.int32)
+    n = dm.shape[0]
+    if n_groups is None:
+        n_groups = int(jnp.max(grouping)) + 1
+    mat2 = dm * dm
+    inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+    n_total = n_perms + 1
+
+    if sw_fn is not None:
+        fn = sw_fn
+        pl = planner.plan(n, n_total, n_groups, backend=backend,
+                          impl="matmul",  # footprint stand-in for budgeting
+                          memory_budget_bytes=memory_budget_bytes,
+                          chunk=chunk)
+        pl = dataclasses.replace(pl, impl="<custom sw_fn>",
+                                 reason="caller-supplied sw_fn")
+    else:
+        pinned = None if impl == "auto" else impl
+        tuned = False
+        if autotune and pinned is not None:
+            warnings.warn(
+                f"autotune=True ignored: impl is pinned to {impl!r} "
+                "(use impl='auto' to let measurements pick)", stacklevel=2)
+        if pinned is None and autotune:
+            pinned = planner.autotune(mat2, grouping, inv_gs,
+                                      backend=backend, key=key)
+            tuned = True
+        pl = planner.plan(n, n_total, n_groups, backend=backend, impl=pinned,
+                          memory_budget_bytes=memory_budget_bytes,
+                          chunk=chunk)
+        if tuned:
+            pl = dataclasses.replace(
+                pl, reason="empirical autotune winner (measured on operands)")
+        fn = registry.get(pl.impl).bound(**pl.tuning)
+
+    if pl.streaming:
+        s_w_np, stats = scheduler.sw_streaming(
+            mat2, grouping, inv_gs, key, n_total, fn, chunk=pl.chunk)
+        s_w_all = jnp.asarray(s_w_np)
+    else:
+        s_w_all, stats = scheduler.sw_batch(
+            mat2, grouping, inv_gs, key, n_total, fn)
+
+    s_t = s_total(mat2)
+    f_all = f_from_sw(s_w_all, s_t, n, n_groups)
+    return PermanovaResult(
+        f_stat=f_all[0],
+        p_value=p_value_from_null(f_all),
+        s_t=s_t,
+        s_w=s_w_all[0],
+        f_perms=f_all,
+        n_objects=n,
+        n_groups=n_groups,
+        n_perms=n_perms,
+        method=f"permanova[{pl.impl}]",
+        plan=f"{pl.describe()} chunks={stats.n_chunks}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-study API (serving scenario).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PermanovaManyResult:
+    """Stacked results over S studies (leading axis S on every array)."""
+    f_stat: Array        # (S,)
+    p_value: Array       # (S,)
+    s_t: Array           # (S,)
+    s_w: Array           # (S,)
+    f_perms: Array       # (S, n_perms + 1)
+    n_objects: int
+    n_groups: int
+    n_perms: int
+    plan: str = ""
+
+    def __len__(self):
+        return int(self.f_stat.shape[0])
+
+    def study(self, s: int) -> "PermanovaResult":
+        """View one study as a standard PermanovaResult."""
+        return PermanovaResult(
+            f_stat=self.f_stat[s], p_value=self.p_value[s], s_t=self.s_t[s],
+            s_w=self.s_w[s], f_perms=self.f_perms[s],
+            n_objects=self.n_objects, n_groups=self.n_groups,
+            n_perms=self.n_perms, method="permanova_many", plan=self.plan)
+
+
+def permanova_many(dms: Array, groupings: Array, *, n_groups: int,
+                   n_perms: int = 999, key: Optional[jax.Array] = None,
+                   impl: str = "auto", chunk: Optional[int] = None,
+                   memory_budget_bytes: Optional[float] = None,
+                   backend: Optional[str] = None) -> PermanovaManyResult:
+    """PERMANOVA over a stack of studies in one vmapped program.
+
+    dms:        (S, n, n) distance matrices.
+    groupings:  (S, n) int labels in [0, n_groups); n_groups must be shared
+                (it sets the one-hot width — the serving scenario runs many
+                users through one study design).
+    Study s draws its null from fold_in(key, s), so results match S
+    independent run(..., key=fold_in(key, s)) calls exactly.
+
+    Permutations are chunk-scanned inside the jitted program, so the live
+    label tensor is (S, chunk, n) — the same fixed-memory contract as the
+    streaming scheduler, vectorized over studies.
+    """
+    if key is None:
+        key = jax.random.key(0)
+    dms = jnp.asarray(dms)
+    groupings = jnp.asarray(groupings, dtype=jnp.int32)
+    s_count, n = groupings.shape
+    n_total = n_perms + 1
+
+    pinned = None if impl == "auto" else impl
+    # vmap holds every study's (chunk, n) labels + working set live at once,
+    # so the per-study plan gets 1/S of the budget (default included).
+    total_budget = (planner.DEFAULT_STREAM_BUDGET_BYTES
+                    if memory_budget_bytes is None else memory_budget_bytes)
+    per_study_budget = total_budget / s_count
+    pl = planner.plan(n, n_total, n_groups, backend=backend, impl=pinned,
+                      memory_budget_bytes=per_study_budget, chunk=chunk)
+    fn = registry.get(pl.impl).bound(**pl.tuning)
+    ch = pl.chunk
+    n_chunks = -(-n_total // ch)
+
+    def one(dm, grouping, study_key):
+        mat2 = dm * dm
+        inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+
+        def body(_, lo):
+            g = permutations.permutation_batch_dyn(study_key, grouping,
+                                                   lo, ch)
+            return None, fn(mat2, g, inv_gs)
+
+        _, sws = jax.lax.scan(body, None, jnp.arange(n_chunks) * ch)
+        s_w_all = sws.reshape(-1)[:n_total]
+        s_t = s_total(mat2)
+        f_all = f_from_sw(s_w_all, s_t, n, n_groups)
+        return f_all, s_t, s_w_all[0]
+
+    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+        jnp.arange(s_count))
+    f_perms, s_t, s_w = jax.vmap(one)(dms, groupings, study_keys)
+    p_vals = jax.vmap(p_value_from_null)(f_perms)
+    return PermanovaManyResult(
+        f_stat=f_perms[:, 0], p_value=p_vals, s_t=s_t, s_w=s_w,
+        f_perms=f_perms, n_objects=n, n_groups=n_groups, n_perms=n_perms,
+        plan=f"{pl.describe()} studies={s_count} chunks={n_chunks}")

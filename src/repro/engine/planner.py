@@ -1,0 +1,192 @@
+"""Hardware-aware planner + empirical autotuner for the s_W registry.
+
+The heuristics encode the paper's Figure 1 result as dispatch rules:
+
+  backend   choice                       why
+  -------   -------------------------   -------------------------------------
+  gpu       brute                       MI300A GPU cores prefer the brute
+                                        Algorithm 3 (massive thread-level
+                                        parallelism hides the re-stream)
+  cpu       tiled  (mat2 > LLC)         MI300A CPU cores want the cache-tiled
+            matmul (mat2 fits cache)    Algorithm 2 once the matrix spills
+                                        the last-level cache; below that the
+                                        BLAS/MXU one-hot form dominates
+  tpu       pallas_matmul (n >= 256)    MXU one-hot contraction is the only
+            matmul        (small n)     form past the v5e ridge point
+
+`plan()` is pure shape/backend arithmetic — no timing. `autotune()` is the
+optional measure-and-cache pass: it times every candidate on a small
+permutation sample of the *actual* problem and memoizes the winner per
+(backend, shape-bucket), so serving paths pay the measurement once.
+
+The plan also fixes the streaming-permutation chunk: the scheduler executes
+`n_perms` in fixed-memory chunks, so the label tensor held live is
+(chunk, n) int32 instead of (n_perms, n) — that is what lets single-host
+100k..1M-permutation runs fit any memory budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.engine import registry
+
+# Model constants (bytes). LLC: an MI300A CCD carries 32 MiB L3; once mat2
+# spills it the paper's tiled dataflow wins on CPU.
+CPU_LLC_BYTES = 32 * 1024 ** 2
+DEFAULT_STREAM_BUDGET_BYTES = 256 * 1024 ** 2
+MIN_CHUNK = 64
+PALLAS_MIN_N = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A resolved execution plan for one PERMANOVA problem."""
+    impl: str                 # registry name
+    backend: str
+    tuning: Dict[str, int]    # resolved knobs passed to SwImpl.make
+    chunk: int                # permutations per scheduler dispatch
+    streaming: bool           # True when n_perms+1 > chunk
+    reason: str
+
+    def describe(self) -> str:
+        t = ",".join(f"{k}={v}" for k, v in sorted(self.tuning.items()))
+        mode = f"stream(chunk={self.chunk})" if self.streaming else "batch"
+        return f"{self.impl}[{t}] {mode} on {self.backend}: {self.reason}"
+
+
+def default_backend() -> str:
+    return jax.default_backend()
+
+
+def _pick_impl(backend: str, n: int) -> Tuple[str, str]:
+    if backend == "gpu":
+        return "brute", "GPU cores prefer brute force (paper Fig. 1)"
+    if backend == "tpu":
+        if n >= PALLAS_MIN_N:
+            return "pallas_matmul", "MXU one-hot contraction past ridge point"
+        return "matmul", "problem too small for kernel tiles; XLA matmul form"
+    # cpu and anything unknown
+    mat2_bytes = 4 * n * n
+    if backend == "cpu" and mat2_bytes > CPU_LLC_BYTES:
+        return "tiled", (f"mat2 {mat2_bytes/2**20:.0f}MiB spills the "
+                         f"{CPU_LLC_BYTES/2**20:.0f}MiB LLC; cache-tiled "
+                         "Algorithm 2 wins on CPU (paper Fig. 1)")
+    return "matmul", "mat2 cache-resident; one-hot BLAS form amortizes reads"
+
+
+def chunk_for_budget(n: int, n_perms: int, impl: registry.SwImpl,
+                     n_groups: int,
+                     budget_bytes: Optional[float] = None) -> int:
+    """Largest permutation chunk whose LABEL tensor fits the budget.
+
+    The budget governs the streamed state — (chunk, n) int32 labels plus the
+    per-perm output — which is the only term that scales with n_perms. The
+    resident mat2 and the impl's per-block working set are paid regardless
+    of chunking and are deliberately not charged against it (n_groups and
+    impl are kept in the signature for footprint-aware callers/tests)."""
+    del n_groups  # labels dominate the streamed state; see docstring
+    budget = DEFAULT_STREAM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    per_perm = 4.0 * n + 8.0
+    if MIN_CHUNK * per_perm > budget:
+        warnings.warn(
+            f"label budget {budget/2**20:.2f}MiB cannot hold even the "
+            f"minimum chunk ({MIN_CHUNK} perms x {4*n} label bytes) at "
+            f"n={n}; proceeding with chunk={MIN_CHUNK} — label memory will "
+            f"exceed the budget (impl {impl.name!r})",
+            stacklevel=2)
+        return min(MIN_CHUNK, n_perms)
+    chunk = max(MIN_CHUNK, int(budget // per_perm))
+    return min(chunk, n_perms)
+
+
+def plan(n: int, n_perms: int, n_groups: int, *,
+         backend: Optional[str] = None,
+         memory_budget_bytes: Optional[float] = None,
+         chunk: Optional[int] = None,
+         impl: Optional[str] = None,
+         tuning: Optional[Dict[str, int]] = None) -> Plan:
+    """Resolve impl + tuning + streaming chunk for one problem.
+
+    n_perms counts TOTAL permutation slots (i.e. n_perms_requested + 1 for
+    the observed labels at index 0). `impl`/`chunk` pin those choices and
+    let the planner fill in the rest.
+    """
+    backend = backend or default_backend()
+    if impl is None:
+        name, reason = _pick_impl(backend, n)
+    else:
+        name, reason = impl, "caller-pinned impl"
+    spec = registry.get(name)
+    resolved = dict(spec.tuning)
+    if tuning:
+        resolved.update({k: v for k, v in tuning.items() if k in resolved})
+    if chunk is None:
+        chunk = chunk_for_budget(n, n_perms, spec, n_groups,
+                                 memory_budget_bytes)
+    chunk = max(1, min(int(chunk), n_perms))
+    return Plan(impl=name, backend=backend, tuning=resolved, chunk=chunk,
+                streaming=chunk < n_perms, reason=reason)
+
+
+# ---------------------------------------------------------------------------
+# Empirical autotuner: measure-and-cache on the real operands.
+# ---------------------------------------------------------------------------
+
+_AUTOTUNE_CACHE: Dict[tuple, str] = {}
+
+
+def _bucket(n: int) -> int:
+    """Shape bucket: next power of two (timings are stable within one)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def autotune(mat2, grouping, inv_gs, *,
+             candidates: Optional[Sequence[str]] = None,
+             sample_perms: int = 16,
+             key: Optional[jax.Array] = None,
+             backend: Optional[str] = None,
+             use_cache: bool = True) -> str:
+    """Time each candidate impl on a small permutation sample of the actual
+    operands and return the fastest name. Winners are memoized per
+    (backend, n-bucket, n_groups) so steady-state callers measure once."""
+    from repro.core import permutations  # local: avoid import cycle at load
+
+    backend = backend or default_backend()
+    n = int(mat2.shape[0])
+    n_groups = int(inv_gs.shape[0])
+    if candidates is None:
+        candidates = registry.names(kind="jnp")
+        if backend == "tpu":
+            candidates = list(candidates) + registry.names(kind="pallas")
+    cache_key = (backend, _bucket(n), n_groups, tuple(sorted(candidates)))
+    if use_cache and cache_key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[cache_key]
+
+    if key is None:
+        key = jax.random.key(0)
+    gperms = permutations.permutation_batch(key, grouping, 0, sample_perms)
+    best_name, best_t = None, float("inf")
+    for name in candidates:
+        fn = jax.jit(registry.get(name).bound())
+        try:
+            jax.block_until_ready(fn(mat2, gperms, inv_gs))  # compile+warm
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(mat2, gperms, inv_gs))
+            t = time.perf_counter() - t0
+        except Exception:  # noqa: BLE001 — an impl may not lower here
+            continue
+        if t < best_t:
+            best_name, best_t = name, t
+    if best_name is None:
+        raise RuntimeError("autotune: no candidate impl ran successfully")
+    _AUTOTUNE_CACHE[cache_key] = best_name
+    return best_name

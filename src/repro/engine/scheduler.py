@@ -1,0 +1,84 @@
+"""Streaming permutation scheduler.
+
+Executes an n_perms-permutation sweep in fixed-memory chunks. Labels are
+regenerated ON DEVICE per chunk by folding the PRNG key with GLOBAL
+permutation indices — the same trick core.distributed uses across shards —
+so a single-host 100k..1M-permutation run never materializes the
+(n_perms, n) label tensor. Peak live label memory is (chunk, n) int32,
+independent of n_perms; results accumulate into a host-side float32 buffer
+(4 bytes/perm).
+
+One jitted step program serves every chunk (the start index is a traced
+scalar), so the sweep compiles once.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import permutations
+
+Array = jax.Array
+
+
+class StreamStats(NamedTuple):
+    """Execution evidence for tests/telemetry: how the sweep actually ran."""
+    n_total: int
+    chunk: int
+    n_chunks: int
+    peak_label_bytes: int   # (chunk, n) int32 — the live label footprint
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step(mat2, grouping, inv_gs, key, lo, *, fn, chunk, identity_first):
+    gperms = permutations.permutation_batch_dyn(
+        key, grouping, lo, chunk, identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
+
+
+def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
+                 n_total: int, fn: Callable, *, chunk: int,
+                 identity_first: bool = True,
+                 progress: Optional[Callable[[int, int], None]] = None):
+    """s_W for global permutation indices [0, n_total) in fixed-size chunks.
+
+    fn: batch impl fn(mat2, groupings, inv_gs) -> (P,) (a registry impl
+        bound via SwImpl.bound(), or any compatible callable; must be
+        jit-traceable).
+    Returns (s_w float32 ndarray of shape (n_total,), StreamStats).
+    Chunk results beyond n_total (last ragged chunk) are computed and
+    discarded — identical labels to any other sweep of the same key, since
+    folding is by global index.
+    """
+    n = int(mat2.shape[0])
+    chunk = int(max(1, min(chunk, n_total)))
+    out = np.empty((n_total,), np.float32)
+    n_chunks = 0
+    for lo in range(0, n_total, chunk):
+        s = _step(mat2, grouping, inv_gs, key, jnp.int32(lo),
+                  fn=fn, chunk=chunk, identity_first=identity_first)
+        hi = min(lo + chunk, n_total)
+        out[lo:hi] = np.asarray(s[: hi - lo])
+        n_chunks += 1
+        if progress is not None:
+            progress(hi, n_total)
+    stats = StreamStats(n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+                        peak_label_bytes=4 * chunk * n)
+    return out, stats
+
+
+def sw_batch(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
+             n_total: int, fn: Callable, *, identity_first: bool = True):
+    """One-shot path for small sweeps: materialize all labels, single
+    dispatch. Same key semantics as the streaming path."""
+    gperms = permutations.permutation_batch(
+        key, grouping, 0, n_total, identity_first=identity_first)
+    s_w = fn(mat2, gperms, inv_gs)
+    stats = StreamStats(n_total=n_total, chunk=n_total, n_chunks=1,
+                        peak_label_bytes=4 * n_total * int(mat2.shape[0]))
+    return s_w, stats

@@ -1,8 +1,13 @@
-"""PERMANOVA launcher — the paper's workload as a CLI.
+"""PERMANOVA launcher — the paper's workload as a CLI, routed through the
+hardware-aware execution engine.
 
   PYTHONPATH=src python -m repro.launch.permanova \
       --samples 512 --features 128 --groups 8 --perms 999 \
-      --impl matmul --kernel --metric braycurtis
+      --impl auto --metric braycurtis
+
+  # 100k permutations in fixed-memory chunks (no (n_perms, n) label tensor):
+  PYTHONPATH=src python -m repro.launch.permanova \
+      --samples 512 --perms 100000 --impl auto --budget-mb 64
 
 Scales from laptop smoke runs to the paper's EMP shape
 (--samples 25145 --perms 3999) on a real mesh.
@@ -16,9 +21,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import permanova
+from repro import engine
 from repro.core.distance import distance_matrix, validate_distance_matrix
 from repro.data.microbiome import synthetic_study
+
+IMPL_CHOICES = ["auto", "brute", "tiled", "matmul",
+                "pallas_brute", "pallas_permblock", "pallas_matmul"]
 
 
 def main():
@@ -29,14 +37,31 @@ def main():
     ap.add_argument("--perms", type=int, default=999)
     ap.add_argument("--effect", type=float, default=1.0)
     ap.add_argument("--metric", default="braycurtis")
-    ap.add_argument("--impl", default="matmul",
-                    choices=["brute", "tiled", "matmul"])
+    ap.add_argument("--impl", default="auto", choices=IMPL_CHOICES,
+                    help="'auto' = hardware-aware planner (CPU-tiled vs "
+                         "GPU-brute per the paper); or pin a registry impl")
+    ap.add_argument("--autotune", action="store_true",
+                    help="empirically measure candidates on the real "
+                         "operands instead of trusting the heuristics")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="label-tensor memory budget; sweeps beyond it "
+                         "stream in fixed-size chunks")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="pin the streaming chunk (perms per dispatch)")
     ap.add_argument("--kernel", action="store_true",
-                    help="use the Pallas kernel path (interpret on CPU)")
+                    help="legacy alias: maps brute/matmul to the Pallas "
+                         "kernel variant (interpret mode off TPU)")
     ap.add_argument("--distributed", action="store_true",
                     help="shard over all local devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    impl = args.impl
+    if args.kernel and not impl.startswith("pallas_"):
+        # legacy flag: force the Pallas kernel family ('tiled' maps to
+        # permblock, the kernel carrying the paper's CPU-tiling insight)
+        impl = {"auto": "pallas_matmul", "brute": "pallas_brute",
+                "tiled": "pallas_permblock", "matmul": "pallas_matmul"}[impl]
 
     x, grouping = synthetic_study(args.samples, args.features, args.groups,
                                   effect_size=args.effect, seed=args.seed)
@@ -46,30 +71,28 @@ def main():
     assert checks["ok"], checks
     t_dm = time.time() - t0
 
-    sw_fn = None
-    if args.kernel:
-        from repro.kernels.permanova_sw.ops import make_sw_fn
-        sw_fn = make_sw_fn(args.impl)
-
+    budget = None if args.budget_mb is None else args.budget_mb * 2**20
     t0 = time.time()
     if args.distributed:
         from repro.core import permanova_distributed
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh()
         res = permanova_distributed(mesh, dm, jnp.asarray(grouping),
-                                    n_perms=args.perms, impl=args.impl,
+                                    n_perms=args.perms, impl=impl,
                                     key=jax.random.key(args.seed))
     else:
-        res = permanova(dm, jnp.asarray(grouping), n_perms=args.perms,
-                        sw_impl=args.impl, sw_fn=sw_fn,
-                        key=jax.random.key(args.seed))
+        res = engine.run(dm, jnp.asarray(grouping), n_perms=args.perms,
+                         impl=impl, key=jax.random.key(args.seed),
+                         memory_budget_bytes=budget, chunk=args.chunk,
+                         autotune=args.autotune)
     jax.block_until_ready(res.f_perms)
     t_pa = time.time() - t0
 
     print(f"[permanova] n={args.samples} groups={args.groups} "
-          f"perms={res.n_perms} metric={args.metric} impl={args.impl}"
-          f"{' +kernel' if args.kernel else ''}"
+          f"perms={res.n_perms} metric={args.metric} impl={impl}"
           f"{' +distributed' if args.distributed else ''}")
+    if res.plan:
+        print(f"[permanova] plan: {res.plan}")
     print(f"[permanova] distance-matrix {t_dm:.2f}s  "
           f"permutation-test {t_pa:.2f}s "
           f"({res.n_perms / t_pa:.1f} perms/s)")
