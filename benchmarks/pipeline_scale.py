@@ -1,0 +1,67 @@
+"""Pipeline suite: the full features→p-value path under each
+materialization bridge, plus the stage-1 distance impls head-to-head.
+
+The ROADMAP flagged the distance stage as the wall-clock bottleneck for
+large n; this suite tracks (a) how the blocked/pallas stage-1 forms compare
+to dense, and (b) what the stream / fused bridges cost relative to dense
+materialization — the trade the MI300A unified-memory literature says
+decides memory-heavy pipelines on APU-class parts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import pipeline
+from repro.utils.timing import time_fn
+
+
+def _study(n, d, g=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    return jnp.asarray(x), jnp.asarray(grouping)
+
+
+def run(emit):
+    # stage 1 head-to-head: dense vs blocked vs pallas (interpret off TPU)
+    n, d = 512, 128
+    x, grouping = _study(n, d)
+    for name in ("braycurtis.dense", "braycurtis.blocked",
+                 "euclidean.dense", "euclidean.blocked"):
+        spec = pipeline.get(name)
+        _, _, dense_fn = spec.bound()
+        fn = jax.jit(dense_fn)
+        t = time_fn(fn, x, iters=3, warmup=1)
+        emit(f"pipeline/dist_{name}", t * 1e6,
+             f"n={n} d={d} gb_s={(4*n*n)/t/1e9:.2f}")
+
+    # full pipeline under each bridge (one plan each)
+    perms = 199
+    for mat in ("dense", "stream", "fused"):
+        t0 = time.perf_counter()
+        res = pipeline.pipeline(x, grouping, metric="braycurtis",
+                                n_perms=perms, materialize=mat,
+                                key=jax.random.key(0))
+        jax.block_until_ready(res.f_perms)
+        t = time.perf_counter() - t0
+        emit(f"pipeline/e2e_{mat}", t * 1e6,
+             f"n={n} perms={perms} perms_s={perms/t:.0f} "
+             f"p={float(res.p_value):.3f}")
+
+    # batched studies through one plan (serving scenario)
+    s_count, nb = 4, 128
+    xs = jnp.stack([_study(nb, 64, seed=s)[0] for s in range(s_count)])
+    gs = jnp.stack([_study(nb, 64, seed=s)[1] for s in range(s_count)])
+    t0 = time.perf_counter()
+    many = pipeline.pipeline_many(xs, gs, n_groups=8, metric="braycurtis",
+                                  n_perms=99, key=jax.random.key(0))
+    jax.block_until_ready(many.f_perms)
+    t = time.perf_counter() - t0
+    emit("pipeline/many_4x128", t * 1e6,
+         f"studies={s_count} perms=99 studies_s={s_count/t:.1f}")

@@ -28,12 +28,14 @@ import traceback
 import jax
 
 from benchmarks import (fig1_sw_variants, permanova_roofline,
-                        roofline_report, stream_triad, sweep_scale)
+                        pipeline_scale, roofline_report, stream_triad,
+                        sweep_scale)
 
 SUITES = {
     "fig1": fig1_sw_variants.run,
     "stream": stream_triad.run,
     "sweep": sweep_scale.run,
+    "pipeline": pipeline_scale.run,
     "pa_roofline": permanova_roofline.run,
     "roofline": roofline_report.run,
 }

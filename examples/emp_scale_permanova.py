@@ -1,10 +1,11 @@
 """EMP-scale PERMANOVA pipeline (scaled to the host).
 
 The paper's benchmark: a 25145^2 UniFrac matrix x 3999 permutations on one
-MI300A. This example runs the same pipeline shape — distance matrix ->
-thousands of permutations -> p-value — through the hardware-aware engine:
-the planner picks the s_W dataflow for this backend, the streaming
-scheduler executes a large permutation sweep in fixed-memory chunks, and
+MI300A. This example runs the same shape — abundance table -> distances ->
+thousands of permutations -> p-value — through the pipeline subsystem: ONE
+joint plan picks the distance impl, the materialization bridge (dense /
+stream / fused), and the s_W dataflow for this backend; the streaming
+scheduler executes a large permutation sweep in fixed-memory chunks; and
 (when a device mesh is available) the distributed runner shards the same
 job over every local device. Pass --full on a real cluster for the paper's
 exact size.
@@ -21,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import engine
+from repro import engine, pipeline
 from repro.core import fstat, permutations
 from repro.core.distance import distance_matrix
 from repro.data.microbiome import synthetic_study
@@ -47,15 +48,12 @@ def main():
     print(f"[1/4] building study: n={n} features={args.features}")
     x, grouping = synthetic_study(n, args.features, args.groups,
                                   effect_size=1.5, seed=0)
-    t0 = time.time()
-    dm = distance_matrix(jnp.asarray(x), "braycurtis")
-    jax.block_until_ready(dm)
-    print(f"      distance matrix in {time.time()-t0:.1f}s")
 
-    print("[2/4] engine-planned PERMANOVA (impl chosen for this backend)")
+    print("[2/4] pipeline: features -> p-value under ONE joint plan")
     t0 = time.time()
-    res = engine.run(dm, jnp.asarray(grouping), n_perms=perms,
-                     key=jax.random.key(0))
+    res = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                            metric="braycurtis", n_perms=perms,
+                            key=jax.random.key(0))
     jax.block_until_ready(res.f_perms)
     dt = time.time() - t0
     print(f"      plan: {res.plan}")
@@ -63,21 +61,22 @@ def main():
           f"({res.n_perms/dt:.0f} perms/s)  F={float(res.f_stat):.4f} "
           f"p={float(res.p_value):.4f}")
 
-    print(f"[3/4] streaming scheduler: {args.stream_perms} permutations "
-          f"under a {args.budget_mb:.0f} MiB label budget")
+    print(f"[3/4] fused streaming pipeline: {args.stream_perms} permutations "
+          f"under a {args.budget_mb:.0f} MiB label budget, (n, n) matrix "
+          "never materialized")
     t0 = time.time()
-    res_s = engine.run(dm, jnp.asarray(grouping), n_perms=args.stream_perms,
-                       key=jax.random.key(0),
-                       memory_budget_bytes=args.budget_mb * 2**20)
+    res_s = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                              metric="braycurtis",
+                              n_perms=args.stream_perms,
+                              key=jax.random.key(0), materialize="fused",
+                              memory_budget_bytes=args.budget_mb * 2**20)
     dt = time.time() - t0
     print(f"      plan: {res_s.plan}")
-    mode = ("chunked — no (n_perms, n) label tensor ever materialized"
-            if "stream" in res_s.plan else
-            "single batch — the sweep fit the budget outright")
     print(f"      {res_s.n_perms} permutations in {dt:.1f}s "
           f"({res_s.n_perms/dt:.0f} perms/s)  p={float(res_s.p_value):.4f} "
-          f"— {mode}")
+          f"— row slabs fed permutation chunks directly")
 
+    dm = distance_matrix(jnp.asarray(x), "braycurtis")
     print("[4/4] distributed + elastic layers")
     try:
         from repro.core.distributed import permanova_distributed

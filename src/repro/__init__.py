@@ -5,6 +5,9 @@ Layers:
   core/       PERMANOVA statistics engine (the paper's contribution)
   engine/     hardware-aware execution layer: s_W impl registry,
               planner/autotuner, streaming permutation scheduler
+  pipeline/   end-to-end features->p-value subsystem: distance impl
+              registry, joint two-stage planner, dense/stream/fused
+              materialization bridges, batched pipeline_many
   kernels/    Pallas TPU kernels for the hot loops (+ jnp oracles)
   models/     assigned LM-architecture zoo (dense / MoE / SSM / hybrid / enc-dec)
   sharding/   logical-axis -> mesh partition rules

@@ -3,14 +3,24 @@
 The paper's input was an Unweighted-UniFrac matrix over EMP data (computed by
 a separate tool, ref [9]); the PERMANOVA code path consumes an arbitrary
 symmetric zero-diagonal matrix. We provide the standard ecology metrics on
-abundance tables plus a blockwise driver so 100k-sample tables stream in row
-blocks instead of materializing (n, n, d) intermediates.
+abundance tables in a factored form the pipeline subsystem composes:
+
+  prepare(x)        one-off (n, d) feature transform (clr for Aitchison,
+                    presence/absence cast for Jaccard; identity otherwise)
+  rows(xb, xprep)   distances for a block of rows against ALL samples —
+                    the unit both the dense builders and the pipeline's
+                    streaming / fused paths consume
+
+Dense metrics (`euclidean`, `braycurtis`, ...) remain the public API and are
+now thin drivers over the row primitives, so a 100k-sample table can stream
+in row blocks instead of materializing (n, n, d) intermediates, and the
+pipeline registry (repro.pipeline.registry) exposes the same math behind
+dense / blocked / Pallas implementations with capability metadata.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,41 +28,91 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+# ---------------------------------------------------------------------------
+# Row primitives: rows(xb, xprep) -> (block, n) distances.
+# ---------------------------------------------------------------------------
+
+def _identity_prepare(x: Array) -> Array:
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+def clr_prepare(x: Array, *, pseudocount: float = 0.5) -> Array:
+    """Centered log-ratio transform (Aitchison geometry on compositions)."""
+    logx = jnp.log(jnp.asarray(x, jnp.float32) + pseudocount)
+    return logx - jnp.mean(logx, axis=-1, keepdims=True)
+
+
+def presence_prepare(x: Array) -> Array:
+    """Presence/absence cast for binary metrics (kept float32 so the same
+    row kernels and Pallas tiles apply)."""
+    return (jnp.asarray(x) > 0).astype(jnp.float32)
+
+
+def euclidean_rows(xb: Array, x: Array) -> Array:
+    """(block, n) Euclidean distances via the Gram trick (MXU-friendly)."""
+    sq_b = jnp.sum(xb * xb, axis=-1)[:, None]
+    sq = jnp.sum(x * x, axis=-1)[None, :]
+    d2 = sq_b + sq - 2.0 * (xb @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def braycurtis_rows(xb: Array, x: Array) -> Array:
+    """(block, n) Bray-Curtis: sum|xi-xj| / sum(xi+xj)."""
+    num = jnp.sum(jnp.abs(xb[:, None, :] - x[None, :, :]), axis=-1)
+    den = jnp.sum(xb[:, None, :] + x[None, :, :], axis=-1)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def jaccard_rows(xb: Array, x: Array) -> Array:
+    """(block, n) binary Jaccard on presence/absence (prepare casts x > 0;
+    float multiply = AND, so the same kernel shape works on the MXU)."""
+    inter = xb @ x.T                                   # |A & B|
+    card_b = jnp.sum(xb, axis=-1)[:, None]
+    card = jnp.sum(x, axis=-1)[None, :]
+    union = card_b + card - inter                      # |A | B|
+    return 1.0 - inter / jnp.maximum(union, 1.0)
+
+
+class MetricDef(NamedTuple):
+    """Factored metric: one-off feature transform + row-block kernel."""
+    prepare: Callable[[Array], Array]
+    rows: Callable[[Array, Array], Array]
+
+
+ROW_METRICS: dict[str, MetricDef] = {
+    "euclidean": MetricDef(_identity_prepare, euclidean_rows),
+    "braycurtis": MetricDef(_identity_prepare, braycurtis_rows),
+    "jaccard": MetricDef(presence_prepare, jaccard_rows),
+    "aitchison": MetricDef(clr_prepare, euclidean_rows),
+}
+
+
+# ---------------------------------------------------------------------------
+# Dense metrics (public API) — drivers over the row primitives.
+# ---------------------------------------------------------------------------
+
 def euclidean(x: Array) -> Array:
-    """Pairwise Euclidean via the Gram trick (MXU-friendly)."""
-    sq = jnp.sum(x * x, axis=-1)
-    g = x @ x.T
-    d2 = sq[:, None] + sq[None, :] - 2.0 * g
-    d2 = jnp.maximum(d2, 0.0)
-    d = jnp.sqrt(d2)
-    return _zero_diag(d)
+    """Pairwise Euclidean via the Gram trick (single full-matrix form)."""
+    xp = _identity_prepare(x)
+    return _zero_diag(euclidean_rows(xp, xp))
 
 
 def braycurtis(x: Array, *, block: int = 256) -> Array:
-    """Bray-Curtis dissimilarity: sum|xi-xj| / sum(xi+xj), blocked over rows."""
-    def rows(xb):
-        num = jnp.sum(jnp.abs(xb[:, None, :] - x[None, :, :]), axis=-1)
-        den = jnp.sum(xb[:, None, :] + x[None, :, :], axis=-1)
-        return num / jnp.maximum(den, 1e-30)
-    return _zero_diag(_blocked_rows(rows, x, block))
+    """Bray-Curtis dissimilarity, blocked over rows (bounds peak memory)."""
+    xp = _identity_prepare(x)
+    return _zero_diag(_blocked_rows(braycurtis_rows, xp, block))
 
 
 def jaccard(x: Array, *, block: int = 256) -> Array:
     """Binary Jaccard distance on presence/absence (x > 0)."""
-    b = (x > 0)
-    def rows(bb):
-        inter = jnp.sum(bb[:, None, :] & b[None, :, :], axis=-1)
-        union = jnp.sum(bb[:, None, :] | b[None, :, :], axis=-1)
-        return 1.0 - inter / jnp.maximum(union, 1)
-    return _zero_diag(_blocked_rows(rows, b, block).astype(jnp.float32))
+    xp = presence_prepare(x)
+    return _zero_diag(_blocked_rows(jaccard_rows, xp, block))
 
 
 def aitchison(x: Array, *, pseudocount: float = 0.5) -> Array:
     """Aitchison distance: Euclidean over clr-transformed compositions."""
-    xp = x + pseudocount
-    logx = jnp.log(xp)
-    clr = logx - jnp.mean(logx, axis=-1, keepdims=True)
-    return euclidean(clr)
+    xp = clr_prepare(x, pseudocount=pseudocount)
+    return _zero_diag(euclidean_rows(xp, xp))
 
 
 METRICS: dict[str, Callable] = {
@@ -82,12 +142,11 @@ def _blocked_rows(row_fn: Callable, x: Array, block: int) -> Array:
         xp = jnp.pad(x, widths)
     else:
         xp = x
-    blocks = xp.reshape(-1, block, *x.shape[1:])
 
     def body(_, xb):
-        return None, row_fn(xb)
+        return None, row_fn(xb, x)
 
-    _, rows = jax.lax.scan(body, None, blocks)
+    _, rows = jax.lax.scan(body, None, xp.reshape(-1, block, *x.shape[1:]))
     return rows.reshape(-1, n)[:n]
 
 

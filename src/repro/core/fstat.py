@@ -192,26 +192,43 @@ def sw_tiled(mat2: Array, groupings: Array, inv_group_sizes: Array,
 # Beyond-paper: one-hot matmul (MXU) formulation.
 # ---------------------------------------------------------------------------
 
+def onehot_perm_factors(groupings_block: Array,
+                        inv_group_sizes: Array, dtype) -> Array:
+    """E[p,:,g] = sqrt(w_g) * 1[g_p[i] == g] — the (P, n, G) one-hot factor
+    shared by every matmul-form s_W variant."""
+    n_groups = inv_group_sizes.shape[0]
+    sqrt_w = jnp.sqrt(inv_group_sizes).astype(dtype)
+    e = jax.nn.one_hot(groupings_block, n_groups, dtype=dtype)
+    return e * sqrt_w[None, None, :]
+
+
+def sw_matmul_contract(mat2_rows: Array, e: Array, e_rows: Array) -> Array:
+    """The matmul-form contraction over a block of mat2 rows.
+
+    s[p] = 1/2 * sum_ig (M2_rows @ E[p])[i,g] * E_rows[p,i,g]
+
+    e: (P, n, G) column factors over ALL samples; e_rows: (P, n_local, G)
+    row factors aligned with mat2_rows (e itself for the full matrix, a
+    row-offset slice for sharded/fused partials). The distance diagonal is
+    zero, so the full i!=j sum equals twice the triangle sum; summing the
+    partials over disjoint row blocks reconstructs the global statistic.
+    The contraction reuses every M2 element across P*G output columns —
+    this is the MXU-native dataflow.
+    """
+    p, n, g = e.shape
+    n_local = mat2_rows.shape[0]
+    e2d = jnp.transpose(e, (1, 0, 2)).reshape(n, p * g)    # (n, P*G)
+    y = mat2_rows @ e2d                                    # on MXU
+    s = jnp.sum(y.reshape(n_local, p, g)
+                * jnp.transpose(e_rows, (1, 0, 2)), axis=(0, 2))
+    return 0.5 * s
+
+
 def sw_matmul_block(mat2: Array, groupings_block: Array,
                     inv_group_sizes: Array) -> Array:
-    """s_W for a block of P permutations via one big matmul.
-
-    E[p,:,g] = sqrt(w_g) * 1[g_p[i] == g]            (P, n, G)
-    s_W[p]   = 1/2 * sum_ig (M2 @ E[p])[i,g] * E[p,i,g]
-
-    The diagonal of `mat` is zero so the full i!=j sum equals twice the
-    triangle sum. The contraction M2 @ E reuses every M2 element across
-    P*G output columns — this is the MXU-native dataflow.
-    """
-    n_groups = inv_group_sizes.shape[0]
-    sqrt_w = jnp.sqrt(inv_group_sizes).astype(mat2.dtype)
-    e = jax.nn.one_hot(groupings_block, n_groups, dtype=mat2.dtype)  # (P,n,G)
-    e = e * sqrt_w[None, None, :]
-    p, n, g = e.shape
-    e2d = jnp.transpose(e, (1, 0, 2)).reshape(n, p * g)    # (n, P*G)
-    y = mat2 @ e2d                                          # (n, P*G) on MXU
-    s = jnp.sum(y.reshape(n, p, g) * jnp.transpose(e, (1, 0, 2)), axis=(0, 2))
-    return 0.5 * s
+    """s_W for a block of P permutations via one big matmul."""
+    e = onehot_perm_factors(groupings_block, inv_group_sizes, mat2.dtype)
+    return sw_matmul_contract(mat2, e, e)
 
 
 def sw_matmul(mat2: Array, groupings: Array, inv_group_sizes: Array,
@@ -268,18 +285,12 @@ def sw_matmul_rows_partial(mat2_rows: Array, row_offset: Array,
     reconstructs the global statistic exactly (zero diagonal).
     """
     n_local, n = mat2_rows.shape
-    n_groups = inv_group_sizes.shape[0]
-    sqrt_w = jnp.sqrt(inv_group_sizes).astype(mat2_rows.dtype)
 
     def body(_, gb):  # gb: (P, n)
-        e = jax.nn.one_hot(gb, n_groups, dtype=mat2_rows.dtype) * sqrt_w
+        e = onehot_perm_factors(gb, inv_group_sizes, mat2_rows.dtype)
         p, _, g = e.shape
-        e2d = jnp.transpose(e, (1, 0, 2)).reshape(n, p * g)
-        y = mat2_rows @ e2d                                   # (n_local, P*G)
         e_rows = jax.lax.dynamic_slice(e, (0, row_offset, 0), (p, n_local, g))
-        s = jnp.sum(y.reshape(n_local, p, g)
-                    * jnp.transpose(e_rows, (1, 0, 2)), axis=(0, 2))
-        return None, 0.5 * s
+        return None, sw_matmul_contract(mat2_rows, e, e_rows)
 
     n_perms = groupings.shape[0]
     perm_block = min(perm_block, n_perms)

@@ -82,11 +82,20 @@ def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
               sw_fn: Optional[Callable] = None,
               memory_budget_bytes: Optional[float] = None,
               chunk: Optional[int] = None,
+              metric: Optional[str] = None,
               autotune: bool = False) -> PermanovaResult:
     """Run the full PERMANOVA test on one host (thin engine wrapper).
 
-    dm:        (n, n) symmetric distance matrix, zero diagonal.
+    dm:        (n, n) symmetric distance matrix, zero diagonal — OR a raw
+               (n, d) abundance table. Features route through the pipeline
+               subsystem (repro.pipeline), which plans distance
+               construction and the permutation sweep jointly. A non-square
+               2-D input is always treated as features; a square input is
+               treated as a distance matrix unless `metric` is given.
     grouping:  (n,) int labels in [0, n_groups).
+    metric:    distance metric for the features path ('braycurtis',
+               'euclidean', 'jaccard', 'aitchison'). Passing it forces the
+               pipeline path even for square inputs.
     sw_impl:   'auto' (hardware-aware planner; the paper's CPU-tiled vs
                GPU-brute result) or any repro.engine.registry name:
                'brute' | 'tiled' | 'matmul' | 'pallas_{brute,permblock,matmul}'.
@@ -96,7 +105,37 @@ def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
                run through the engine's streaming permutation scheduler.
     """
     from repro import engine  # deferred: engine imports this module
-    return engine.run(dm, grouping, n_perms=n_perms, key=key,
+    arr = jnp.asarray(dm)
+    is_features = metric is not None or (
+        arr.ndim == 2 and arr.shape[0] != arr.shape[1])
+    if is_features:
+        if sw_fn is not None:
+            raise ValueError("sw_fn is not supported on the features path; "
+                             "precompute the distance matrix instead")
+        from repro import pipeline  # deferred: pipeline imports this module
+        return pipeline.pipeline(
+            arr, grouping, metric=metric or "braycurtis", n_perms=n_perms,
+            key=key, n_groups=n_groups, sw_impl=sw_impl,
+            memory_budget_bytes=memory_budget_bytes, chunk=chunk,
+            autotune=autotune)
+    if arr.ndim == 2 and arr.shape[0] >= 2:
+        # A square feature table would silently take this branch — an O(n)
+        # sampled structural check catches that without materializing an
+        # (n, n) transient on the hot path (an (n, n) abundance table is
+        # essentially never symmetric with a zero diagonal).
+        n = arr.shape[0]
+        rows = jnp.asarray([0, n // 2, n - 1])
+        diag_err = float(jnp.max(jnp.abs(arr[rows, rows])))
+        sym_err = float(jnp.max(jnp.abs(arr[rows, :] - arr[:, rows].T)))
+        if diag_err > 1e-5 or sym_err > 1e-4:
+            import warnings
+            warnings.warn(
+                f"square input does not look like a distance matrix "
+                f"(sampled diag max {diag_err:.3g}, asymmetry max "
+                f"{sym_err:.3g}); if this is an (n, d) feature table with "
+                "n == d, pass metric=... to route it through the pipeline",
+                stacklevel=2)
+    return engine.run(arr, grouping, n_perms=n_perms, key=key,
                       n_groups=n_groups, impl=sw_impl, sw_fn=sw_fn,
                       memory_budget_bytes=memory_budget_bytes, chunk=chunk,
                       autotune=autotune)

@@ -33,14 +33,23 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
         impl: str = "auto", sw_fn: Optional[Callable] = None,
         memory_budget_bytes: Optional[float] = None,
         chunk: Optional[int] = None, autotune: bool = False,
-        backend: Optional[str] = None) -> "PermanovaResult":
+        backend: Optional[str] = None, tuning: Optional[dict] = None,
+        squared: bool = False,
+        s_t: Optional[float] = None) -> "PermanovaResult":
     """Full PERMANOVA through the hardware-aware engine.
 
     impl:  'auto' (planner heuristics; `autotune=True` upgrades to the
            empirical measure-and-cache pass) or any registry name.
+    tuning: override the chosen impl's tuning knobs (unknown keys ignored).
     sw_fn: escape hatch — bypass the registry with a custom batch callable.
     memory_budget_bytes / chunk: bound the live label tensor; sweeps larger
            than the chunk run through the streaming scheduler.
+    squared: `dm` is already the element-squared matrix mat2 = D∘D (the
+           pipeline's streaming builder produces mat2 directly so the raw
+           distance matrix is never resident alongside it).
+    s_t:   precomputed total sum of squares (the streaming builder
+           accumulates it as a Gower marginal); skips one full-matrix
+           reduction when provided.
     """
     if key is None:
         key = jax.random.key(0)
@@ -49,7 +58,7 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
     n = dm.shape[0]
     if n_groups is None:
         n_groups = int(jnp.max(grouping)) + 1
-    mat2 = dm * dm
+    mat2 = dm if squared else dm * dm
     inv_gs = permutations.inv_group_sizes(grouping, n_groups)
     n_total = n_perms + 1
 
@@ -74,7 +83,7 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
             tuned = True
         pl = planner.plan(n, n_total, n_groups, backend=backend, impl=pinned,
                           memory_budget_bytes=memory_budget_bytes,
-                          chunk=chunk)
+                          chunk=chunk, tuning=tuning)
         if tuned:
             pl = dataclasses.replace(
                 pl, reason="empirical autotune winner (measured on operands)")
@@ -88,7 +97,7 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
         s_w_all, stats = scheduler.sw_batch(
             mat2, grouping, inv_gs, key, n_total, fn)
 
-    s_t = s_total(mat2)
+    s_t = s_total(mat2) if s_t is None else jnp.float32(s_t)
     f_all = f_from_sw(s_w_all, s_t, n, n_groups)
     return PermanovaResult(
         f_stat=f_all[0],

@@ -28,6 +28,8 @@ The plan also fixes the streaming-permutation chunk: the scheduler executes
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 import warnings
 from typing import Dict, Optional, Sequence, Tuple
@@ -64,7 +66,13 @@ def default_backend() -> str:
     return jax.default_backend()
 
 
-def _pick_impl(backend: str, n: int) -> Tuple[str, str]:
+def _pick_impl(backend: str, n: int,
+               n_groups: Optional[int] = None) -> Tuple[str, str]:
+    if n_groups is not None:
+        measured = measured_impl(backend, n, n_groups)
+        if measured is not None:
+            return measured, ("persisted autotune measurement "
+                              f"({autotune_cache_path()})")
     if backend == "gpu":
         return "brute", "GPU cores prefer brute force (paper Fig. 1)"
     if backend == "tpu":
@@ -119,7 +127,7 @@ def plan(n: int, n_perms: int, n_groups: int, *,
     """
     backend = backend or default_backend()
     if impl is None:
-        name, reason = _pick_impl(backend, n)
+        name, reason = _pick_impl(backend, n, n_groups)
     else:
         name, reason = impl, "caller-pinned impl"
     spec = registry.get(name)
@@ -135,10 +143,16 @@ def plan(n: int, n_perms: int, n_groups: int, *,
 
 
 # ---------------------------------------------------------------------------
-# Empirical autotuner: measure-and-cache on the real operands.
+# Empirical autotuner: measure-and-cache on the real operands. Winners are
+# memoized in-process AND persisted per host to a JSON cache, which is
+# loaded lazily at first plan() and fed back into the heuristic defaults —
+# so a serving host pays each measurement once EVER, not once per process.
 # ---------------------------------------------------------------------------
 
 _AUTOTUNE_CACHE: Dict[tuple, str] = {}
+_PERSIST: Optional[Dict[str, dict]] = None   # lazy-loaded disk cache
+_DIRTY: set = set()                          # keys THIS process measured
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 
 def _bucket(n: int) -> int:
@@ -147,6 +161,100 @@ def _bucket(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def autotune_cache_path() -> Optional[str]:
+    """Per-host cache file; $REPRO_AUTOTUNE_CACHE overrides ('off' disables)."""
+    override = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if override:
+        return None if override.lower() in ("off", "none", "0") else override
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def _persist_key(backend: str, n: int, n_groups: int) -> str:
+    return f"{backend}|n{_bucket(n)}|g{n_groups}"
+
+
+def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
+    """Measurements persisted by previous processes on this host."""
+    global _PERSIST
+    if _PERSIST is not None and not reload:
+        return _PERSIST
+    _PERSIST = {}
+    _DIRTY.clear()   # fresh view: prior writes belong to the old file
+    path = autotune_cache_path()
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                _PERSIST = {k: v for k, v in data.items()
+                            if isinstance(v, dict) and "impl" in v}
+        except (OSError, ValueError):  # corrupt/unreadable: measure afresh
+            pass
+    return _PERSIST
+
+
+def _save_autotune_cache() -> None:
+    global _PERSIST
+    path = autotune_cache_path()
+    if not path or _PERSIST is None:
+        return
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # Merge-on-save: re-read and overlay only the keys THIS process
+        # measured (not stale loaded copies). Best-effort, not locked — two
+        # processes replacing simultaneously can still drop one bucket
+        # (TOCTOU between the read and os.replace); the loser simply
+        # re-measures on its next run.
+        on_disk: Dict[str, dict] = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+                if isinstance(data, dict):
+                    on_disk = {k: v for k, v in data.items()
+                               if isinstance(v, dict) and "impl" in v}
+            except (OSError, ValueError):
+                pass
+        ours = {k: v for k, v in _PERSIST.items() if k in _DIRTY}
+        _PERSIST = {**on_disk, **ours}
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(_PERSIST, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)                # atomic on POSIX
+    except OSError:  # read-only home etc. — cache is best-effort
+        pass
+
+
+def _default_candidates(backend: str):
+    cands = registry.names(kind="jnp")
+    if backend == "tpu":
+        cands = list(cands) + registry.names(kind="pallas")
+    return cands
+
+
+def measured_impl(backend: str, n: int, n_groups: int,
+                  candidates: Optional[Sequence[str]] = None) -> Optional[str]:
+    """Persisted winner for this (backend, shape-bucket, groups), if any.
+
+    Only trusted when it was measured over (at least) the requested
+    candidate set — a winner from a restricted shoot-out must not
+    short-circuit a broader one — and when the impl is still registered."""
+    entry = load_autotune_cache().get(_persist_key(backend, n, n_groups))
+    if not entry:
+        return None
+    wanted = set(candidates if candidates is not None
+                 else _default_candidates(backend))
+    if not wanted <= set(entry.get("candidates", ())):
+        return None
+    name = entry.get("impl")
+    try:
+        registry.get(name)
+    except KeyError:
+        return None
+    return name
 
 
 def autotune(mat2, grouping, inv_gs, *,
@@ -164,17 +272,21 @@ def autotune(mat2, grouping, inv_gs, *,
     n = int(mat2.shape[0])
     n_groups = int(inv_gs.shape[0])
     if candidates is None:
-        candidates = registry.names(kind="jnp")
-        if backend == "tpu":
-            candidates = list(candidates) + registry.names(kind="pallas")
+        candidates = _default_candidates(backend)
     cache_key = (backend, _bucket(n), n_groups, tuple(sorted(candidates)))
-    if use_cache and cache_key in _AUTOTUNE_CACHE:
-        return _AUTOTUNE_CACHE[cache_key]
+    if use_cache:
+        if cache_key in _AUTOTUNE_CACHE:
+            return _AUTOTUNE_CACHE[cache_key]
+        persisted = measured_impl(backend, n, n_groups, candidates)
+        if persisted in candidates:
+            _AUTOTUNE_CACHE[cache_key] = persisted
+            return persisted
 
     if key is None:
         key = jax.random.key(0)
     gperms = permutations.permutation_batch(key, grouping, 0, sample_perms)
     best_name, best_t = None, float("inf")
+    times_us: Dict[str, float] = {}
     for name in candidates:
         fn = jax.jit(registry.get(name).bound())
         try:
@@ -184,9 +296,26 @@ def autotune(mat2, grouping, inv_gs, *,
             t = time.perf_counter() - t0
         except Exception:  # noqa: BLE001 — an impl may not lower here
             continue
+        times_us[name] = round(t * 1e6, 1)
         if t < best_t:
             best_name, best_t = name, t
     if best_name is None:
         raise RuntimeError("autotune: no candidate impl ran successfully")
-    _AUTOTUNE_CACHE[cache_key] = best_name
+    if use_cache:
+        _AUTOTUNE_CACHE[cache_key] = best_name
+        pkey = _persist_key(backend, n, n_groups)
+        prior = load_autotune_cache().get(pkey)
+        # never let a restricted shoot-out overwrite a broader measurement
+        if prior is None or not \
+                set(candidates) < set(prior.get("candidates", ())):
+            _DIRTY.add(pkey)
+            load_autotune_cache()[pkey] = {
+                "impl": best_name,
+                "candidates": sorted(candidates),
+                "times_us": times_us,
+                "n": n,
+                "n_groups": n_groups,
+                "sample_perms": sample_perms,
+            }
+            _save_autotune_cache()
     return best_name

@@ -6,6 +6,12 @@ metrics). Tiling: grid (row-tile, col-tile, feature-block); the feature axis
 is innermost so numerator/denominator accumulate in VMEM and the final
 divide/sqrt happens once on the last feature step.
 
+The kernels are rectangular: `xr` (nr, d) rows against `xc` (nc, d) columns.
+The dense (n, n) matrix is the xr is xc special case; the pipeline's
+streaming builder feeds row slabs (block, d) against the full table so the
+distance stage can produce `D²` row blocks without ever materializing the
+square matrix (repro.pipeline.streaming).
+
 Euclidean uses the MXU (gram-trick inside the tile); Bray-Curtis is a pure
 VPU streaming kernel (|xi - xj| has no matmul form).
 """
@@ -40,10 +46,11 @@ def _braycurtis_body(xr_ref, xc_ref, out_ref, num_ref, den_ref, *,
         out_ref[...] = num_ref[...] / jnp.maximum(den_ref[...], 1e-30)
 
 
-def braycurtis_pallas(x, *, tile_r=128, tile_c=128, feat_block=128,
+def braycurtis_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
                       interpret=True):
-    n, d = x.shape
-    grid = (n // tile_r, n // tile_c, d // feat_block)
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    grid = (nr // tile_r, nc // tile_c, d // feat_block)
     kernel = functools.partial(_braycurtis_body, n_feat_blocks=grid[2])
     out, _, _ = pl.pallas_call(
         kernel,
@@ -58,12 +65,12 @@ def braycurtis_pallas(x, *, tile_r=128, tile_c=128, feat_block=128,
             pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, n), jnp.float32),  # distances
-            jax.ShapeDtypeStruct((n, n), jnp.float32),  # numerator accum
-            jax.ShapeDtypeStruct((n, n), jnp.float32),  # denominator accum
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # distances
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # numerator accum
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # denominator accum
         ],
         interpret=interpret,
-    )(x, x)
+    )(xr, xc)
     return out
 
 
@@ -88,10 +95,11 @@ def _euclidean_body(xr_ref, xc_ref, out_ref, acc_ref, *, n_feat_blocks):
         out_ref[...] = jnp.sqrt(jnp.maximum(acc_ref[...], 0.0))
 
 
-def euclidean_pallas(x, *, tile_r=128, tile_c=128, feat_block=128,
+def euclidean_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
                      interpret=True):
-    n, d = x.shape
-    grid = (n // tile_r, n // tile_c, d // feat_block)
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    grid = (nr // tile_r, nc // tile_c, d // feat_block)
     kernel = functools.partial(_euclidean_body, n_feat_blocks=grid[2])
     out, _ = pl.pallas_call(
         kernel,
@@ -105,9 +113,9 @@ def euclidean_pallas(x, *, tile_r=128, tile_c=128, feat_block=128,
             pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, n), jnp.float32),
-            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),
         ],
         interpret=interpret,
-    )(x, x)
+    )(xr, xc)
     return out

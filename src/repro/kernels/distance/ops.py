@@ -1,4 +1,12 @@
-"""jit'd wrappers for the pairwise-distance Pallas kernels (with padding)."""
+"""jit'd wrappers for the pairwise-distance Pallas kernels (with padding).
+
+Two entry points:
+
+  pairwise_distance       (n, n) dense matrix from (n, d) features
+  pairwise_distance_rows  (block, n) row slab — the streaming unit the
+                          pipeline subsystem consumes to build D² blockwise
+                          without materializing the full matrix
+"""
 
 from __future__ import annotations
 
@@ -8,6 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.distance import kernel as _k
+
+_KERNELS = {
+    "braycurtis": _k.braycurtis_pallas,
+    "euclidean": _k.euclidean_pallas,
+}
+PALLAS_METRICS = tuple(_KERNELS)
 
 
 def _on_tpu() -> bool:
@@ -32,6 +46,8 @@ def pairwise_distance(x, *, metric="braycurtis", tile_r=128, tile_c=128,
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if metric not in _KERNELS:
+        raise ValueError(f"unknown metric {metric!r}")
     n, d = x.shape
     tile_r = _pick(n, tile_r)
     tile_c = _pick(n, tile_c)
@@ -39,13 +55,37 @@ def pairwise_distance(x, *, metric="braycurtis", tile_r=128, tile_c=128,
     n_pad = (-n) % max(tile_r, tile_c)
     d_pad = (-d) % feat_block
     xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
-    if metric == "braycurtis":
-        out = _k.braycurtis_pallas(xp, tile_r=tile_r, tile_c=tile_c,
-                                   feat_block=feat_block, interpret=interpret)
-    elif metric == "euclidean":
-        out = _k.euclidean_pallas(xp, tile_r=tile_r, tile_c=tile_c,
-                                  feat_block=feat_block, interpret=interpret)
-    else:
-        raise ValueError(f"unknown metric {metric!r}")
+    out = _KERNELS[metric](xp, xp, tile_r=tile_r, tile_c=tile_c,
+                           feat_block=feat_block, interpret=interpret)
     out = out[:n, :n]
     return out * (1.0 - jnp.eye(n, dtype=out.dtype))  # exact zero diagonal
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tile_r", "tile_c",
+                                             "feat_block", "interpret"))
+def pairwise_distance_rows(x_rows, x, *, metric="braycurtis", tile_r=128,
+                           tile_c=128, feat_block=128,
+                           interpret: bool | None = None):
+    """(block, n) distances of a row slab against the full table.
+
+    NOTE: no diagonal zeroing — the slab does not know its global row
+    offset; the streaming consumer masks the (global_row == col) entries
+    (repro.pipeline.streaming does this while squaring into D²).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if metric not in _KERNELS:
+        raise ValueError(f"unknown metric {metric!r}")
+    b, d = x_rows.shape
+    n = x.shape[0]
+    tile_r = _pick(b, tile_r)
+    tile_c = _pick(n, tile_c)
+    feat_block = _pick(d, feat_block)
+    b_pad = (-b) % tile_r
+    n_pad = (-n) % tile_c
+    d_pad = (-d) % feat_block
+    xr = jnp.pad(x_rows.astype(jnp.float32), ((0, b_pad), (0, d_pad)))
+    xc = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
+    out = _KERNELS[metric](xr, xc, tile_r=tile_r, tile_c=tile_c,
+                           feat_block=feat_block, interpret=interpret)
+    return out[:b, :n]

@@ -9,6 +9,11 @@ hardware-aware execution engine.
   PYTHONPATH=src python -m repro.launch.permanova \
       --samples 512 --perms 100000 --impl auto --budget-mb 64
 
+  # full pipeline under one joint plan (distance stage + s_W planned
+  # together; --materialize fused never holds the (n, n) matrix):
+  PYTHONPATH=src python -m repro.launch.permanova \
+      --samples 2048 --from-features --materialize auto
+
 Scales from laptop smoke runs to the paper's EMP shape
 (--samples 25145 --perms 3999) on a real mesh.
 """
@@ -21,7 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import engine
+from repro import engine, pipeline
 from repro.core.distance import distance_matrix, validate_distance_matrix
 from repro.data.microbiome import synthetic_study
 
@@ -48,6 +53,20 @@ def main():
                          "stream in fixed-size chunks")
     ap.add_argument("--chunk", type=int, default=None,
                     help="pin the streaming chunk (perms per dispatch)")
+    ap.add_argument("--from-features", action="store_true",
+                    help="route through the pipeline subsystem: distance "
+                         "construction + s_W planned JOINTLY (stage-1 impl, "
+                         "materialization, chunking in one plan)")
+    ap.add_argument("--materialize", default="auto",
+                    choices=["auto", "dense", "stream", "fused"],
+                    help="pipeline bridge: materialize D, stream D^2 row "
+                         "blocks into one buffer, or fuse blocks straight "
+                         "into the permutation sweep (implies "
+                         "--from-features)")
+    ap.add_argument("--dist-impl", default="auto",
+                    help="pin the stage-1 distance impl (e.g. "
+                         "'braycurtis.blocked', 'euclidean.pallas'); "
+                         "'auto' = pipeline planner")
     ap.add_argument("--kernel", action="store_true",
                     help="legacy alias: maps brute/matmul to the Pallas "
                          "kernel variant (interpret mode off TPU)")
@@ -65,13 +84,38 @@ def main():
 
     x, grouping = synthetic_study(args.samples, args.features, args.groups,
                                   effect_size=args.effect, seed=args.seed)
+    budget = None if args.budget_mb is None else args.budget_mb * 2**20
+
+    if args.from_features or args.materialize != "auto" \
+            or args.dist_impl != "auto":
+        if args.distributed:
+            ap.error("--distributed is not supported with the pipeline "
+                     "path (--from-features/--materialize/--dist-impl); "
+                     "precompute the matrix or drop --distributed")
+        t0 = time.time()
+        res = pipeline.pipeline(
+            jnp.asarray(x), jnp.asarray(grouping), metric=args.metric,
+            n_perms=args.perms, key=jax.random.key(args.seed),
+            dist_impl=args.dist_impl, sw_impl=impl,
+            materialize=args.materialize, chunk=args.chunk,
+            memory_budget_bytes=budget, autotune=args.autotune)
+        jax.block_until_ready(res.f_perms)
+        t_pa = time.time() - t0
+        print(f"[permanova] n={args.samples} groups={args.groups} "
+              f"perms={res.n_perms} metric={args.metric} pipeline")
+        print(f"[permanova] plan: {res.plan}")
+        print(f"[permanova] features->p-value {t_pa:.2f}s "
+              f"({res.n_perms / t_pa:.1f} perms/s)")
+        print(f"[permanova] F={float(res.f_stat):.6g} "
+              f"p={float(res.p_value):.6g}")
+        return 0
+
     t0 = time.time()
     dm = distance_matrix(jnp.asarray(x), args.metric)
     checks = validate_distance_matrix(dm)
     assert checks["ok"], checks
     t_dm = time.time() - t0
 
-    budget = None if args.budget_mb is None else args.budget_mb * 2**20
     t0 = time.time()
     if args.distributed:
         from repro.core import permanova_distributed

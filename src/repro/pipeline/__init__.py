@@ -1,0 +1,31 @@
+"""End-to-end distance→PERMANOVA pipeline subsystem.
+
+Takes a raw abundance table (n, d) plus grouping labels all the way to
+F-statistics and p-values under ONE plan:
+
+  registry    every distance implementation (dense jnp metrics, blocked
+              row-streaming builders, Pallas tiled kernels) behind one
+              interface with capability metadata — the stage-1 mirror of
+              repro.engine.registry
+  planner     joint two-stage plans: distance impl + row block, the
+              materialization bridge (dense / stream / fused), and the
+              engine's s_W plan, decided together
+  streaming   the bridge implementations: mat2 row-block producer, the
+              never-resident-twice streaming builder (+ Gower marginals),
+              and the fused distance→s_W driver
+  api         pipeline() single study, pipeline_many() stacked studies
+
+Entry points routing here: core.permanova.permanova(features, metric=...),
+the launch CLI's --from-features, examples/emp_scale_permanova.py, and the
+pipeline benchmark suite.
+"""
+
+from repro.pipeline import api, planner, registry, streaming  # noqa: F401
+from repro.pipeline.api import pipeline, pipeline_many  # noqa: F401
+from repro.pipeline.planner import (DEFAULT_MATRIX_BUDGET_BYTES,  # noqa: F401
+                                    PipelinePlan, plan_pipeline)
+from repro.pipeline.registry import (DistanceImpl, get, metrics,  # noqa: F401
+                                     names)
+from repro.pipeline.streaming import (FusedStats, GowerStats,  # noqa: F401
+                                      build_mat2_streaming, fused_sw,
+                                      gower_center, mat2_row_blocks)

@@ -1,0 +1,206 @@
+"""Pipeline entry points: raw abundance table → F statistic and p-value.
+
+pipeline()        one study: (n, d) features + (n,) labels, all the way to
+                  the permutation p-value under one PipelinePlan.
+pipeline_many()   stacked studies through ONE plan (the serving scenario):
+                  (S, n, d) features + (S, n) labels.
+
+Both route stage 2 through the hardware-aware engine; stage 1 and the
+bridge (dense / stream / fused) come from this package. `permanova()`
+delegates here when handed features instead of a matrix, and the launch
+CLI exposes it as `--from-features`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.core import permutations
+from repro.core.permanova import (PermanovaResult, f_from_sw,
+                                  p_value_from_null)
+from repro.pipeline import planner as _planner
+from repro.pipeline import registry as _registry
+from repro.pipeline import streaming as _streaming
+
+Array = jax.Array
+
+
+def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
+             n_perms: int = 999, key: Optional[jax.Array] = None,
+             n_groups: Optional[int] = None,
+             dist_impl: str = "auto", sw_impl: str = "auto",
+             materialize: str = "auto", row_block: Optional[int] = None,
+             chunk: Optional[int] = None,
+             memory_budget_bytes: Optional[float] = None,
+             matrix_budget_bytes: Optional[float] = None,
+             slab_budget_bytes: Optional[float] = None,
+             dist_tuning: Optional[Dict[str, int]] = None,
+             sw_tuning: Optional[Dict[str, int]] = None,
+             backend: Optional[str] = None,
+             autotune: bool = False) -> PermanovaResult:
+    """Full features→p-value PERMANOVA under one joint plan.
+
+    x:           (n, d) abundance table (raw features, NOT distances).
+    materialize: 'auto' | 'dense' | 'stream' | 'fused' — whether the (n, n)
+                 matrix is built outright, streamed into a single buffer,
+                 or never materialized at all.
+    Remaining knobs mirror engine.run(); budgets split per stage
+    (matrix/slab for distances, memory_budget_bytes for s_W labels).
+    For a fixed key every materialization produces the same F and p-value
+    (to fp32 accumulation order).
+    """
+    if key is None:
+        key = jax.random.key(0)
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"features must be (n, d); got shape {x.shape}")
+    grouping = jnp.asarray(grouping, dtype=jnp.int32)
+    n, d = x.shape
+    if n_groups is None:
+        n_groups = int(jnp.max(grouping)) + 1
+    n_total = n_perms + 1
+
+    pl = _planner.plan_pipeline(
+        n, d, n_total, n_groups, metric=metric, backend=backend,
+        dist_impl=dist_impl, materialize=materialize, row_block=row_block,
+        matrix_budget_bytes=matrix_budget_bytes,
+        slab_budget_bytes=slab_budget_bytes,
+        memory_budget_bytes=memory_budget_bytes,
+        sw_impl=sw_impl, chunk=chunk, sw_tuning=sw_tuning)
+    dspec = _registry.get(pl.dist_impl)
+    # planner-resolved tuning (row block folded in) <- caller overrides
+    prepare, rows_fn, dense_fn = dspec.bound(
+        **{**pl.dist_tuning, **(dist_tuning or {})})
+
+    if pl.materialize == "dense":
+        dm = dense_fn(x)
+        res = engine.run(dm, grouping, n_perms=n_perms, key=key,
+                         n_groups=n_groups, impl=sw_impl,
+                         memory_budget_bytes=memory_budget_bytes,
+                         chunk=chunk, autotune=autotune, backend=backend,
+                         tuning=sw_tuning)
+    elif pl.materialize == "stream":
+        mat2, gower = _streaming.build_mat2_streaming(
+            prepare(x), rows_fn, block=pl.row_block)
+        mat2_dev = jnp.asarray(mat2)
+        del mat2   # free the host buffer: ONE sustained (n, n) resident
+                   # (the handoff copy itself is transiently 2x; the fused
+                   # bridge is the option that never holds (n, n) at all)
+        res = engine.run(mat2_dev, grouping, n_perms=n_perms,
+                         key=key, n_groups=n_groups, impl=sw_impl,
+                         memory_budget_bytes=memory_budget_bytes,
+                         chunk=chunk, autotune=autotune, backend=backend,
+                         tuning=sw_tuning, squared=True, s_t=gower.s_t)
+    elif pl.materialize == "fused":
+        if autotune:
+            warnings.warn(
+                "autotune=True ignored: the fused bridge computes s_W in "
+                "its one-hot matmul form (use materialize='stream'/'dense' "
+                "to let measurements pick the s_W impl)", stacklevel=2)
+        inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+        s_w, s_t, stats = _streaming.fused_sw(
+            prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+            row_block=pl.row_block, chunk=pl.sw.chunk)
+        f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
+                          jnp.float32(s_t), n, n_groups)
+        res = PermanovaResult(
+            f_stat=f_all[0], p_value=p_value_from_null(f_all),
+            s_t=jnp.float32(s_t), s_w=jnp.asarray(s_w[0], jnp.float32),
+            f_perms=f_all, n_objects=n, n_groups=n_groups, n_perms=n_perms,
+            method="pipeline[fused]",
+            plan=(f"rows={stats.row_block}x{stats.n_row_blocks} "
+                  f"chunks={stats.n_chunks} slab="
+                  f"{stats.peak_slab_bytes/2**20:.1f}MiB"))
+    else:  # pragma: no cover - planner validates
+        raise ValueError(pl.materialize)
+
+    if pl.materialize == "fused":
+        # the fused bridge IS stage 2; the joint plan string is authoritative
+        executed_sw = pl.sw.impl
+        plan_str = f"{pl.describe()} :: {res.plan}"
+    else:
+        # engine.run planned stage 2 (autotune may have overridden ours) —
+        # report its record once instead of a possibly-contradicting copy
+        executed_sw = (res.method.split("[", 1)[1].rstrip("]")
+                       if "[" in res.method else pl.sw.impl)
+        plan_str = f"{pl.describe_stage1()} | {pl.reason} :: {res.plan}"
+    return dataclasses.replace(
+        res,
+        method=f"pipeline[{pl.dist_impl}->{pl.materialize}->{executed_sw}]",
+        plan=plan_str)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-study pipeline (serving scenario).
+# ---------------------------------------------------------------------------
+
+def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
+                  metric: str = "braycurtis", n_perms: int = 999,
+                  key: Optional[jax.Array] = None,
+                  dist_impl: str = "auto", sw_impl: str = "auto",
+                  row_block: Optional[int] = None,
+                  chunk: Optional[int] = None,
+                  memory_budget_bytes: Optional[float] = None,
+                  matrix_budget_bytes: Optional[float] = None,
+                  backend: Optional[str] = None
+                  ) -> engine.PermanovaManyResult:
+    """Stacked studies features→p-values through ONE joint plan.
+
+    xs:         (S, n, d) abundance tables.
+    groupings:  (S, n) int labels in [0, n_groups) (shared design width,
+                like engine.permanova_many).
+    Distance matrices are built study-by-study with the planned stage-1
+    impl (lax.map bounds peak distance transients to one study's), then the
+    stack runs through the engine's vmapped multi-study program. Study s
+    draws its null from fold_in(key, s) — identical to S independent
+    pipeline() calls.
+
+    NOTE: the batched path always materializes the full (S, n, n) stack of
+    distance matrices (the vmapped s_W program consumes it); the stream /
+    fused bridges are single-study only for now. A stack bigger than the
+    matrix budget warns — split the studies or fall back to per-study
+    pipeline() calls.
+    """
+    if key is None:
+        key = jax.random.key(0)
+    xs = jnp.asarray(xs)
+    if xs.ndim != 3:
+        raise ValueError(f"stacked features must be (S, n, d); "
+                         f"got shape {xs.shape}")
+    groupings = jnp.asarray(groupings, dtype=jnp.int32)
+    s_count, n, d = xs.shape
+    n_total = n_perms + 1
+
+    pl = _planner.plan_pipeline(
+        n, d, n_total, n_groups, metric=metric, backend=backend,
+        dist_impl=dist_impl, row_block=row_block, materialize="dense",
+        matrix_budget_bytes=matrix_budget_bytes,
+        memory_budget_bytes=memory_budget_bytes,
+        sw_impl=sw_impl, chunk=chunk)
+    stack_bytes = 4 * s_count * n * n
+    budget = (_planner.DEFAULT_MATRIX_BUDGET_BYTES
+              if matrix_budget_bytes is None else matrix_budget_bytes)
+    if stack_bytes > budget:
+        warnings.warn(
+            f"pipeline_many materializes the full (S, n, n) stack "
+            f"({stack_bytes/2**20:.0f}MiB), exceeding the matrix budget "
+            f"({budget/2**20:.0f}MiB); stream/fused bridges are not yet "
+            "implemented for the batched path — split the studies or run "
+            "pipeline() per study", stacklevel=2)
+    dspec = _registry.get(pl.dist_impl)
+    _, _, dense_fn = dspec.bound(**pl.dist_tuning)
+
+    dms = jax.lax.map(dense_fn, xs)        # one study's transients at a time
+    res = engine.permanova_many(
+        dms, groupings, n_groups=n_groups, n_perms=n_perms, key=key,
+        impl=sw_impl, chunk=chunk,
+        memory_budget_bytes=memory_budget_bytes, backend=backend)
+    res.plan = (f"{pl.dist_impl} -> dense(batched lax.map) -> "
+                f"{res.plan}")
+    return res

@@ -1,0 +1,226 @@
+"""Joint two-stage planner: distance construction + s_W under ONE plan.
+
+PR 1's engine planner picks the s_W dataflow from the paper's Fig. 1 result
+(CPU-tiled vs GPU-brute). On the full features→p-value pipeline that choice
+is only half the problem: for large n the distance stage dominates wall
+clock (ROADMAP), and — as the MI300A unified-memory literature stresses —
+whole-pipeline DATAFLOW (what gets materialized, and where) decides whether
+memory-heavy codes win on APU-class hardware. So this planner decides, in
+one place:
+
+  stage 1   which distance impl (dense / blocked / Pallas per backend and
+            transient-memory model, mirroring tiled-vs-brute), and its
+            row-block size
+  bridge    the materialization strategy: 'dense' (D then mat2 — two (n,n)
+            transients), 'stream' (square row blocks into ONE mat2 buffer;
+            never resident twice), or 'fused' (no (n,n) array at all;
+            row slabs feed permutation chunks directly)
+  stage 2   the engine Plan (impl + tuning + streaming chunk) for s_W,
+            delegated to repro.engine.planner — including its persisted
+            autotune measurements
+
+`plan_pipeline()` is pure shape/backend arithmetic, like `engine.plan()`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.engine import planner as _eplanner
+from repro.pipeline import registry as _dreg
+
+# Matrix-residency budget for the bridge decision. Distinct from the engine's
+# label budget: this one governs the O(n^2) distance operands.
+DEFAULT_MATRIX_BUDGET_BYTES = 1024 * 1024 ** 2
+# Transient slab budget for picking the row block (and the dense/blocked
+# stage-1 cut on CPU, standing in for the paper's LLC argument).
+DEFAULT_SLAB_BUDGET_BYTES = 128 * 1024 ** 2
+MIN_ROW_BLOCK = 8
+MAX_ROW_BLOCK = 4096
+PALLAS_MIN_N = 256
+
+MATERIALIZE_MODES = ("dense", "stream", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """A resolved features→p-value execution plan."""
+    metric: str
+    dist_impl: str                # distance registry name
+    dist_tuning: Dict[str, int]
+    materialize: str              # 'dense' | 'stream' | 'fused'
+    row_block: int
+    sw: _eplanner.Plan            # stage-2 engine plan
+    backend: str
+    reason: str
+
+    def describe_stage1(self) -> str:
+        """Stage 1 + bridge only — what the pipeline itself executes. The
+        dense/stream bridges delegate stage 2 to engine.run, whose own plan
+        record is authoritative there (autotune may override ours)."""
+        t = ",".join(f"{k}={v}" for k, v in sorted(self.dist_tuning.items()))
+        return (f"{self.dist_impl}[{t}] -> {self.materialize}"
+                f"(rows={self.row_block})")
+
+    def describe(self) -> str:
+        return (f"{self.describe_stage1()} -> {self.sw.describe()}"
+                f" | {self.reason}")
+
+
+def _pick_dist_impl(metric: str, backend: str, n: int, d: int,
+                    slab_budget: float):
+    """Stage-1 impl by capability + transient model (Fig. 1 transplanted:
+    bounded-working-set forms on CPU, widest forms on GPU, tiles on TPU)."""
+    if metric not in _dreg.metrics():
+        raise KeyError(f"unknown metric {metric!r}; "
+                       f"registered: {_dreg.metrics()}")
+    if backend == "tpu" and n >= PALLAS_MIN_N and \
+            _dreg.names(metric=metric, kind="pallas"):
+        return (f"{metric}.pallas",
+                "tiled Pallas kernel past the tile-viability point")
+    dense = _dreg.get(f"{metric}.dense")
+    # respect the registry's capability metadata: only consider the dense
+    # form where it is registered as performant for this backend
+    dense_ok = backend in dense.backends
+    dense_ws = dense.workset_bytes(n, d, n)
+    if dense_ok and backend == "gpu" and dense_ws <= slab_budget:
+        return (f"{metric}.dense",
+                "GPU prefers the widest form (Fig. 1 brute analogue)")
+    if dense_ok and dense_ws <= min(slab_budget, _eplanner.CPU_LLC_BYTES):
+        return (f"{metric}.dense",
+                f"dense transients {dense_ws/2**20:.0f}MiB fit the cache "
+                "model; single full-matrix form")
+    why = (f"dense transients {dense_ws/2**20:.0f}MiB spill the slab/cache "
+           "budget" if dense_ok else
+           f"dense form not registered for backend {backend!r}")
+    # blocked is the universal fallback: correct on every backend (its
+    # `backends` field records where it is the PERFORMANT choice, not the
+    # only places it runs), with the only bounded working set.
+    return (f"{metric}.blocked",
+            f"{why}; row-streaming form (Fig. 1 tiled analogue)")
+
+
+def _pick_materialize(n: int, matrix_budget: float):
+    dense_bytes = 8 * n * n      # D + mat2 both live transiently
+    mat2_bytes = 4 * n * n
+    if dense_bytes <= matrix_budget:
+        return "dense", (f"D+mat2 {dense_bytes/2**20:.0f}MiB fit the "
+                         "matrix budget")
+    if mat2_bytes <= matrix_budget:
+        return "stream", (f"mat2 {mat2_bytes/2**20:.0f}MiB fits but D+mat2 "
+                          "would not; stream row blocks into one buffer")
+    return "fused", (f"even one (n,n) buffer {mat2_bytes/2**20:.0f}MiB "
+                     "exceeds the matrix budget; fuse row slabs into the "
+                     "permutation sweep")
+
+
+def _pick_row_block(n: int, d: int, impl: _dreg.DistanceImpl,
+                    slab_budget: float) -> int:
+    """Largest power-of-two row block whose transient working set fits."""
+    block = MAX_ROW_BLOCK
+    while block > MIN_ROW_BLOCK and \
+            impl.workset_bytes(n, d, block) > slab_budget:
+        block //= 2
+    return max(MIN_ROW_BLOCK, min(block, n))
+
+
+def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
+                  metric: str = "braycurtis",
+                  backend: Optional[str] = None,
+                  dist_impl: Optional[str] = None,
+                  materialize: Optional[str] = None,
+                  row_block: Optional[int] = None,
+                  matrix_budget_bytes: Optional[float] = None,
+                  slab_budget_bytes: Optional[float] = None,
+                  memory_budget_bytes: Optional[float] = None,
+                  sw_impl: Optional[str] = None,
+                  chunk: Optional[int] = None,
+                  sw_tuning: Optional[Dict[str, int]] = None) -> PipelinePlan:
+    """Resolve the full two-stage plan for one problem.
+
+    n_perms counts TOTAL permutation slots (requested + 1 observed), same
+    convention as engine.plan(). Caller-pinned fields (dist_impl,
+    materialize, row_block, sw_impl, chunk) are respected; the planner
+    fills in the rest.
+    """
+    backend = backend or _eplanner.default_backend()
+    matrix_budget = (DEFAULT_MATRIX_BUDGET_BYTES
+                     if matrix_budget_bytes is None else matrix_budget_bytes)
+    slab_budget = (DEFAULT_SLAB_BUDGET_BYTES
+                   if slab_budget_bytes is None else slab_budget_bytes)
+
+    if dist_impl is None or dist_impl == "auto":
+        dname, dreason = _pick_dist_impl(metric, backend, n, d, slab_budget)
+    else:
+        dname = dist_impl if "." in dist_impl else f"{metric}.{dist_impl}"
+        dreason = "caller-pinned distance impl"
+    dspec = _dreg.get(dname)
+    if dspec.metric != metric:
+        raise ValueError(f"distance impl {dname!r} computes "
+                         f"{dspec.metric!r}, not {metric!r}")
+    if dspec.max_n is not None and n > dspec.max_n:
+        raise ValueError(f"{dname!r} capped at n={dspec.max_n}, got {n}")
+
+    mat_pinned = materialize not in (None, "auto")
+    if not mat_pinned:
+        mat, mreason = _pick_materialize(n, matrix_budget)
+    else:
+        if materialize not in MATERIALIZE_MODES:
+            raise ValueError(f"materialize={materialize!r}; expected one of "
+                             f"{MATERIALIZE_MODES}")
+        mat, mreason = materialize, "caller-pinned materialization"
+
+    if row_block is None:
+        # Size the row block against the ROWS working set: the stream/fused
+        # bridges consume make_rows, whose transients scale with the block,
+        # unlike a dense-kind impl's block-independent full-matrix model
+        # (which would collapse the block to the minimum for nothing).
+        rows_spec = (dspec if dspec.kind != "dense"
+                     else _dreg.get(f"{metric}.blocked"))
+        row_block = _pick_row_block(n, d, rows_spec, slab_budget)
+    row_block = max(1, min(int(row_block), n))
+
+    # Stage 2 via the engine planner (shares its persisted autotune state).
+    # The fused bridge computes s_W itself in the one-hot matmul form, so
+    # pin the engine plan to 'matmul' there — its chunk/budget arithmetic
+    # still sizes the label blocks. A caller-pinned sw_impl that the fused
+    # bridge cannot honor is a hard error when fused was pinned too, and a
+    # downgrade to 'stream' when the bridge choice was ours.
+    pinned_sw = sw_impl if sw_impl not in (None, "auto") else None
+    if mat == "fused" and pinned_sw not in (None, "matmul"):
+        if mat_pinned:
+            raise ValueError(
+                f"the fused bridge computes s_W in the one-hot matmul form "
+                f"and cannot honor sw_impl={pinned_sw!r}; use "
+                "sw_impl='auto'/'matmul' or materialize='stream'")
+        mat = "stream"
+        mreason += (f"; downgraded fused->stream to honor "
+                    f"sw_impl={pinned_sw!r} (over matrix budget)")
+    if mat == "fused" and pinned_sw is None:
+        pinned_sw = "matmul"
+    if mat == "fused" and chunk is None:
+        # The fused step's working set is the one-hot block (chunk, n, G)
+        # plus its (n, chunk*G) reshape — G-fold larger per permutation
+        # than the engine's label-only model. Size the chunk against the
+        # label budget with that factor so the fused sweep honors the same
+        # memory contract.
+        budget = (_eplanner.DEFAULT_STREAM_BUDGET_BYTES
+                  if memory_budget_bytes is None else memory_budget_bytes)
+        per_perm = 4.0 * n * (2 * n_groups + 1)
+        chunk = int(max(1, min(budget // per_perm, n_perms)))
+    sw = _eplanner.plan(n, n_perms, n_groups, backend=backend,
+                        impl=pinned_sw,
+                        memory_budget_bytes=memory_budget_bytes,
+                        chunk=chunk, tuning=sw_tuning)
+
+    # The planned row block IS the blocked impls' working-set knob — thread
+    # it into the resolved tuning so every bridge (including dense, whose
+    # builder scans the same row primitives) honors the slab budget.
+    dist_tuning = dict(dspec.tuning)
+    if "block" in dist_tuning:
+        dist_tuning["block"] = row_block
+    return PipelinePlan(
+        metric=metric, dist_impl=dname, dist_tuning=dist_tuning,
+        materialize=mat, row_block=row_block, sw=sw, backend=backend,
+        reason=f"{dreason}; {mreason}")

@@ -1,0 +1,244 @@
+"""Unified distance-implementation registry (stage 1 of the pipeline).
+
+Mirrors `repro.engine.registry` for the distance stage: every way this repo
+can turn an (n, d) abundance table into pairwise distances sits behind one
+interface with capability metadata the pipeline planner dispatches on.
+
+Three kinds per metric (where available):
+
+  dense     single full-matrix jnp form (Gram trick / broadcast) — lowest
+            latency while the O(n^2)..O(block*n*d) transients fit
+  blocked   row-streaming jnp driver over the same row primitives — the
+            cache-friendly CPU form, and the only dense-free producer for
+            the pipeline's stream/fused materializations
+  pallas    the tiled TPU kernels (interpret mode off TPU) — rectangular,
+            so they serve both dense construction and row slabs
+
+Every impl exposes BOTH a dense builder and a row-slab builder (the dense
+matrix is just the all-rows slab), so the planner's materialization choice
+(dense / stream / fused) is orthogonal to the impl choice — exactly like
+the s_W registry keeps dataflow orthogonal to scheduling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import distance as _dist
+
+Array = object
+
+
+@dataclasses.dataclass(frozen=True)
+class DistanceImpl:
+    """One distance implementation plus planner-facing metadata.
+
+    make_prepare(**tuning) -> prepare(x) -> xprep        one-off transform
+    make_rows(**tuning)    -> rows(xb, xprep) -> (b, n)  row-slab builder
+    make_dense(**tuning)   -> dense(x) -> (n, n)         full matrix
+    """
+    name: str                      # "<metric>.<kind>"
+    metric: str
+    kind: str                      # 'dense' | 'blocked' | 'pallas'
+    backends: Tuple[str, ...]      # backends where this form is performant
+    tuning: Mapping[str, int]
+    make_prepare: Callable[..., Callable]
+    make_rows: Callable[..., Callable]
+    make_dense: Callable[..., Callable]
+    workset_bytes: Callable[[int, int, int], int]
+    # (n, d, row_block) -> peak TRANSIENT bytes beyond inputs/outputs
+    max_n: Optional[int] = None    # None = unbounded
+    description: str = ""
+
+    def bound(self, **overrides):
+        """(prepare, rows, dense) callables with tuning resolved."""
+        kw = {k: v for k, v in {**self.tuning, **overrides}.items()
+              if k in self.tuning}
+        key = (self.name, tuple(sorted(kw.items())))
+        fns = _BOUND_CACHE.get(key)
+        if fns is None:
+            fns = _BOUND_CACHE[key] = (self.make_prepare(**kw),
+                                       self.make_rows(**kw),
+                                       self.make_dense(**kw))
+        return fns
+
+
+_REGISTRY: dict = {}
+_BOUND_CACHE: dict = {}
+
+
+def register(impl: DistanceImpl) -> DistanceImpl:
+    if impl.name in _REGISTRY:
+        raise ValueError(f"duplicate distance impl {impl.name!r}")
+    _REGISTRY[impl.name] = impl
+    return impl
+
+
+def get(name: str) -> DistanceImpl:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown distance impl {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names(*, metric: Optional[str] = None, backend: Optional[str] = None,
+          kind: Optional[str] = None):
+    """Registered impl names, optionally filtered by capability."""
+    out = []
+    for n, impl in _REGISTRY.items():
+        if metric is not None and impl.metric != metric:
+            continue
+        if backend is not None and backend not in impl.backends:
+            continue
+        if kind is not None and impl.kind != kind:
+            continue
+        out.append(n)
+    return sorted(out)
+
+
+def metrics():
+    return sorted({impl.metric for impl in _REGISTRY.values()})
+
+
+# ---------------------------------------------------------------------------
+# Registration.
+# ---------------------------------------------------------------------------
+
+def _const(fn):
+    def make(**_tuning):
+        return fn
+    return make
+
+
+def _make_true_dense(metric):
+    """Single-shot full-matrix form: all rows against all rows in one call
+    (the GPU-brute analogue — maximum parallel width, O(n*n[*d]) transients
+    exactly as the workset model charges)."""
+    mdef = _dist.ROW_METRICS[metric]
+
+    def make(**_tuning):
+        def dense(x):
+            xp = mdef.prepare(x)
+            return _dist._zero_diag(mdef.rows(xp, xp))
+        return dense
+    return make
+
+
+def _make_dense_from_rows(metric):
+    mdef = _dist.ROW_METRICS[metric]
+
+    def make(**tuning):
+        block = tuning.get("block", 256)
+
+        def dense(x):
+            xp = mdef.prepare(x)
+            return _dist._zero_diag(
+                _dist._blocked_rows(mdef.rows, xp, block))
+        return dense
+    return make
+
+
+def _make_pallas_rows(metric):
+    kmetric = "euclidean" if metric == "aitchison" else metric
+
+    def make(**tuning):
+        from repro.kernels.distance import ops  # deferred: pallas import
+
+        def rows(xb, xprep):
+            return ops.pairwise_distance_rows(xb, xprep, metric=kmetric,
+                                              **tuning)
+        return rows
+    return make
+
+
+def _make_pallas_dense(metric):
+    def make(**tuning):
+        from repro.kernels.distance import ops  # deferred: pallas import
+        prep = _dist.ROW_METRICS[metric].prepare
+        kmetric = "euclidean" if metric == "aitchison" else metric
+
+        def dense(x):
+            return ops.pairwise_distance(prep(x), metric=kmetric, **tuning)
+        return dense
+    return make
+
+
+def _ws_dense_gram(n, d, _block):
+    # full Gram product + squared-distance intermediate
+    return 8 * n * n
+
+
+def _ws_dense_broadcast(n, d, block):
+    # (block, n, d) broadcast intermediates inside the scan body (x2: |.|, +)
+    return 8 * block * n * d
+
+
+def _ws_rows_gram(n, d, block):
+    return 8 * block * n
+
+
+def _ws_rows_broadcast(n, d, block):
+    return 8 * block * n * d
+
+
+def _ws_pallas(n, d, block):
+    # accumulators materialized at output size (interpret mode); tiles on TPU
+    return 12 * min(block, n) * n
+
+
+def _register_metric(metric, *, rows_ws, dense_ws, pallas_ok,
+                     dense_backends, blocked_backends):
+    mdef = _dist.ROW_METRICS[metric]
+    register(DistanceImpl(
+        name=f"{metric}.dense", metric=metric, kind="dense",
+        backends=dense_backends, tuning={},
+        make_prepare=_const(mdef.prepare), make_rows=_const(mdef.rows),
+        make_dense=_make_true_dense(metric),
+        workset_bytes=dense_ws,
+        description=f"single full-matrix jnp {metric} (GPU-brute analogue: "
+                    "maximum parallel width, largest transients)",
+    ))
+    register(DistanceImpl(
+        name=f"{metric}.blocked", metric=metric, kind="blocked",
+        backends=blocked_backends, tuning={"block": 256},
+        make_prepare=_const(mdef.prepare), make_rows=_const(mdef.rows),
+        make_dense=_make_dense_from_rows(metric),
+        workset_bytes=rows_ws,
+        description=f"row-streaming jnp {metric} (CPU-tiled analogue: "
+                    "bounded working set; feeds stream/fused plans)",
+    ))
+    if pallas_ok:
+        register(DistanceImpl(
+            name=f"{metric}.pallas", metric=metric, kind="pallas",
+            backends=("tpu",),
+            tuning={"tile_r": 128, "tile_c": 128, "feat_block": 128},
+            make_prepare=_const(mdef.prepare),
+            make_rows=_make_pallas_rows(metric),
+            make_dense=_make_pallas_dense(metric),
+            workset_bytes=_ws_pallas,
+            description=f"Pallas tiled {metric} kernel (VMEM-resident "
+                        "accumulators; interpret mode off TPU)",
+        ))
+
+
+# euclidean / aitchison: Gram-trick forms are BLAS/MXU-native everywhere.
+_register_metric("euclidean", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
+                 pallas_ok=True, dense_backends=("cpu", "gpu", "tpu"),
+                 blocked_backends=("cpu", "gpu", "tpu"))
+_register_metric("aitchison", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
+                 pallas_ok=True, dense_backends=("cpu", "gpu", "tpu"),
+                 blocked_backends=("cpu", "gpu", "tpu"))
+# braycurtis: broadcast form has (block, n, d) transients — blocked is the
+# CPU winner, dense the GPU one (paper Fig. 1 transplanted to stage 1).
+_register_metric("braycurtis", rows_ws=_ws_rows_broadcast,
+                 dense_ws=_ws_dense_broadcast, pallas_ok=True,
+                 dense_backends=("gpu",), blocked_backends=("cpu", "gpu"))
+# jaccard: presence/absence matmul form (no pallas kernel yet).
+_register_metric("jaccard", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
+                 pallas_ok=False, dense_backends=("cpu", "gpu", "tpu"),
+                 blocked_backends=("cpu", "gpu", "tpu"))

@@ -1,0 +1,204 @@
+"""Streaming distance construction + fused distance→s_W execution.
+
+Three materialization strategies for getting from an (n, d) table to the
+squared-distance operand `mat2 = D∘D` the s_W engine consumes:
+
+  dense    build D, hand it to the engine (which squares it) — D and mat2
+           are both resident transiently. Cheapest to trace; fine while
+           8n² bytes fit.
+  stream   produce D row blocks, square + diagonal-mask them ON DEVICE as
+           they are emitted, and accumulate into ONE host mat2 buffer —
+           the raw distance matrix D is never materialized, and only one
+           (n, n) array is SUSTAINED (the device handoff copy is a
+           transient 2x; on unified-memory APUs it is the same physical
+           pages). Gower marginals (row sums / grand sum) are accumulated
+           in the same pass, so s_T and the centered form come free.
+  fused    never materialize (n, n) at all: each mat2 row block feeds the
+           streaming permutation scheduler's chunks directly (row-partial
+           s_W in the one-hot matmul form), with labels regenerated on
+           device per chunk by the same global-index key folding the
+           engine scheduler uses. Peak residency is one (row_block, n)
+           slab + one (chunk, n) label block, independent of n.
+
+The fused partial is the Gower-centered trace statistic in disguise:
+s_W over row blocks is exactly the blockwise trace form of Anderson's
+centered inner-product matrix, so consuming mat2 blocks as produced IS
+streaming into the centering — no second pass over the matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fstat, permutations
+
+Array = jax.Array
+
+
+class GowerStats(NamedTuple):
+    """Marginals of mat2 accumulated during the streaming pass."""
+    row_sums: np.ndarray   # (n,) float64 — sum_j mat2[i, j]
+    total: float           # sum_ij mat2[i, j]
+    n: int
+
+    @property
+    def s_t(self) -> float:
+        """s_T = sum_{i<j} d²/n = total / 2 / n (zero diagonal)."""
+        return self.total / 2.0 / self.n
+
+
+def gower_center(mat2: Array, stats: Optional[GowerStats] = None) -> Array:
+    """Gower-centered matrix G = -1/2 (mat2 - rowmean - colmean + grandmean).
+
+    PERMANOVA's s_T/s_W are trace forms over G; the engine consumes mat2
+    directly, but ordination-style consumers (PCoA) want G itself."""
+    n = mat2.shape[0]
+    if stats is None:
+        rs = jnp.sum(mat2, axis=1)
+        total = jnp.sum(rs)
+    else:
+        rs = jnp.asarray(stats.row_sums, mat2.dtype)
+        total = stats.total
+    rm = rs[:, None] / n
+    cm = rs[None, :] / n
+    return -0.5 * (mat2 - rm - cm + total / (n * n))
+
+
+# ---------------------------------------------------------------------------
+# Row-block producer: one jitted step serves every block of the sweep.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows_fn", "block", "n"))
+def _mat2_rows_step(xprep_pad, xprep, lo, *, rows_fn, block, n):
+    """mat2 rows for GLOBAL rows [lo, lo+block): distance slab, squared,
+    with pad rows and the exact diagonal zeroed. `lo` is traced, so one
+    compiled program serves every block."""
+    d = xprep_pad.shape[1]
+    xb = jax.lax.dynamic_slice(xprep_pad, (lo, 0), (block, d))
+    drows = rows_fn(xb, xprep)                       # (block, n)
+    row_ids = lo + jnp.arange(block)
+    valid = (row_ids < n)[:, None] & (row_ids[:, None]
+                                      != jnp.arange(n)[None, :])
+    return jnp.where(valid, drows * drows, 0.0)
+
+
+def _pad_rows(xprep: Array, block: int):
+    n = xprep.shape[0]
+    pad = (-n) % block
+    if pad:
+        return jnp.pad(xprep, ((0, pad), (0, 0))), n + pad
+    return xprep, n
+
+
+def mat2_row_blocks(xprep: Array, rows_fn: Callable, *, block: int):
+    """Yield (lo, mat2_rows) device slabs covering rows [0, n) in order.
+
+    The last slab is block-sized with zeroed pad rows; consumers slice
+    [:n - lo] or rely on the zero contract."""
+    n = int(xprep.shape[0])
+    block = int(min(block, n))
+    xpad, n_pad = _pad_rows(xprep, block)
+    for lo in range(0, n_pad, block):
+        yield lo, _mat2_rows_step(xpad, xprep, jnp.int32(lo),
+                                  rows_fn=rows_fn, block=block, n=n)
+
+
+def build_mat2_streaming(xprep: Array, rows_fn: Callable, *, block: int):
+    """mat2 via the streaming producer: ONE (n, n) buffer, filled blockwise.
+
+    D itself is never materialized — each row slab is squared and masked on
+    device, then written into the single host-side mat2 buffer. Returns
+    (mat2 float32 ndarray, GowerStats accumulated in the same pass). The
+    caller should release this buffer once it is handed to the device
+    (pipeline's stream bridge does) so only one (n, n) array is sustained.
+    """
+    n = int(xprep.shape[0])
+    mat2 = np.empty((n, n), np.float32)
+    row_sums = np.zeros((n,), np.float64)
+    for lo, slab in mat2_row_blocks(xprep, rows_fn, block=block):
+        hi = min(lo + slab.shape[0], n)
+        rows = np.asarray(slab[: hi - lo])
+        mat2[lo:hi] = rows
+        row_sums[lo:hi] = rows.sum(axis=1, dtype=np.float64)
+    return mat2, GowerStats(row_sums=row_sums, total=float(row_sums.sum()),
+                            n=n)
+
+
+# ---------------------------------------------------------------------------
+# Fused distance → s_W: mat2 row blocks feed permutation chunks directly.
+# ---------------------------------------------------------------------------
+
+class FusedStats(NamedTuple):
+    """Execution evidence: how the fused sweep actually ran."""
+    n_total: int
+    chunk: int
+    n_chunks: int
+    row_block: int
+    n_row_blocks: int
+    peak_slab_bytes: int     # (row_block, n) mat2 slab — the live matrix
+    peak_label_bytes: int    # (chunk, n) labels
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block", "n", "n_groups"))
+def _fused_sw_step(m2rows, grouping, inv_gs, key, lo_r, lo_p, *,
+                   chunk, block, n, n_groups):
+    """Row-partial s_W (fstat's matmul-form contraction) for permutation
+    indices [lo_p, lo_p+chunk), over mat2 rows [lo_r, lo_r+block).
+
+    Labels are regenerated on device by global-index key folding (identical
+    to the engine scheduler), so every (row block × perm chunk) cell of the
+    sweep is independent and the results sum exactly to the full statistic.
+    Pad rows carry zeroed mat2 rows, so their (arbitrary) labels contribute
+    nothing; the row-label slice comes from a zero-padded label block so the
+    slice window never clamps out of alignment."""
+    g = permutations.permutation_batch_dyn(key, grouping, lo_p, chunk)
+    e = fstat.onehot_perm_factors(g, inv_gs, m2rows.dtype)   # (P, n, G)
+    e_pad = jnp.pad(e, ((0, 0), (0, (-n) % block), (0, 0)))
+    e_rows = jax.lax.dynamic_slice(e_pad, (0, lo_r, 0),
+                                   (chunk, block, n_groups))
+    return fstat.sw_matmul_contract(m2rows, e, e_rows)
+
+
+def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
+             inv_gs: Array, key: jax.Array, n_total: int, *,
+             row_block: int, chunk: int,
+             progress: Optional[Callable[[int, int], None]] = None):
+    """s_W for permutation indices [0, n_total) without ever holding the
+    (n, n) matrix: outer loop over mat2 row slabs (each built once), inner
+    loop over permutation chunks consuming the live slab.
+
+    Returns (s_w float64 ndarray (n_total,), s_t float, FusedStats).
+    """
+    n = int(xprep.shape[0])
+    n_groups = int(inv_gs.shape[0])
+    row_block = int(min(row_block, n))
+    chunk = int(max(1, min(chunk, n_total)))
+    grouping = jnp.asarray(grouping, jnp.int32)
+    out = np.zeros((n_total,), np.float64)
+    s_t_sum = 0.0
+    n_row_blocks = 0
+    for lo_r, slab in mat2_row_blocks(xprep, rows_fn, block=row_block):
+        n_row_blocks += 1
+        s_t_sum += float(jnp.sum(slab))      # s_T marginal, once per slab
+        for lo_p in range(0, n_total, chunk):
+            sw = _fused_sw_step(
+                slab, grouping, inv_gs, key, jnp.int32(lo_r),
+                jnp.int32(lo_p), chunk=chunk, block=slab.shape[0], n=n,
+                n_groups=n_groups)
+            hi = min(lo_p + chunk, n_total)
+            out[lo_p:hi] += np.asarray(sw[: hi - lo_p], np.float64)
+        if progress is not None:
+            progress(min(lo_r + row_block, n), n)
+    stats = FusedStats(
+        n_total=n_total, chunk=chunk, n_chunks=-(-n_total // chunk),
+        row_block=row_block, n_row_blocks=n_row_blocks,
+        peak_slab_bytes=4 * row_block * n,
+        peak_label_bytes=4 * chunk * n)
+    return out, s_t_sum / 2.0 / n, stats

@@ -8,6 +8,11 @@ import pytest
 # NOTE: no XLA_FLAGS here — tests must see the real (single) device.
 # Multi-device behaviour is tested via run_subprocess(..., devices=N).
 
+# Planner dispatch assertions must exercise the heuristics, not whatever
+# autotune winners a previous run persisted on this host. Tests that cover
+# persistence point this at a tmp path explicitly.
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "off")
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 

@@ -1,0 +1,329 @@
+"""Pipeline subsystem: registry capability metadata, joint planner rules,
+two-stage parity (the acceptance bar: pipeline(features, labels) ==
+distance() -> permanova() for every registered metric, under every
+materialization), fused/streaming equivalence, Gower centering, the
+batched multi-study API, and persisted autotune measurements."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, pipeline
+from repro.core import distance as dist
+from repro.core.permanova import permanova
+from repro.engine import planner as eplanner
+
+N, D, G = 53, 24, 4   # prime n: every block/tile pad path exercised
+
+
+def _study(seed=0, n=N, d=D, g=G):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x *= rng.random(size=(n, d)) < 0.5        # sparsity: jaccard informative
+    x[:, 0] = np.maximum(x[:, 0], 1e-3)       # no all-zero samples
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    return x, grouping
+
+
+class TestRegistry:
+    def test_all_metrics_have_dense_and_blocked(self):
+        for metric in pipeline.metrics():
+            kinds = {pipeline.get(nm).kind
+                     for nm in pipeline.names(metric=metric)}
+            assert {"dense", "blocked"} <= kinds, metric
+
+    def test_metadata_complete(self):
+        for name in pipeline.names():
+            spec = pipeline.get(name)
+            assert spec.backends, name
+            assert callable(spec.workset_bytes)
+            ws = spec.workset_bytes(1024, 128, 256)
+            assert ws > 0, name
+            prepare, rows, dense = spec.bound()
+            assert callable(prepare) and callable(rows) and callable(dense)
+
+    def test_every_impl_serves_rows_and_dense(self):
+        x, _ = _study(1)
+        xj = jnp.asarray(x)
+        for name in pipeline.names():
+            spec = pipeline.get(name)
+            tuning = ({"tile_r": 16, "tile_c": 16, "feat_block": 16}
+                      if spec.kind == "pallas" else {})
+            prepare, rows, dense = spec.bound(**tuning)
+            xp = prepare(xj)
+            full = np.asarray(dense(xj))
+            slab = np.asarray(rows(xp[:8], xp))
+            # rows slab must agree with the dense matrix off-diagonal
+            mask = ~np.eye(N, dtype=bool)[:8]
+            np.testing.assert_allclose(slab[mask], full[:8][mask],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_capability_filters(self):
+        assert pipeline.names(metric="braycurtis", kind="pallas")
+        assert not pipeline.names(metric="jaccard", kind="pallas")
+        assert "euclidean.dense" in pipeline.names(backend="gpu")
+
+
+class TestPlanner:
+    def test_materialization_by_budget(self):
+        n = 1024
+        mat2 = 4 * n * n
+        dense = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
+                                       matrix_budget_bytes=3 * mat2)
+        assert dense.materialize == "dense"
+        stream = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
+                                        matrix_budget_bytes=1.5 * mat2)
+        assert stream.materialize == "stream"
+        fused = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
+                                       matrix_budget_bytes=0.5 * mat2)
+        assert fused.materialize == "fused"
+
+    def test_backend_dispatch(self):
+        tpu = pipeline.plan_pipeline(1024, 128, 1000, 8, backend="tpu",
+                                     metric="braycurtis")
+        assert tpu.dist_impl == "braycurtis.pallas"
+        gpu = pipeline.plan_pipeline(512, 64, 1000, 8, backend="gpu",
+                                     metric="euclidean")
+        assert gpu.dist_impl == "euclidean.dense"
+        # broadcast-metric transients blow the slab budget on cpu -> blocked
+        cpu = pipeline.plan_pipeline(4096, 512, 1000, 8, backend="cpu",
+                                     metric="braycurtis")
+        assert cpu.dist_impl == "braycurtis.blocked"
+
+    def test_fused_pins_matmul_sw(self):
+        pl = pipeline.plan_pipeline(512, 64, 1000, 8, backend="cpu",
+                                    materialize="fused")
+        assert pl.sw.impl == "matmul"
+        # fused chunk honors the G-fold one-hot footprint
+        assert 4.0 * 512 * (2 * 8 + 1) * pl.sw.chunk <= \
+            eplanner.DEFAULT_STREAM_BUDGET_BYTES
+
+    def test_joint_plan_includes_both_stages(self):
+        pl = pipeline.plan_pipeline(256, 32, 100, 4, backend="cpu")
+        desc = pl.describe()
+        assert pl.dist_impl.split(".")[0] == "braycurtis"
+        assert pl.sw.impl in engine.names()
+        assert "->" in desc and pl.sw.impl in desc
+
+    def test_pinned_fields_respected(self):
+        pl = pipeline.plan_pipeline(
+            256, 32, 100, 4, backend="cpu", dist_impl="euclidean.blocked",
+            metric="euclidean", materialize="stream", row_block=32,
+            sw_impl="brute", chunk=10)
+        assert (pl.dist_impl, pl.materialize, pl.row_block) == \
+            ("euclidean.blocked", "stream", 32)
+        assert (pl.sw.impl, pl.sw.chunk) == ("brute", 10)
+
+    def test_fused_cannot_honor_pinned_sw_impl(self):
+        # both pinned: hard error
+        with pytest.raises(ValueError, match="one-hot matmul"):
+            pipeline.plan_pipeline(512, 64, 100, 8, backend="cpu",
+                                   materialize="fused", sw_impl="tiled")
+        # bridge auto-chosen: downgrade to stream, honor the pinned impl
+        pl = pipeline.plan_pipeline(512, 64, 100, 8, backend="cpu",
+                                    sw_impl="tiled",
+                                    matrix_budget_bytes=1000)
+        assert pl.materialize == "stream"
+        assert pl.sw.impl == "tiled"
+        assert "downgraded" in pl.reason
+
+    def test_row_block_threaded_into_blocked_tuning(self):
+        # the dense bridge over a blocked impl must honor the planned slab
+        pl = pipeline.plan_pipeline(4096, 512, 100, 8, backend="cpu",
+                                    metric="braycurtis", row_block=32)
+        assert pl.dist_impl == "braycurtis.blocked"
+        assert pl.dist_tuning["block"] == 32
+
+    def test_metric_impl_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="computes"):
+            pipeline.plan_pipeline(256, 32, 100, 4, metric="braycurtis",
+                                   dist_impl="euclidean.dense")
+
+
+class TestPipelineParity:
+    """Acceptance bar: pipeline(features) == distance() -> permanova()."""
+
+    @pytest.mark.parametrize("metric", sorted(dist.METRICS))
+    @pytest.mark.parametrize("materialize", ["dense", "stream", "fused"])
+    def test_matches_two_stage(self, metric, materialize):
+        x, grouping = _study(seed=11)
+        key = jax.random.key(5)
+        dm = dist.distance_matrix(jnp.asarray(x), metric)
+        ref = permanova(dm, jnp.asarray(grouping), n_perms=99, key=key)
+        assert np.isfinite(float(ref.f_stat))  # degenerate data would
+        # make every comparison below vacuous (NaN == NaN passes allclose)
+        res = pipeline.pipeline(x, grouping, metric=metric, n_perms=99,
+                                key=key, materialize=materialize,
+                                row_block=16, chunk=25)
+        np.testing.assert_allclose(float(res.f_stat), float(ref.f_stat),
+                                   rtol=1e-4)
+        assert float(res.p_value) == float(ref.p_value)
+        np.testing.assert_allclose(np.asarray(res.f_perms),
+                                   np.asarray(ref.f_perms), rtol=1e-4)
+
+    def test_stream_matches_dense_plan(self):
+        x, grouping = _study(seed=12)
+        key = jax.random.key(6)
+        outs = [pipeline.pipeline(x, grouping, n_perms=199, key=key,
+                                  materialize=m, row_block=16)
+                for m in ("dense", "stream", "fused")]
+        for other in outs[1:]:
+            np.testing.assert_allclose(np.asarray(other.f_perms),
+                                       np.asarray(outs[0].f_perms),
+                                       rtol=1e-4)
+            assert float(other.p_value) == float(outs[0].p_value)
+
+    def test_fused_ragged_blocks_and_chunks(self):
+        # block/chunk sizes that divide NOTHING evenly
+        x, grouping = _study(seed=13)
+        key = jax.random.key(7)
+        a = pipeline.pipeline(x, grouping, n_perms=100, key=key,
+                              materialize="fused", row_block=13, chunk=17)
+        b = pipeline.pipeline(x, grouping, n_perms=100, key=key,
+                              materialize="dense")
+        np.testing.assert_allclose(np.asarray(a.f_perms),
+                                   np.asarray(b.f_perms), rtol=1e-4)
+
+    def test_plan_recorded_on_result(self):
+        x, grouping = _study(seed=14)
+        res = pipeline.pipeline(x, grouping, n_perms=19)
+        assert res.method.startswith("pipeline[")
+        assert "->" in res.plan
+
+    def test_permanova_accepts_features(self):
+        x, grouping = _study(seed=15)
+        key = jax.random.key(8)
+        via_features = permanova(jnp.asarray(x), jnp.asarray(grouping),
+                                 n_perms=49, key=key, metric="braycurtis")
+        dm = dist.distance_matrix(jnp.asarray(x), "braycurtis")
+        via_dm = permanova(dm, jnp.asarray(grouping), n_perms=49, key=key)
+        np.testing.assert_allclose(float(via_features.f_stat),
+                                   float(via_dm.f_stat), rtol=1e-4)
+        assert float(via_features.p_value) == float(via_dm.p_value)
+        # non-square 2-D input auto-routes (no metric kwarg needed)
+        auto = permanova(jnp.asarray(x), jnp.asarray(grouping),
+                         n_perms=49, key=key)
+        assert float(auto.p_value) == float(via_dm.p_value)
+
+
+class TestGowerCentering:
+    def test_centered_matrix_properties(self):
+        x, _ = _study(seed=16)
+        dm = dist.distance_matrix(jnp.asarray(x), "euclidean")
+        g = np.asarray(pipeline.gower_center(dm * dm))
+        np.testing.assert_allclose(g.sum(axis=0), 0.0, atol=1e-3)
+        np.testing.assert_allclose(g.sum(axis=1), 0.0, atol=1e-3)
+        # trace(G) = s_T * n / n = sum d^2 / n ... trace identity:
+        mat2 = np.asarray(dm * dm)
+        s_t = mat2.sum() / 2 / N
+        np.testing.assert_allclose(np.trace(g), s_t, rtol=1e-5)
+
+    def test_streaming_stats_feed_centering(self):
+        x, _ = _study(seed=17)
+        mdef = dist.ROW_METRICS["braycurtis"]
+        xp = mdef.prepare(jnp.asarray(x))
+        mat2, stats = pipeline.build_mat2_streaming(xp, mdef.rows, block=16)
+        a = np.asarray(pipeline.gower_center(jnp.asarray(mat2), stats))
+        b = np.asarray(pipeline.gower_center(jnp.asarray(mat2)))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestPipelineMany:
+    def test_matches_independent_pipelines(self):
+        s_count = 3
+        xs, gs = zip(*[_study(seed=20 + s, n=32, g=3) for s in range(s_count)])
+        xs = jnp.stack([jnp.asarray(x) for x in xs])
+        gs = jnp.stack([jnp.asarray(g) for g in gs])
+        key = jax.random.key(9)
+        many = pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=49,
+                                      key=key, sw_impl="matmul")
+        assert len(many) == s_count
+        for s in range(s_count):
+            single = pipeline.pipeline(
+                xs[s], gs[s], n_groups=3, n_perms=49,
+                key=jax.random.fold_in(key, s), sw_impl="matmul",
+                materialize="dense")
+            np.testing.assert_allclose(np.asarray(many.f_perms[s]),
+                                       np.asarray(single.f_perms),
+                                       rtol=1e-4)
+            assert float(many.p_value[s]) == float(single.p_value)
+
+    def test_records_joint_plan(self):
+        xs = jnp.stack([jnp.asarray(_study(seed=s, n=24, g=3)[0])
+                        for s in range(2)])
+        gs = jnp.stack([jnp.asarray(_study(seed=s, n=24, g=3)[1])
+                        for s in range(2)])
+        many = pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=19)
+        assert "->" in many.plan
+
+
+class TestAutotunePersistence:
+    """Satellite: measurements survive to disk and feed plan() heuristics."""
+
+    def test_roundtrip_and_heuristic_feedback(self, tmp_path, monkeypatch):
+        cache = tmp_path / "autotune.json"
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        eplanner.load_autotune_cache(reload=True)
+        try:
+            rng = np.random.default_rng(0)
+            d = rng.random((32, 32)).astype(np.float32)
+            d = (d + d.T) / 2
+            np.fill_diagonal(d, 0.0)
+            grouping = np.arange(32) % 3
+            inv_gs = np.full((3,), 3.0 / 32, np.float32)
+            winner = eplanner.autotune(
+                jnp.asarray(d * d), jnp.asarray(grouping.astype(np.int32)),
+                jnp.asarray(inv_gs), sample_perms=4, backend="cpu")
+            # measurement persisted with per-candidate timings
+            data = json.loads(cache.read_text())
+            (key_str, entry), = data.items()
+            assert key_str == "cpu|n32|g3"
+            assert entry["impl"] == winner
+            assert set(entry["candidates"]) == \
+                set(eplanner._default_candidates("cpu"))
+            assert set(entry["times_us"]) <= set(entry["candidates"])
+            # a FRESH load (new process analogue) feeds the heuristics
+            eplanner.load_autotune_cache(reload=True)
+            pl = eplanner.plan(32, 100, 3, backend="cpu")
+            assert pl.impl == winner
+            assert "autotune" in pl.reason
+            # different bucket: heuristics, not the cache
+            pl2 = eplanner.plan(8192, 100, 8, backend="cpu")
+            assert pl2.impl == "tiled"
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)
+
+    def test_off_disables_persistence(self, monkeypatch):
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+        assert eplanner.autotune_cache_path() is None
+        eplanner.load_autotune_cache(reload=True)
+        assert eplanner.measured_impl("cpu", 32, 3) is None
+
+    def test_stale_or_restricted_entries_ignored(self, tmp_path, monkeypatch):
+        full = sorted(eplanner._default_candidates("cpu"))
+        cache = tmp_path / "autotune.json"
+        cache.write_text(json.dumps({
+            # impl no longer registered (measured over the full set)
+            "cpu|n64|g4": {"impl": "renamed_away",
+                           "candidates": full + ["renamed_away"],
+                           "times_us": {}},
+            # winner from a RESTRICTED shoot-out must not feed plan()
+            "cpu|n32|g4": {"impl": "brute", "candidates": ["brute"],
+                           "times_us": {}},
+        }))
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        eplanner.load_autotune_cache(reload=True)
+        try:
+            assert eplanner.measured_impl("cpu", 64, 4) is None
+            assert eplanner.plan(64, 100, 4, backend="cpu").impl == "matmul"
+            assert eplanner.measured_impl("cpu", 32, 4) is None
+            assert eplanner.measured_impl("cpu", 32, 4,
+                                          candidates=["brute"]) == "brute"
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)

@@ -11,9 +11,8 @@ from repro.sharding.rules import (RULES_MULTI_POD, RULES_SINGLE_POD,
 
 
 def _mesh_1():
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh  # jax 0.4.x AxisType shim
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class TestLogicalToSpec:
@@ -44,8 +43,9 @@ class TestLogicalToSpec:
 MULTI_DEVICE_CODE = r"""
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.registry import SMOKES
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.sharding.rules import set_active, rules_for_mesh
 from repro.sharding.state import axes_to_shardings, batch_axes, train_state_axes
@@ -53,8 +53,7 @@ from repro.train.step import make_train_state_init, make_train_step
 from repro.optim import adamw
 
 assert len(jax.devices()) == 8, jax.devices()
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = SMOKES["internlm2-1.8b"].replace(attn_q_chunk=8)
 model = build_model(cfg)
 opt = adamw()
@@ -96,17 +95,17 @@ def test_sharded_train_step_matches_single_device(run=None):
 DISTRIBUTED_PERMANOVA_CODE = r"""
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 from repro.core import distance, permanova
 from repro.core.distributed import permanova_distributed
 from repro.data.microbiome import synthetic_study
+from repro.launch.mesh import make_mesh
 
 x, grouping = synthetic_study(48, 32, 3, effect_size=0.0, seed=7)
 dm = distance.braycurtis(jnp.asarray(x))
 ref = permanova(dm, jnp.asarray(grouping), n_perms=99, sw_impl="brute")
 for shape, names in [((4, 2), ("data", "model")),
                      ((2, 2, 2), ("pod", "data", "model"))]:
-    mesh = jax.make_mesh(shape, names, axis_types=(AxisType.Auto,) * len(names))
+    mesh = make_mesh(shape, names)
     for impl in ("brute", "matmul"):
         r = permanova_distributed(mesh, dm, jnp.asarray(grouping),
                                   n_perms=99, impl=impl)
