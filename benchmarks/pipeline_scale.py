@@ -3,9 +3,12 @@ materialization bridge, plus the stage-1 distance impls head-to-head.
 
 The ROADMAP flagged the distance stage as the wall-clock bottleneck for
 large n; this suite tracks (a) how the blocked/pallas stage-1 forms compare
-to dense, and (b) what the stream / fused bridges cost relative to dense
+to dense, (b) what the stream / fused bridges cost relative to dense
 materialization — the trade the MI300A unified-memory literature says
-decides memory-heavy pipelines on APU-class parts.
+decides memory-heavy pipelines on APU-class parts — and (c) the fused-
+kernel smoke config: the single-pass sweep vs the PR 2 fused bridge at
+scale, with the peak-device-memory model columns in the JSON artifact
+(peak_mib scales with n while mat2_mib is the n² the plan never holds).
 """
 
 from __future__ import annotations
@@ -43,7 +46,7 @@ def run(emit):
 
     # full pipeline under each bridge (one plan each)
     perms = 199
-    for mat in ("dense", "stream", "fused"):
+    for mat in ("dense", "stream", "fused", "fused-kernel"):
         t0 = time.perf_counter()
         res = pipeline.pipeline(x, grouping, metric="braycurtis",
                                 n_perms=perms, materialize=mat,
@@ -53,6 +56,38 @@ def run(emit):
         emit(f"pipeline/e2e_{mat}", t * 1e6,
              f"n={n} perms={perms} perms_s={perms/t:.0f} "
              f"p={float(res.p_value):.3f}")
+
+    # fused-kernel smoke at scale (CI config): the single-pass sweep vs the
+    # PR 2 fused bridge, WARM wall-clock (serving-relevant; compile paid
+    # once), plus the peak-device-memory model columns — peak_mib must
+    # track n, not n² (mat2_mib is the n² reference the plan never holds).
+    perms_s = 199
+    for ns in (768, 1536):
+        xs_, gs_ = _study(ns, 64)
+        for mat in ("fused", "fused-kernel"):
+            def go():
+                r = pipeline.pipeline(xs_, gs_, metric="braycurtis",
+                                      n_perms=perms_s, materialize=mat,
+                                      key=jax.random.key(0))
+                jax.block_until_ready(r.f_perms)
+                return r
+            go()                                   # compile + warm
+            t0 = time.perf_counter()
+            res = go()
+            t = time.perf_counter() - t0
+            pl = pipeline.plan_pipeline(ns, 64, perms_s + 1, 8,
+                                        materialize=mat)
+            if mat == "fused-kernel":
+                spec = pipeline.get_fused(pl.fused_impl)
+                peak = spec.workset_bytes(ns, 64, pl.sw.chunk, 8,
+                                          pl.row_block)
+            else:
+                peak = 4 * pl.row_block * ns + 4 * pl.sw.chunk * ns * 17
+            emit(f"pipeline/scale_n{ns}_{mat}", t * 1e6,
+                 f"n={ns} perms={perms_s} perms_s={perms_s/t:.0f} "
+                 f"peak_mib={peak/2**20:.1f} "
+                 f"mat2_mib={4*ns*ns/2**20:.1f} "
+                 f"p={float(res.p_value):.3f}")
 
     # batched studies through one plan (serving scenario)
     s_count, nb = 4, 128

@@ -176,6 +176,30 @@ def _persist_key(backend: str, n: int, n_groups: int) -> str:
     return f"{backend}|n{_bucket(n)}|g{n_groups}"
 
 
+def measured_entry(key: str) -> Optional[dict]:
+    """One persisted measurement by raw domain key.
+
+    The cache is shared beyond the s_W shoot-outs: the pipeline planner
+    persists stage-1 distance and fused-kernel candidate timings under
+    'dist|<backend>|<metric>|<impl>' / 'fusedk|<backend>|<metric>|<impl>'
+    keys (satellite of the megakernel PR) and reads them back through
+    this accessor to seed its defaults."""
+    return load_autotune_cache().get(key)
+
+
+def record_entry(key: str, entry: dict) -> None:
+    """Persist one measurement under an arbitrary domain key.
+
+    `entry` must carry an 'impl' field (the load/save filters key on it).
+    Same merge-on-save/best-effort semantics as the s_W autotune path."""
+    if "impl" not in entry:
+        raise ValueError("autotune cache entries must carry an 'impl' field")
+    cache = load_autotune_cache()   # BEFORE marking dirty: the first load
+    _DIRTY.add(key)                 # in a process clears _DIRTY
+    cache[key] = entry
+    _save_autotune_cache()
+
+
 def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
     """Measurements persisted by previous processes on this host."""
     global _PERSIST

@@ -13,7 +13,10 @@ distance stage can produce `D²` row blocks without ever materializing the
 square matrix (repro.pipeline.streaming).
 
 Euclidean uses the MXU (gram-trick inside the tile); Bray-Curtis is a pure
-VPU streaming kernel (|xi - xj| has no matmul form).
+VPU streaming kernel (|xi - xj| has no matmul form). Jaccard is the
+presence/absence matmul form: on 0/1 features the float product IS the set
+intersection, so |A ∩ B| accumulates on the MXU and |A ∪ B| falls out of
+the cardinality sums — every registered metric has a tiled stage-1 impl.
 """
 
 from __future__ import annotations
@@ -68,6 +71,60 @@ def braycurtis_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
             jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # distances
             jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # numerator accum
             jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # denominator accum
+        ],
+        interpret=interpret,
+    )(xr, xc)
+    return out
+
+
+def _jaccard_body(xr_ref, xc_ref, out_ref, inter_ref, card_ref, *,
+                  n_feat_blocks):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        inter_ref[...] = jnp.zeros_like(inter_ref)
+        card_ref[...] = jnp.zeros_like(card_ref)
+
+    xr = xr_ref[...]                                # (TR, FB) presence 0/1
+    xc = xc_ref[...]                                # (TC, FB)
+    inter = jax.lax.dot_general(                    # MXU: |A ∩ B| per pair
+        xr, xc, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    inter_ref[...] += inter
+    card_ref[...] += (jnp.sum(xr, axis=-1)[:, None]
+                      + jnp.sum(xc, axis=-1)[None, :])
+
+    @pl.when(k == n_feat_blocks - 1)
+    def _finish():
+        inter = inter_ref[...]
+        union = card_ref[...] - inter               # |A ∪ B|
+        out_ref[...] = 1.0 - inter / jnp.maximum(union, 1.0)
+
+
+def jaccard_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
+                   interpret=True):
+    """xr/xc must be presence/absence floats (distance.presence_prepare)."""
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    grid = (nr // tile_r, nc // tile_c, d // feat_block)
+    kernel = functools.partial(_jaccard_body, n_feat_blocks=grid[2])
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, feat_block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_c, feat_block), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # distances
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # intersection accum
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # cardinality accum
         ],
         interpret=interpret,
     )(xr, xc)

@@ -20,6 +20,7 @@ from repro.kernels.distance import kernel as _k
 _KERNELS = {
     "braycurtis": _k.braycurtis_pallas,
     "euclidean": _k.euclidean_pallas,
+    "jaccard": _k.jaccard_pallas,
 }
 PALLAS_METRICS = tuple(_KERNELS)
 
@@ -41,8 +42,10 @@ def pairwise_distance(x, *, metric="braycurtis", tile_r=128, tile_c=128,
                       feat_block=128, interpret: bool | None = None):
     """(n, n) distance matrix from (n, d) features via the Pallas kernels.
 
-    Pads n/d to tile multiples; zero-padded features are exact for both
-    metrics (|0-0| = 0 contributes nothing; pad rows are sliced off).
+    Pads n/d to tile multiples; zero-padded features are exact for every
+    metric (|0-0| = 0, zero presence bits intersect/union nothing; pad
+    rows are sliced off). Jaccard expects presence/absence floats
+    (distance.presence_prepare) — the registry's prepare supplies them.
     """
     if interpret is None:
         interpret = not _on_tpu()

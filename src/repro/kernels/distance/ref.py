@@ -14,3 +14,7 @@ def braycurtis_ref(x: jax.Array) -> jax.Array:
 
 def euclidean_ref(x: jax.Array) -> jax.Array:
     return _d.euclidean(x)
+
+
+def jaccard_ref(x: jax.Array) -> jax.Array:
+    return _d.jaccard(x)

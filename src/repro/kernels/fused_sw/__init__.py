@@ -1,0 +1,10 @@
+"""Fused distance→s_W megakernel package.
+
+kernel   the Pallas phase-grid megakernel (D² tiles never leave VMEM)
+ops      jit'd padding/dispatch wrapper (`fused_sw_rows`)
+ref      pure-jnp oracle for parity tests
+"""
+
+from repro.kernels.fused_sw.kernel import FUSED_METRICS  # noqa: F401
+from repro.kernels.fused_sw.ops import KERNEL_METRIC, fused_sw_rows  # noqa: F401
+from repro.kernels.fused_sw.ref import fused_sw_ref  # noqa: F401

@@ -1,0 +1,214 @@
+"""Single-pass Pallas megakernel: feature slabs → D² tiles → s_W partials.
+
+PR 2's fused bridge avoids the (n, n) matrix but still round-trips every D²
+row slab through HBM between the distance kernel and the s_W contraction.
+This kernel closes that gap: a (tile_r, tile_c) squared-distance tile is
+built from feature slabs and contracted into per-permutation s_W partials
+(the one-hot matmul form) inside the same kernel, so D² tiles live only in
+VMEM scratch and never touch HBM. The Gower row-sum marginals for s_T are
+accumulated in the same sweep — one pass over the feature table yields
+everything `fstat` needs.
+
+Grid: (row-tile i, col-tile j, t) where the innermost t axis runs TWO
+phases per (i, j) tile pair:
+
+  t in [0, nk)        feature phase — accumulate the metric's running
+                      sums over feature blocks into VMEM scratch; on the
+                      last step finalize the masked D² tile (diagonal,
+                      pad rows/cols zeroed by GLOBAL index) and bank the
+                      Gower row sums
+  t in [nk, nk+npb)   permutation phase — contract the resident D² tile
+                      with one (perm_block, tile) label block per step on
+                      the MXU, accumulating s_W in a VMEM scratch vector
+
+Index maps clamp the out-of-phase block indices, so the feature operands
+simply stay resident during the permutation phase and vice versa. The s_W
+accumulator is flushed to HBM once, at the final grid step.
+
+Metrics: euclidean (Gram trick — the accumulator IS D²), braycurtis
+(|xi-xj| / (xi+xj) running sums), jaccard (presence/absence matmul form:
+|A∩B| via the MXU, |A∪B| from cardinality sums). Aitchison rides the
+euclidean body over clr-prepared features (ops layer maps it).
+
+Row slabs are shardable: `row_offset` arrives as a traced SMEM scalar, so
+a shard_map body can pass `axis_index('model') * rows_per_shard` and each
+device sweeps only its row slab; summing the per-shard s_W partials (psum
+over 'model') reconstructs the global statistic exactly (full i != j
+symmetric sum, halved, zero diagonal).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+FUSED_METRICS = ("euclidean", "braycurtis", "jaccard")
+
+
+def _accumulate(metric, xr, xc, a_ref, b_ref):
+    """One feature block's contribution to the metric's running sums."""
+    if metric == "euclidean":
+        sq_r = jnp.sum(xr * xr, axis=-1)[:, None]
+        sq_c = jnp.sum(xc * xc, axis=-1)[None, :]
+        gram = jax.lax.dot_general(                # MXU: (TR,FB)x(TC,FB)^T
+            xr, xc, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        a_ref[...] += sq_r + sq_c - 2.0 * gram     # accumulator IS D²
+    elif metric == "braycurtis":
+        a_ref[...] += jnp.sum(jnp.abs(xr[:, None, :] - xc[None, :, :]),
+                              axis=-1)
+        b_ref[...] += jnp.sum(xr[:, None, :] + xc[None, :, :], axis=-1)
+    elif metric == "jaccard":
+        inter = jax.lax.dot_general(               # |A ∩ B| on the MXU
+            xr, xc, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        a_ref[...] += inter
+        b_ref[...] += (jnp.sum(xr, axis=-1)[:, None]
+                       + jnp.sum(xc, axis=-1)[None, :])
+    else:  # pragma: no cover - ops validates
+        raise ValueError(metric)
+
+
+def _finalize_d2(metric, a, b):
+    """Squared distance tile from the completed running sums."""
+    if metric == "euclidean":
+        return jnp.maximum(a, 0.0)
+    if metric == "braycurtis":
+        d = a / jnp.maximum(b, 1e-30)
+        return d * d
+    # jaccard: union = card_r + card_c - inter
+    d = 1.0 - a / jnp.maximum(b - a, 1.0)
+    return d * d
+
+
+def _fused_sw_body(off_ref, xr_ref, xc_ref, g_row_ref, g_col_ref, sqrtw_ref,
+                   o_sw_ref, o_rs_ref, a_ref, b_ref, d2_ref, sw_ref, *,
+                   metric, nk, npb, nti, ntj, tile_r, tile_c, n_valid,
+                   nr_valid, n_groups):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (t == 0))
+    def _init_sw():
+        sw_ref[...] = jnp.zeros_like(sw_ref)
+
+    @pl.when(t == 0)
+    def _init_acc():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when(t < nk)
+    def _feature_phase():
+        _accumulate(metric, xr_ref[...], xc_ref[...], a_ref, b_ref)
+
+    @pl.when(t == nk - 1)
+    def _finalize():
+        row_off = off_ref[0, 0]
+        rows_l = i * tile_r + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_r, tile_c), 0)
+        rows_g = row_off + rows_l
+        cols_g = j * tile_c + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_r, tile_c), 1)
+        # slab pad rows (local id past the slab's true row count), global
+        # pad cols, and the exact diagonal contribute nothing — the
+        # contraction and row sums below both consume the masked tile
+        valid = ((rows_l < nr_valid) & (rows_g < n_valid)
+                 & (cols_g < n_valid) & (rows_g != cols_g))
+        d2 = jnp.where(valid, _finalize_d2(metric, a_ref[...], b_ref[...]),
+                       0.0)
+        d2_ref[...] = d2
+        rs = jnp.sum(d2, axis=1, keepdims=True).T       # (1, TR)
+
+        @pl.when(j == 0)
+        def _rs_init():
+            o_rs_ref[...] = rs
+
+        @pl.when(j > 0)
+        def _rs_acc():
+            o_rs_ref[...] += rs
+
+    @pl.when(t >= nk)
+    def _perm_phase():
+        pb = t - nk
+        g_r = g_row_ref[...]                            # (PB, TR)
+        g_c = g_col_ref[...]                            # (PB, TC)
+        sqrt_w = sqrtw_ref[0, :]                        # (G,)
+        iota_g = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_groups), 2)
+        e_col = (g_c[:, :, None] == iota_g).astype(jnp.float32) * sqrt_w
+        e_row = (g_r[:, :, None] == iota_g).astype(jnp.float32) * sqrt_w
+        # MXU contraction: (PB,TC,G) x (TR,TC) -> (PB, G, TR)
+        y = jax.lax.dot_general(
+            e_col, d2_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s = jnp.sum(y * jnp.transpose(e_row, (0, 2, 1)), axis=(1, 2))
+        sw_ref[pb, :] += 0.5 * s
+
+    @pl.when((i == nti - 1) & (j == ntj - 1) & (t == nk + npb - 1))
+    def _flush():
+        o_sw_ref[...] = sw_ref[...]
+
+
+def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
+                    metric, n_valid, nr_valid, tile_r=128, tile_c=128,
+                    feat_block=128, perm_block=16, interpret=True):
+    """Launch the megakernel over pre-padded operands.
+
+    row_offset: (1, 1) int32 — global index of xr's first row (traced OK).
+    xr:      (nr_pad, d_pad) f32 prepared row-slab features.
+    xc:      (nc_pad, d_pad) f32 prepared full feature table.
+    g_rows:  (p_pad, nr_pad) int32 permuted labels at the slab's rows.
+    g_cols:  (p_pad, nc_pad) int32 permuted labels over all samples.
+    sqrt_w:  (1, G) f32 sqrt(inv_group_sizes).
+    Returns (s_W (p_pad,) f32, row_sums (nr_pad,) f32) — pad entries zero.
+    """
+    if metric not in FUSED_METRICS:
+        raise ValueError(f"unknown fused metric {metric!r}; "
+                         f"one of {FUSED_METRICS}")
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    p_pad = g_cols.shape[0]
+    n_groups = sqrt_w.shape[-1]
+    nti, ntj = nr // tile_r, nc // tile_c
+    nk, npb = d // feat_block, p_pad // perm_block
+    kernel = functools.partial(
+        _fused_sw_body, metric=metric, nk=nk, npb=npb, nti=nti, ntj=ntj,
+        tile_r=tile_r, tile_c=tile_c, n_valid=n_valid, nr_valid=nr_valid,
+        n_groups=n_groups)
+    out_sw, out_rs = pl.pallas_call(
+        kernel,
+        grid=(nti, ntj, nk + npb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile_r, feat_block),
+                         lambda i, j, t: (i, jnp.minimum(t, nk - 1))),
+            pl.BlockSpec((tile_c, feat_block),
+                         lambda i, j, t: (j, jnp.minimum(t, nk - 1))),
+            pl.BlockSpec((perm_block, tile_r),
+                         lambda i, j, t: (jnp.clip(t - nk, 0, npb - 1), i)),
+            pl.BlockSpec((perm_block, tile_c),
+                         lambda i, j, t: (jnp.clip(t - nk, 0, npb - 1), j)),
+            pl.BlockSpec((1, n_groups), lambda i, j, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((npb, perm_block), lambda i, j, t: (0, 0)),
+            pl.BlockSpec((1, tile_r), lambda i, j, t: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npb, perm_block), jnp.float32),
+            jax.ShapeDtypeStruct((1, nr), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # metric accum a
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # metric accum b
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # masked D² tile
+            pltpu.VMEM((npb, perm_block), jnp.float32),  # s_W accumulator
+        ],
+        interpret=interpret,
+    )(row_offset, xr, xc, g_rows, g_cols, sqrt_w)
+    return out_sw.reshape(-1), out_rs[0]

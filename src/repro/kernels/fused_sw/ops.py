@@ -1,0 +1,86 @@
+"""jit'd wrapper for the fused distance→s_W megakernel (with padding).
+
+`fused_sw_rows` is the streaming unit the pipeline's fused-kernel bridge
+consumes: s_W partials + Gower row sums for one permutation chunk over one
+row slab, with the D² tiles never leaving VMEM. The slab is the whole table
+in the single-host case (the kernel tiles rows internally) and a 'model'-
+axis shard in the distributed case (`row_offset` is traced, so one compiled
+program serves every shard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sw import kernel as _k
+
+# aitchison is euclidean geometry over clr-prepared features
+KERNEL_METRIC = {"euclidean": "euclidean", "braycurtis": "braycurtis",
+                 "jaccard": "jaccard", "aitchison": "euclidean"}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(v: int, cap: int) -> int:
+    t = 1
+    while t * 2 <= min(v, cap):
+        t *= 2
+    return max(t, 8)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "n_valid", "tile_r", "tile_c", "feat_block", "perm_block",
+    "interpret"))
+def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
+                  metric="braycurtis", n_valid=None, tile_r=128, tile_c=128,
+                  feat_block=128, perm_block=16,
+                  interpret: bool | None = None):
+    """Fused s_W partial for one (row slab × permutation chunk) cell.
+
+    x_rows:   (nr, d) prepared features of the slab's rows.
+    x:        (n, d) prepared features of ALL samples (columns).
+    g_rows:   (P, nr) int32 permuted labels at the slab's GLOBAL rows.
+    g_cols:   (P, n) int32 permuted labels over all samples.
+    inv_gs:   (G,) f32 inverse group sizes.
+    row_offset: scalar global index of x_rows[0] (python int or traced).
+    n_valid:  global sample count n (pad masking); defaults to x.shape[0].
+    Returns (s_W (P,) f32, row_sums (nr,) f32). Summing the partials over
+    disjoint row slabs reconstructs the full-statistic / full row sums.
+    """
+    metric = KERNEL_METRIC.get(metric, metric)
+    if interpret is None:
+        interpret = not _on_tpu()
+    nr, d = x_rows.shape
+    n = x.shape[0]
+    p = g_cols.shape[0]
+    if n_valid is None:
+        n_valid = n
+    tile_r = _pick(nr, tile_r)
+    tile_c = _pick(n, tile_c)
+    feat_block = _pick(d, feat_block)
+    perm_block = min(perm_block, p)
+    r_pad = (-nr) % tile_r
+    c_pad = (-n) % tile_c
+    d_pad = (-d) % feat_block
+    p_pad = (-p) % perm_block
+    xr = jnp.pad(x_rows.astype(jnp.float32), ((0, r_pad), (0, d_pad)))
+    xc = jnp.pad(x.astype(jnp.float32), ((0, c_pad), (0, d_pad)))
+    # pad labels with 0s (masked D² zeroes those tiles' contributions) and
+    # perms edge-mode (excess results sliced off)
+    gr = jnp.pad(g_rows, ((0, 0), (0, r_pad)))
+    gc = jnp.pad(g_cols, ((0, 0), (0, c_pad)))
+    if p_pad:
+        gr = jnp.pad(gr, ((0, p_pad), (0, 0)), mode="edge")
+        gc = jnp.pad(gc, ((0, p_pad), (0, 0)), mode="edge")
+    sqrt_w = jnp.sqrt(inv_gs.astype(jnp.float32)).reshape(1, -1)
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+    sw, rs = _k.fused_sw_pallas(
+        off, xr, xc, gr, gc, sqrt_w, metric=metric, n_valid=int(n_valid),
+        nr_valid=nr, tile_r=tile_r, tile_c=tile_c, feat_block=feat_block,
+        perm_block=perm_block, interpret=interpret)
+    return sw[:p], rs[:nr]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused distance→s_W megakernel.
+
+Same contract as ops.fused_sw_rows, written the slow/obvious way: build the
+dense distance slab from the core row primitives, mask by global index,
+square, contract with the one-hot factors. Tests compare the kernel against
+this at odd tile sizes, prime n, and ragged group counts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import distance as _dist
+from repro.core import fstat
+
+ROWS_FNS = {"euclidean": _dist.euclidean_rows,
+            "braycurtis": _dist.braycurtis_rows,
+            "jaccard": _dist.jaccard_rows}
+
+
+def fused_sw_ref(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
+                 metric="braycurtis", n_valid=None):
+    """(s_W (P,), row_sums (nr,)) for one row slab — the test oracle."""
+    metric = {"aitchison": "euclidean"}.get(metric, metric)
+    nr = x_rows.shape[0]
+    n = x.shape[0]
+    if n_valid is None:
+        n_valid = n
+    d = ROWS_FNS[metric](jnp.asarray(x_rows, jnp.float32),
+                         jnp.asarray(x, jnp.float32))
+    rows_g = row_offset + jnp.arange(nr)[:, None]
+    cols_g = jnp.arange(n)[None, :]
+    valid = (rows_g < n_valid) & (cols_g < n_valid) & (rows_g != cols_g)
+    m2 = jnp.where(valid, d * d, 0.0)
+    e = fstat.onehot_perm_factors(g_cols, inv_gs, m2.dtype)      # (P, n, G)
+    e_rows = fstat.onehot_perm_factors(g_rows, inv_gs, m2.dtype)
+    return fstat.sw_matmul_contract(m2, e, e_rows), jnp.sum(m2, axis=1)

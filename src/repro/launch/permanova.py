@@ -14,6 +14,11 @@ hardware-aware execution engine.
   PYTHONPATH=src python -m repro.launch.permanova \
       --samples 2048 --from-features --materialize auto
 
+  # single-pass megakernel sweep (distance tiles contracted in-kernel),
+  # row slabs sharded 2-way over the 'model' mesh axis:
+  PYTHONPATH=src python -m repro.launch.permanova \
+      --samples 4096 --materialize fused-kernel --shard-rows 2
+
 Scales from laptop smoke runs to the paper's EMP shape
 (--samples 25145 --perms 3999) on a real mesh.
 """
@@ -58,11 +63,24 @@ def main():
                          "construction + s_W planned JOINTLY (stage-1 impl, "
                          "materialization, chunking in one plan)")
     ap.add_argument("--materialize", default="auto",
-                    choices=["auto", "dense", "stream", "fused"],
+                    choices=["auto", "dense", "stream", "fused",
+                             "fused-kernel"],
                     help="pipeline bridge: materialize D, stream D^2 row "
-                         "blocks into one buffer, or fuse blocks straight "
-                         "into the permutation sweep (implies "
-                         "--from-features)")
+                         "blocks into one buffer, fuse blocks straight "
+                         "into the permutation sweep, or run the single-"
+                         "pass fused-kernel (distance tiles contracted "
+                         "in-kernel; D^2 never resident) — implies "
+                         "--from-features")
+    ap.add_argument("--fused-impl", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="fused-kernel implementation: the Pallas "
+                         "megakernel (TPU; interpret mode elsewhere) or "
+                         "the one-jit XLA sweep")
+    ap.add_argument("--shard-rows", type=int, default=None, metavar="N",
+                    help="run the fused-kernel sweep over an N-way 'model' "
+                         "mesh axis (row slabs sharded, partials psum-"
+                         "reduced; remaining devices shard permutations); "
+                         "implies --materialize fused-kernel")
     ap.add_argument("--dist-impl", default="auto",
                     help="pin the stage-1 distance impl (e.g. "
                          "'braycurtis.blocked', 'euclidean.pallas'); "
@@ -87,17 +105,26 @@ def main():
     budget = None if args.budget_mb is None else args.budget_mb * 2**20
 
     if args.from_features or args.materialize != "auto" \
-            or args.dist_impl != "auto":
+            or args.dist_impl != "auto" or args.shard_rows is not None:
         if args.distributed:
             ap.error("--distributed is not supported with the pipeline "
                      "path (--from-features/--materialize/--dist-impl); "
-                     "precompute the matrix or drop --distributed")
+                     "use --shard-rows for the fused-kernel mesh, or "
+                     "precompute the matrix and drop --distributed")
+        mesh = None
+        if args.shard_rows is not None:
+            from repro.launch.mesh import make_host_mesh
+            if args.materialize not in ("auto", "fused-kernel"):
+                ap.error("--shard-rows runs the fused-kernel sweep; drop "
+                         "--materialize or set it to fused-kernel")
+            mesh = make_host_mesh(model_ways=args.shard_rows)
         t0 = time.time()
         res = pipeline.pipeline(
             jnp.asarray(x), jnp.asarray(grouping), metric=args.metric,
             n_perms=args.perms, key=jax.random.key(args.seed),
             dist_impl=args.dist_impl, sw_impl=impl,
             materialize=args.materialize, chunk=args.chunk,
+            fused_impl=args.fused_impl, mesh=mesh,
             memory_budget_bytes=budget, autotune=args.autotune)
         jax.block_until_ready(res.f_perms)
         t_pa = time.time() - t0

@@ -23,9 +23,14 @@ pipeline benchmark suite.
 from repro.pipeline import api, planner, registry, streaming  # noqa: F401
 from repro.pipeline.api import pipeline, pipeline_many  # noqa: F401
 from repro.pipeline.planner import (DEFAULT_MATRIX_BUDGET_BYTES,  # noqa: F401
-                                    PipelinePlan, plan_pipeline)
-from repro.pipeline.registry import (DistanceImpl, get, metrics,  # noqa: F401
+                                    PipelinePlan, autotune_fused,
+                                    autotune_stage1, plan_pipeline)
+from repro.pipeline.registry import (DistanceImpl, FusedImpl,  # noqa: F401
+                                     fused_names, get, get_fused, metrics,
                                      names)
-from repro.pipeline.streaming import (FusedStats, GowerStats,  # noqa: F401
-                                      build_mat2_streaming, fused_sw,
-                                      gower_center, mat2_row_blocks)
+from repro.pipeline.streaming import (FusedKernelStats,  # noqa: F401
+                                      FusedStats, GowerStats,
+                                      build_mat2_streaming, fused_kernel_sw,
+                                      fused_sw, fused_sw_onepass,
+                                      fused_sw_sharded, gower_center,
+                                      mat2_row_blocks)

@@ -42,14 +42,25 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
              slab_budget_bytes: Optional[float] = None,
              dist_tuning: Optional[Dict[str, int]] = None,
              sw_tuning: Optional[Dict[str, int]] = None,
+             fused_impl: str = "auto",
+             fused_tuning: Optional[Dict[str, int]] = None,
              backend: Optional[str] = None,
+             mesh=None,
              autotune: bool = False) -> PermanovaResult:
     """Full features→p-value PERMANOVA under one joint plan.
 
     x:           (n, d) abundance table (raw features, NOT distances).
-    materialize: 'auto' | 'dense' | 'stream' | 'fused' — whether the (n, n)
-                 matrix is built outright, streamed into a single buffer,
-                 or never materialized at all.
+    materialize: 'auto' | 'dense' | 'stream' | 'fused' | 'fused-kernel' —
+                 whether the (n, n) matrix is built outright, streamed into
+                 a single buffer, never materialized at all, or (fused-
+                 kernel) swept in a single pass with distance tiles
+                 contracted in-kernel.
+    fused_impl:  'auto' | 'pallas' | 'xla' (or a fused registry name) —
+                 which single-pass implementation runs a fused-kernel plan.
+    mesh:        optional jax.sharding.Mesh with a 'model' axis — runs the
+                 fused-kernel sweep multi-device (row slabs over 'model',
+                 permutations over the remaining axes, psum-reduced).
+                 Implies materialize='fused-kernel'.
     Remaining knobs mirror engine.run(); budgets split per stage
     (matrix/slab for distances, memory_budget_bytes for s_W labels).
     For a fixed key every materialization produces the same F and p-value
@@ -66,13 +77,38 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         n_groups = int(jnp.max(grouping)) + 1
     n_total = n_perms + 1
 
-    pl = _planner.plan_pipeline(
-        n, d, n_total, n_groups, metric=metric, backend=backend,
-        dist_impl=dist_impl, materialize=materialize, row_block=row_block,
-        matrix_budget_bytes=matrix_budget_bytes,
-        slab_budget_bytes=slab_budget_bytes,
-        memory_budget_bytes=memory_budget_bytes,
-        sw_impl=sw_impl, chunk=chunk, sw_tuning=sw_tuning)
+    if mesh is not None:
+        if materialize not in ("auto", "fused-kernel"):
+            raise ValueError(
+                "mesh execution is fused-kernel only; use "
+                "materialize='auto'/'fused-kernel' (or core.distributed "
+                "for matrix-resident sharding)")
+        materialize = "fused-kernel"
+
+    def _plan():
+        return _planner.plan_pipeline(
+            n, d, n_total, n_groups, metric=metric, backend=backend,
+            dist_impl=dist_impl, materialize=materialize,
+            row_block=row_block, matrix_budget_bytes=matrix_budget_bytes,
+            slab_budget_bytes=slab_budget_bytes,
+            memory_budget_bytes=memory_budget_bytes,
+            sw_impl=sw_impl, chunk=chunk, sw_tuning=sw_tuning,
+            fused_impl=fused_impl, fused_tuning=fused_tuning)
+
+    pl = _plan()
+    if autotune:
+        # measure only what the resolved plan actually executes; winners
+        # persist per host, so replanning afterwards reads them back
+        if pl.materialize == "fused-kernel" and fused_impl == "auto":
+            fused_impl = _planner.autotune_fused(
+                x, grouping, metric=metric, backend=backend,
+                n_groups=n_groups)
+            pl = _plan()
+        elif pl.materialize in ("dense", "stream") and dist_impl == "auto":
+            # never for 'fused': the stage-1 shoot-out builds full dense
+            # matrices, exactly the allocation that bridge exists to avoid
+            dist_impl = _planner.autotune_stage1(x, metric, backend=backend)
+            pl = _plan()
     dspec = _registry.get(pl.dist_impl)
     # planner-resolved tuning (row block folded in) <- caller overrides
     prepare, rows_fn, dense_fn = dspec.bound(
@@ -102,7 +138,9 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
             warnings.warn(
                 "autotune=True ignored: the fused bridge computes s_W in "
                 "its one-hot matmul form (use materialize='stream'/'dense' "
-                "to let measurements pick the s_W impl)", stacklevel=2)
+                "to let measurements pick the s_W impl, or "
+                "materialize='fused-kernel' for the measured single-pass "
+                "candidates)", stacklevel=2)
         inv_gs = permutations.inv_group_sizes(grouping, n_groups)
         s_w, s_t, stats = _streaming.fused_sw(
             prepare(x), rows_fn, grouping, inv_gs, key, n_total,
@@ -117,10 +155,38 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
             plan=(f"rows={stats.row_block}x{stats.n_row_blocks} "
                   f"chunks={stats.n_chunks} slab="
                   f"{stats.peak_slab_bytes/2**20:.1f}MiB"))
+    elif pl.materialize == "fused-kernel":
+        inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+        fspec = _registry.get_fused(pl.fused_impl)
+        if mesh is not None:
+            if fspec.kind != "xla" and fused_impl not in (None, "auto"):
+                warnings.warn(
+                    f"mesh execution runs the XLA fused sweep; pinned "
+                    f"fused_impl={fused_impl!r} is not used", stacklevel=2)
+            s_w, s_t, stats = _streaming.fused_sw_sharded(
+                mesh, prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+                row_block=pl.row_block, chunk=pl.sw.chunk)
+        else:
+            s_w, s_t, stats = _streaming.fused_kernel_sw(
+                prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+                impl=fspec.kind, kernel_metric=fspec.kernel_metric,
+                row_block=pl.row_block, chunk=pl.sw.chunk,
+                tuning=pl.fused_tuning)
+        f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
+                          jnp.float32(s_t), n, n_groups)
+        res = PermanovaResult(
+            f_stat=f_all[0], p_value=p_value_from_null(f_all),
+            s_t=jnp.float32(s_t), s_w=jnp.asarray(s_w[0], jnp.float32),
+            f_perms=f_all, n_objects=n, n_groups=n_groups, n_perms=n_perms,
+            method="pipeline[fused-kernel]",
+            plan=(f"{stats.impl}{'+mesh' if mesh is not None else ''} "
+                  f"rows={stats.row_block} chunks={stats.n_chunks} "
+                  f"slab={stats.peak_slab_bytes/2**20:.2f}MiB "
+                  f"labels={stats.peak_label_bytes/2**20:.2f}MiB"))
     else:  # pragma: no cover - planner validates
         raise ValueError(pl.materialize)
 
-    if pl.materialize == "fused":
+    if pl.materialize in ("fused", "fused-kernel"):
         # the fused bridge IS stage 2; the joint plan string is authoritative
         executed_sw = pl.sw.impl
         plan_str = f"{pl.describe()} :: {res.plan}"
@@ -144,28 +210,36 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
                   metric: str = "braycurtis", n_perms: int = 999,
                   key: Optional[jax.Array] = None,
                   dist_impl: str = "auto", sw_impl: str = "auto",
+                  materialize: str = "auto",
                   row_block: Optional[int] = None,
                   chunk: Optional[int] = None,
                   memory_budget_bytes: Optional[float] = None,
                   matrix_budget_bytes: Optional[float] = None,
-                  backend: Optional[str] = None
+                  backend: Optional[str] = None,
+                  mesh=None
                   ) -> engine.PermanovaManyResult:
     """Stacked studies features→p-values through ONE joint plan.
 
     xs:         (S, n, d) abundance tables.
     groupings:  (S, n) int labels in [0, n_groups) (shared design width,
                 like engine.permanova_many).
-    Distance matrices are built study-by-study with the planned stage-1
-    impl (lax.map bounds peak distance transients to one study's), then the
-    stack runs through the engine's vmapped multi-study program. Study s
-    draws its null from fold_in(key, s) — identical to S independent
-    pipeline() calls.
+    materialize: 'auto' | 'dense' | 'fused-kernel'. The dense path builds
+                the (S, n, n) stack study-by-study (lax.map bounds peak
+                distance transients to one study's) and runs the engine's
+                vmapped program; the fused-kernel path vmaps the single-
+                pass sweep — nothing (n, n)-shaped ever exists, per-study
+                peak residency (row_block, n). 'auto' picks fused-kernel
+                exactly when the stack would blow the matrix budget.
+    mesh:       optional Mesh with a 'data' axis — shards the STUDY axis
+                over 'data' (fused-kernel only). Permutation draws fold
+                the key by GLOBAL study index before sharding, so every
+                study's null is independent and sharded == single-host ==
+                S separate pipeline() calls, regardless of which shard
+                runs it.
 
-    NOTE: the batched path always materializes the full (S, n, n) stack of
-    distance matrices (the vmapped s_W program consumes it); the stream /
-    fused bridges are single-study only for now. A stack bigger than the
-    matrix budget warns — split the studies or fall back to per-study
-    pipeline() calls.
+    Study s draws its null from fold_in(key, s) — identical to S
+    independent pipeline() calls — on EVERY path; a single fold must never
+    be reused across the batch axis.
     """
     if key is None:
         key = jax.random.key(0)
@@ -176,6 +250,28 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
     groupings = jnp.asarray(groupings, dtype=jnp.int32)
     s_count, n, d = xs.shape
     n_total = n_perms + 1
+    stack_bytes = 4 * s_count * n * n
+    budget = (_planner.DEFAULT_MATRIX_BUDGET_BYTES
+              if matrix_budget_bytes is None else matrix_budget_bytes)
+
+    if mesh is not None and materialize not in ("auto", "fused-kernel"):
+        raise ValueError("mesh execution of pipeline_many is fused-kernel "
+                         "only; use materialize='auto'/'fused-kernel'")
+    if materialize == "auto":
+        materialize = ("fused-kernel"
+                       if mesh is not None or stack_bytes > budget
+                       else "dense")
+    if materialize not in ("dense", "fused-kernel"):
+        raise ValueError(
+            f"pipeline_many supports materialize='dense'/'fused-kernel' "
+            f"(got {materialize!r}); stream/fused are single-study bridges")
+
+    if materialize == "fused-kernel":
+        return _pipeline_many_fused(
+            xs, groupings, n_groups=n_groups, metric=metric,
+            n_perms=n_perms, key=key, row_block=row_block, chunk=chunk,
+            memory_budget_bytes=memory_budget_bytes, backend=backend,
+            mesh=mesh)
 
     pl = _planner.plan_pipeline(
         n, d, n_total, n_groups, metric=metric, backend=backend,
@@ -183,16 +279,12 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
         matrix_budget_bytes=matrix_budget_bytes,
         memory_budget_bytes=memory_budget_bytes,
         sw_impl=sw_impl, chunk=chunk)
-    stack_bytes = 4 * s_count * n * n
-    budget = (_planner.DEFAULT_MATRIX_BUDGET_BYTES
-              if matrix_budget_bytes is None else matrix_budget_bytes)
     if stack_bytes > budget:
         warnings.warn(
             f"pipeline_many materializes the full (S, n, n) stack "
             f"({stack_bytes/2**20:.0f}MiB), exceeding the matrix budget "
-            f"({budget/2**20:.0f}MiB); stream/fused bridges are not yet "
-            "implemented for the batched path — split the studies or run "
-            "pipeline() per study", stacklevel=2)
+            f"({budget/2**20:.0f}MiB); use materialize='fused-kernel' "
+            "(never builds the stack) or split the studies", stacklevel=2)
     dspec = _registry.get(pl.dist_impl)
     _, _, dense_fn = dspec.bound(**pl.dist_tuning)
 
@@ -204,3 +296,79 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
     res.plan = (f"{pl.dist_impl} -> dense(batched lax.map) -> "
                 f"{res.plan}")
     return res
+
+
+def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
+                         metric: str, n_perms: int, key: jax.Array,
+                         row_block: Optional[int], chunk: Optional[int],
+                         memory_budget_bytes: Optional[float],
+                         backend: Optional[str],
+                         mesh) -> engine.PermanovaManyResult:
+    """Batched single-pass sweep: vmap of the fused-kernel dataflow over
+    the study axis, optionally sharded over the mesh's 'data' axis.
+
+    Per-study keys are folded by GLOBAL study index BEFORE any sharding —
+    the stacked studies each draw an independent null exactly as S
+    separate pipeline() calls would (a single fold reused across the
+    batch axis would correlate every study's permutations).
+    """
+    from repro.core import distance as _dist
+    s_count, n, d = (int(v) for v in xs.shape)
+    n_total = n_perms + 1
+
+    # joint plan for ONE study; the vmap holds every study's chunk state
+    # live at once, so the label budget splits S ways (engine convention)
+    total_budget = (engine.planner.DEFAULT_STREAM_BUDGET_BYTES
+                    if memory_budget_bytes is None else memory_budget_bytes)
+    # the batched sweep always executes the XLA form (vmapped scan-of-
+    # scans) — pin the plan to it so the recorded impl matches execution
+    pl = _planner.plan_pipeline(
+        n, d, n_total, n_groups, metric=metric, backend=backend,
+        materialize="fused-kernel", fused_impl="xla", row_block=row_block,
+        memory_budget_bytes=total_budget / s_count, chunk=chunk)
+    mdef = _dist.ROW_METRICS[metric]
+    xs_prep = mdef.prepare(xs)             # every prepare is last-axis-local
+    block = int(min(pl.row_block, n))
+    ch = int(max(1, min(pl.sw.chunk, n_total)))
+    n_chunks = -(-n_total // ch)
+    pad = (-n) % block
+    xs_pad = jnp.pad(xs_prep, ((0, 0), (0, pad), (0, 0)))
+    inv_gs = jax.vmap(
+        lambda g: permutations.inv_group_sizes(g, n_groups))(groupings)
+    # GLOBAL study index -> per-study key, folded before any sharding
+    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+        jnp.arange(s_count))
+
+    def one(xp_pad, xp, grouping, igs, study_key):
+        return _streaming._sweep_rows_perms(
+            xp_pad, xp, grouping, igs, study_key, jnp.int32(0),
+            jnp.int32(0), rows_fn=mdef.rows, block=block, chunk=ch,
+            n_chunks=n_chunks, n=n, n_rows_pad=n + pad, n_groups=n_groups)
+
+    run = jax.jit(jax.vmap(one))
+    args = (xs_pad, xs_prep, groupings, inv_gs, study_keys)
+    where = "vmap"
+    if mesh is not None and mesh.shape.get("data", 1) > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        data_ways = mesh.shape["data"]
+        if s_count % data_ways:
+            raise ValueError(
+                f"study count {s_count} must divide the 'data' axis "
+                f"({data_ways}) for the sharded batched path")
+        spec = lambda a: NamedSharding(  # noqa: E731
+            mesh, P(*(["data"] + [None] * (a.ndim - 1))))
+        args = tuple(jax.device_put(a, spec(a)) for a in args)
+        where = f"vmap@data[{data_ways}]"
+    s_w_all, rs = run(*args)               # (S, n_chunks*ch), (S, n+pad)
+    s_w_all = s_w_all[:, :n_total]
+    s_t = jnp.sum(rs[:, :n], axis=1) / 2.0 / n
+    f_perms = jax.vmap(f_from_sw, in_axes=(0, 0, None, None))(
+        s_w_all, s_t.astype(jnp.float32), n, n_groups)
+    p_vals = jax.vmap(p_value_from_null)(f_perms)
+    return engine.PermanovaManyResult(
+        f_stat=f_perms[:, 0], p_value=p_vals, s_t=s_t.astype(jnp.float32),
+        s_w=s_w_all[:, 0], f_perms=f_perms, n_objects=n, n_groups=n_groups,
+        n_perms=n_perms,
+        plan=(f"{pl.fused_impl}({where}) rows={block} "
+              f"chunk={ch} studies={s_count} chunks={n_chunks} | "
+              f"{pl.reason}"))

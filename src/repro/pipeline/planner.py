@@ -13,11 +13,20 @@ one place:
             row-block size
   bridge    the materialization strategy: 'dense' (D then mat2 — two (n,n)
             transients), 'stream' (square row blocks into ONE mat2 buffer;
-            never resident twice), or 'fused' (no (n,n) array at all;
-            row slabs feed permutation chunks directly)
+            never resident twice), 'fused' (no (n,n) array at all; row
+            slabs feed permutation chunks directly), or 'fused-kernel'
+            (single-pass: distance tiles built AND contracted inside one
+            program — the Pallas megakernel on TPU, a one-jit XLA sweep
+            elsewhere — so D² slabs never round-trip through HBM)
   stage 2   the engine Plan (impl + tuning + streaming chunk) for s_W,
             delegated to repro.engine.planner — including its persisted
             autotune measurements
+
+The fused-kernel plan is joint across every knob: tile_r/tile_c/feat_block/
+perm_block come from the fused registry's defaults overlaid with persisted
+autotune measurements (`autotune_stage1` / `autotune_fused` time candidates
+on the real operands and park the winners in the same per-host cache the
+engine planner uses, keyed by (backend, metric, impl)).
 
 `plan_pipeline()` is pure shape/backend arithmetic, like `engine.plan()`.
 """
@@ -25,7 +34,10 @@ one place:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
 
 from repro.engine import planner as _eplanner
 from repro.pipeline import registry as _dreg
@@ -40,7 +52,7 @@ MIN_ROW_BLOCK = 8
 MAX_ROW_BLOCK = 4096
 PALLAS_MIN_N = 256
 
-MATERIALIZE_MODES = ("dense", "stream", "fused")
+MATERIALIZE_MODES = ("dense", "stream", "fused", "fused-kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,16 +61,25 @@ class PipelinePlan:
     metric: str
     dist_impl: str                # distance registry name
     dist_tuning: Dict[str, int]
-    materialize: str              # 'dense' | 'stream' | 'fused'
+    materialize: str              # 'dense' | 'stream' | 'fused' |
+                                  # 'fused-kernel'
     row_block: int
     sw: _eplanner.Plan            # stage-2 engine plan
     backend: str
     reason: str
+    fused_impl: Optional[str] = None      # fused registry name when the
+                                          # bridge is 'fused-kernel'
+    fused_tuning: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def describe_stage1(self) -> str:
         """Stage 1 + bridge only — what the pipeline itself executes. The
         dense/stream bridges delegate stage 2 to engine.run, whose own plan
         record is authoritative there (autotune may override ours)."""
+        if self.materialize == "fused-kernel":
+            t = ",".join(f"{k}={v}"
+                         for k, v in sorted(self.fused_tuning.items()))
+            return (f"{self.fused_impl}[{t}] -> fused-kernel"
+                    f"(rows={self.row_block})")
         t = ",".join(f"{k}={v}" for k, v in sorted(self.dist_tuning.items()))
         return (f"{self.dist_impl}[{t}] -> {self.materialize}"
                 f"(rows={self.row_block})")
@@ -71,10 +92,15 @@ class PipelinePlan:
 def _pick_dist_impl(metric: str, backend: str, n: int, d: int,
                     slab_budget: float):
     """Stage-1 impl by capability + transient model (Fig. 1 transplanted:
-    bounded-working-set forms on CPU, widest forms on GPU, tiles on TPU)."""
+    bounded-working-set forms on CPU, widest forms on GPU, tiles on TPU).
+    A persisted stage-1 shoot-out on this host overrides the model."""
     if metric not in _dreg.metrics():
         raise KeyError(f"unknown metric {metric!r}; "
                        f"registered: {_dreg.metrics()}")
+    measured = measured_stage1(backend, metric, n)
+    if measured is not None:
+        return measured, ("persisted stage-1 autotune measurement "
+                          f"({_eplanner.autotune_cache_path()})")
     if backend == "tpu" and n >= PALLAS_MIN_N and \
             _dreg.names(metric=metric, kind="pallas"):
         return (f"{metric}.pallas",
@@ -101,7 +127,7 @@ def _pick_dist_impl(metric: str, backend: str, n: int, d: int,
             f"{why}; row-streaming form (Fig. 1 tiled analogue)")
 
 
-def _pick_materialize(n: int, matrix_budget: float):
+def _pick_materialize(n: int, matrix_budget: float, metric: str):
     dense_bytes = 8 * n * n      # D + mat2 both live transiently
     mat2_bytes = 4 * n * n
     if dense_bytes <= matrix_budget:
@@ -110,9 +136,27 @@ def _pick_materialize(n: int, matrix_budget: float):
     if mat2_bytes <= matrix_budget:
         return "stream", (f"mat2 {mat2_bytes/2**20:.0f}MiB fits but D+mat2 "
                           "would not; stream row blocks into one buffer")
-    return "fused", (f"even one (n,n) buffer {mat2_bytes/2**20:.0f}MiB "
-                     "exceeds the matrix budget; fuse row slabs into the "
-                     "permutation sweep")
+    why = (f"even one (n,n) buffer {mat2_bytes/2**20:.0f}MiB exceeds the "
+           "matrix budget")
+    if _dreg.fused_names(metric=metric):
+        return "fused-kernel", (f"{why}; single-pass sweep (distance tiles "
+                                "contracted in-kernel, D² never resident)")
+    return "fused", (f"{why}; fuse row slabs into the permutation sweep")
+
+
+def _pick_fused_impl(metric: str, backend: str, n: int) -> Tuple[str, str]:
+    """Fused-kernel impl: persisted shoot-out winner, else the Pallas
+    megakernel on TPU and the one-jit XLA sweep everywhere else."""
+    measured = measured_fused(backend, metric, n)
+    if measured is not None:
+        return measured, "persisted fused-kernel autotune measurement"
+    pallas = _dreg.fused_names(metric=metric, kind="pallas")
+    if backend == "tpu" and n >= PALLAS_MIN_N and pallas:
+        return pallas[0], "Pallas megakernel past the tile-viability point"
+    xla = _dreg.fused_names(metric=metric, kind="xla")
+    if not xla:  # pragma: no cover - every metric registers an xla form
+        raise KeyError(f"no fused-kernel impl for metric {metric!r}")
+    return xla[0], "one-jit XLA sweep (no kernel path on this backend)"
 
 
 def _pick_row_block(n: int, d: int, impl: _dreg.DistanceImpl,
@@ -136,7 +180,10 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
                   memory_budget_bytes: Optional[float] = None,
                   sw_impl: Optional[str] = None,
                   chunk: Optional[int] = None,
-                  sw_tuning: Optional[Dict[str, int]] = None) -> PipelinePlan:
+                  sw_tuning: Optional[Dict[str, int]] = None,
+                  fused_impl: Optional[str] = None,
+                  fused_tuning: Optional[Dict[str, int]] = None
+                  ) -> PipelinePlan:
     """Resolve the full two-stage plan for one problem.
 
     n_perms counts TOTAL permutation slots (requested + 1 observed), same
@@ -164,7 +211,7 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
 
     mat_pinned = materialize not in (None, "auto")
     if not mat_pinned:
-        mat, mreason = _pick_materialize(n, matrix_budget)
+        mat, mreason = _pick_materialize(n, matrix_budget, metric)
     else:
         if materialize not in MATERIALIZE_MODES:
             raise ValueError(f"materialize={materialize!r}; expected one of "
@@ -182,24 +229,25 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     row_block = max(1, min(int(row_block), n))
 
     # Stage 2 via the engine planner (shares its persisted autotune state).
-    # The fused bridge computes s_W itself in the one-hot matmul form, so
-    # pin the engine plan to 'matmul' there — its chunk/budget arithmetic
-    # still sizes the label blocks. A caller-pinned sw_impl that the fused
-    # bridge cannot honor is a hard error when fused was pinned too, and a
-    # downgrade to 'stream' when the bridge choice was ours.
+    # Both fused bridges compute s_W themselves in the one-hot matmul form,
+    # so pin the engine plan to 'matmul' there — its chunk/budget arithmetic
+    # still sizes the label blocks. A caller-pinned sw_impl that a fused
+    # bridge cannot honor is a hard error when the bridge was pinned too,
+    # and a downgrade to 'stream' when the bridge choice was ours.
+    fused_modes = ("fused", "fused-kernel")
     pinned_sw = sw_impl if sw_impl not in (None, "auto") else None
-    if mat == "fused" and pinned_sw not in (None, "matmul"):
+    if mat in fused_modes and pinned_sw not in (None, "matmul"):
         if mat_pinned:
             raise ValueError(
-                f"the fused bridge computes s_W in the one-hot matmul form "
+                f"the {mat} bridge computes s_W in the one-hot matmul form "
                 f"and cannot honor sw_impl={pinned_sw!r}; use "
                 "sw_impl='auto'/'matmul' or materialize='stream'")
         mat = "stream"
         mreason += (f"; downgraded fused->stream to honor "
                     f"sw_impl={pinned_sw!r} (over matrix budget)")
-    if mat == "fused" and pinned_sw is None:
+    if mat in fused_modes and pinned_sw is None:
         pinned_sw = "matmul"
-    if mat == "fused" and chunk is None:
+    if mat in fused_modes and chunk is None:
         # The fused step's working set is the one-hot block (chunk, n, G)
         # plus its (n, chunk*G) reshape — G-fold larger per permutation
         # than the engine's label-only model. Size the chunk against the
@@ -214,6 +262,32 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
                         memory_budget_bytes=memory_budget_bytes,
                         chunk=chunk, tuning=sw_tuning)
 
+    # Fused-kernel: resolve which single-pass impl runs the sweep and its
+    # joint tile tuning (registry defaults <- persisted measurements <-
+    # caller overrides).
+    f_impl = None
+    f_tuning: Dict[str, int] = {}
+    if mat == "fused-kernel":
+        if fused_impl in (None, "auto"):
+            f_impl, freason = _pick_fused_impl(metric, backend, n)
+        else:
+            f_impl = (fused_impl if "." in fused_impl
+                      else f"{metric}.fusedk.{fused_impl}")
+            freason = "caller-pinned fused impl"
+        fspec = _dreg.get_fused(f_impl)
+        if fspec.metric != metric:
+            raise ValueError(f"fused impl {f_impl!r} computes "
+                             f"{fspec.metric!r}, not {metric!r}")
+        f_tuning = dict(fspec.tuning)
+        entry = _eplanner.measured_entry(_fused_key(backend, metric, f_impl))
+        if entry and isinstance(entry.get("tuning"), dict):
+            f_tuning.update({k: int(v) for k, v in entry["tuning"].items()
+                             if k in f_tuning})
+        if fused_tuning:
+            f_tuning.update({k: v for k, v in fused_tuning.items()
+                             if k in f_tuning})
+        mreason += f"; {freason}"
+
     # The planned row block IS the blocked impls' working-set knob — thread
     # it into the resolved tuning so every bridge (including dense, whose
     # builder scans the same row primitives) honors the slab budget.
@@ -223,4 +297,145 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     return PipelinePlan(
         metric=metric, dist_impl=dname, dist_tuning=dist_tuning,
         materialize=mat, row_block=row_block, sw=sw, backend=backend,
-        reason=f"{dreason}; {mreason}")
+        reason=f"{dreason}; {mreason}", fused_impl=f_impl,
+        fused_tuning=f_tuning)
+
+
+# ---------------------------------------------------------------------------
+# Persisted stage-1 / fused-kernel autotuning. Candidate timings live in the
+# SAME per-host cache as the engine's s_W shoot-outs, one entry per
+# (backend, metric, impl) key, so a serving host measures each candidate
+# once ever and plan_pipeline() reads the winners back as its defaults.
+# ---------------------------------------------------------------------------
+
+def _stage1_key(backend: str, metric: str, impl: str) -> str:
+    return f"dist|{backend}|{metric}|{impl}"
+
+
+def _fused_key(backend: str, metric: str, impl: str) -> str:
+    return f"fusedk|{backend}|{metric}|{impl}"
+
+
+def _stage1_candidates(metric: str, backend: str):
+    names = _dreg.names(metric=metric, kind="dense") + \
+        _dreg.names(metric=metric, kind="blocked")
+    if backend == "tpu":  # interpret-mode tiles are not a real candidate
+        names += _dreg.names(metric=metric, kind="pallas")
+    return names
+
+
+def _argmin_measured(keys_by_name, n: int):
+    """Winner among candidates whose persisted entry matches n's bucket.
+    Requires EVERY candidate measured — a partial shoot-out must not
+    short-circuit the heuristics."""
+    bucket = _eplanner._bucket(n)
+    times = {}
+    for name, key in keys_by_name.items():
+        entry = _eplanner.measured_entry(key)
+        if not entry or entry.get("bucket") != bucket \
+                or "us" not in entry:
+            return None
+        times[name] = entry["us"]
+    return min(times, key=times.get) if times else None
+
+
+def measured_stage1(backend: str, metric: str, n: int) -> Optional[str]:
+    """Persisted stage-1 winner for this (backend, metric, n-bucket)."""
+    cands = _stage1_candidates(metric, backend)
+    return _argmin_measured(
+        {c: _stage1_key(backend, metric, c) for c in cands}, n)
+
+
+def measured_fused(backend: str, metric: str, n: int) -> Optional[str]:
+    """Persisted fused-kernel winner for this (backend, metric, n-bucket)."""
+    cands = [c for c in _dreg.fused_names(metric=metric)
+             if backend in _dreg.get_fused(c).backends]
+    return _argmin_measured(
+        {c: _fused_key(backend, metric, c) for c in cands}, n)
+
+
+def _time_call(fn, *args, **kw) -> float:
+    jax.block_until_ready(fn(*args, **kw))   # compile + warm
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    return time.perf_counter() - t0
+
+
+def autotune_stage1(x, metric: str, *, backend: Optional[str] = None) -> str:
+    """Time each stage-1 candidate's dense build on the real operands and
+    persist one entry per (backend, metric, impl). Returns the winner."""
+    import jax.numpy as jnp  # local: keep module import-light
+    backend = backend or _eplanner.default_backend()
+    x = jnp.asarray(x)
+    n, d = (int(s) for s in x.shape)
+    best, best_t = None, float("inf")
+    for name in _stage1_candidates(metric, backend):
+        spec = _dreg.get(name)
+        _, _, dense_fn = spec.bound()
+        try:
+            t = _time_call(jax.jit(dense_fn), x)
+        except Exception:  # noqa: BLE001 — an impl may not lower here
+            continue
+        _eplanner.record_entry(_stage1_key(backend, metric, name), {
+            "impl": name, "us": round(t * 1e6, 1), "n": n, "d": d,
+            "bucket": _eplanner._bucket(n)})
+        if t < best_t:
+            best, best_t = name, t
+    if best is None:
+        raise RuntimeError("autotune_stage1: no candidate ran successfully")
+    return best
+
+
+def autotune_fused(x, grouping, *, metric: str = "braycurtis",
+                   backend: Optional[str] = None,
+                   n_groups: Optional[int] = None,
+                   sample_perms: int = 8,
+                   key=None) -> str:
+    """Time each fused-kernel candidate on a small permutation sample of
+    the real operands; persist per-impl entries (timing + the tuning that
+    achieved it) and return the winner."""
+    import jax.numpy as jnp
+    from repro.core import permutations as _perms
+    from repro.pipeline import streaming as _streaming
+    backend = backend or _eplanner.default_backend()
+    x = jnp.asarray(x)
+    grouping = jnp.asarray(grouping, jnp.int32)
+    n, d = (int(s) for s in x.shape)
+    if n_groups is None:
+        n_groups = int(grouping.max()) + 1
+    if key is None:
+        key = jax.random.key(0)
+    inv_gs = _perms.inv_group_sizes(grouping, n_groups)
+    from repro.core import distance as _dist
+    mdef = _dist.ROW_METRICS[metric]
+    xprep = mdef.prepare(x)
+    row_block = _pick_row_block(n, d, _dreg.get(f"{metric}.blocked"),
+                                DEFAULT_SLAB_BUDGET_BYTES)
+    best, best_t = None, float("inf")
+    for name in _dreg.fused_names(metric=metric):
+        spec = _dreg.get_fused(name)
+        if backend not in spec.backends:
+            continue
+        tuning = dict(spec.tuning)
+
+        def run():
+            return _streaming.fused_kernel_sw(
+                xprep, mdef.rows, grouping, inv_gs, key, sample_perms,
+                impl=spec.kind, kernel_metric=spec.kernel_metric,
+                row_block=row_block, chunk=sample_perms, tuning=tuning)
+
+        try:
+            run()                  # compile + warm (drivers host-sync)
+            t0 = time.perf_counter()
+            run()
+            t = time.perf_counter() - t0
+        except Exception:  # noqa: BLE001
+            continue
+        _eplanner.record_entry(_fused_key(backend, metric, name), {
+            "impl": name, "us": round(t * 1e6, 1), "n": n, "d": d,
+            "bucket": _eplanner._bucket(n), "tuning": tuning})
+        if t < best_t:
+            best, best_t = name, t
+    if best is None:
+        raise RuntimeError("autotune_fused: no candidate ran successfully")
+    return best

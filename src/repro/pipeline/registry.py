@@ -238,7 +238,102 @@ _register_metric("aitchison", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
 _register_metric("braycurtis", rows_ws=_ws_rows_broadcast,
                  dense_ws=_ws_dense_broadcast, pallas_ok=True,
                  dense_backends=("gpu",), blocked_backends=("cpu", "gpu"))
-# jaccard: presence/absence matmul form (no pallas kernel yet).
+# jaccard: presence/absence matmul form — the Pallas tile accumulates
+# |A ∩ B| on the MXU, so every registered metric now has a tiled impl.
 _register_metric("jaccard", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
-                 pallas_ok=False, dense_backends=("cpu", "gpu", "tpu"),
+                 pallas_ok=True, dense_backends=("cpu", "gpu", "tpu"),
                  blocked_backends=("cpu", "gpu", "tpu"))
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel (single-pass distance→s_W) implementation registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedImpl:
+    """One single-pass distance→s_W implementation (the fused-kernel
+    materialization bridge) plus planner-facing metadata.
+
+    Unlike DistanceImpl, a fused impl produces no distance operand at all:
+    it executes the whole features→s_W sweep (pipeline.streaming's
+    `fused_kernel_sw` dispatches on `kind`). `workset_bytes` models the
+    peak DEVICE residency beyond the (n, d) features and (chunk, n)
+    labels as a function of (n, d, chunk, n_groups, row_block) — for the
+    Pallas megakernel that is a handful of VMEM tiles, independent of n.
+    """
+    name: str                      # "<metric>.fusedk.<kind>"
+    metric: str
+    kind: str                      # 'pallas' | 'xla'
+    backends: Tuple[str, ...]      # backends where this form is performant
+    tuning: Mapping[str, int]
+    workset_bytes: Callable[[int, int, int, int, int], int]
+    kernel_metric: str             # megakernel body (aitchison→euclidean)
+    description: str = ""
+
+
+_FUSED_REGISTRY: dict = {}
+
+
+def register_fused(impl: FusedImpl) -> FusedImpl:
+    if impl.name in _FUSED_REGISTRY:
+        raise ValueError(f"duplicate fused impl {impl.name!r}")
+    _FUSED_REGISTRY[impl.name] = impl
+    return impl
+
+
+def get_fused(name: str) -> FusedImpl:
+    try:
+        return _FUSED_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown fused impl {name!r}; "
+            f"registered: {sorted(_FUSED_REGISTRY)}") from None
+
+
+def fused_names(*, metric: Optional[str] = None,
+                backend: Optional[str] = None,
+                kind: Optional[str] = None):
+    """Registered fused-kernel impl names, filtered by capability."""
+    out = []
+    for n, impl in _FUSED_REGISTRY.items():
+        if metric is not None and impl.metric != metric:
+            continue
+        if backend is not None and backend not in impl.backends:
+            continue
+        if kind is not None and impl.kind != kind:
+            continue
+        out.append(n)
+    return sorted(out)
+
+
+def _ws_fused_pallas(n, d, chunk, n_groups, row_block):
+    # 4 VMEM scratch tiles + the (chunk,) accumulator — independent of n²
+    tr = tc = 128
+    return 16 * tr * tc + 4 * chunk
+
+
+def _ws_fused_xla(n, d, chunk, n_groups, row_block):
+    # one (row_block, n) D² slab + the (chunk, n, G) one-hot factor
+    return 4 * row_block * n + 4 * chunk * n * (n_groups + 1)
+
+
+for _metric in ("euclidean", "aitchison", "braycurtis", "jaccard"):
+    _kmetric = "euclidean" if _metric == "aitchison" else _metric
+    register_fused(FusedImpl(
+        name=f"{_metric}.fusedk.pallas", metric=_metric, kind="pallas",
+        backends=("tpu",),
+        tuning={"tile_r": 128, "tile_c": 128, "feat_block": 128,
+                "perm_block": 16},
+        workset_bytes=_ws_fused_pallas, kernel_metric=_kmetric,
+        description=f"Pallas megakernel: {_metric} D² tiles built and "
+                    "contracted in VMEM; D² never touches HBM",
+    ))
+    register_fused(FusedImpl(
+        name=f"{_metric}.fusedk.xla", metric=_metric, kind="xla",
+        backends=("cpu", "gpu", "tpu"),
+        tuning={},
+        workset_bytes=_ws_fused_xla, kernel_metric=_kmetric,
+        description=f"one-jit {_metric} scan-of-scans: the megakernel "
+                    "dataflow as a single XLA program (no per-cell host "
+                    "sync; the off-TPU fused-kernel form)",
+    ))

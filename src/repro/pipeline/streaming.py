@@ -1,6 +1,6 @@
 """Streaming distance construction + fused distance→s_W execution.
 
-Three materialization strategies for getting from an (n, d) table to the
+Four materialization strategies for getting from an (n, d) table to the
 squared-distance operand `mat2 = D∘D` the s_W engine consumes:
 
   dense    build D, hand it to the engine (which squares it) — D and mat2
@@ -20,6 +20,19 @@ squared-distance operand `mat2 = D∘D` the s_W engine consumes:
            engine scheduler uses. Peak residency is one (row_block, n)
            slab + one (chunk, n) label block, independent of n.
 
+  fused-kernel
+           the single-pass form of `fused`: distance construction and the
+           s_W contraction execute inside ONE program, so the D² slab is
+           not round-tripped through HBM between two dispatches and the
+           sweep pays no per-cell host sync. Two implementations behind
+           the same driver (`fused_kernel_sw`): the Pallas megakernel
+           (kernels.fused_sw — D² tiles live only in VMEM) and a one-jit
+           XLA scan-of-scans (`fused_sw_onepass`) for backends without a
+           kernel path. `fused_sw_sharded` runs the same dataflow over a
+           device mesh: row slabs shard the 'model' axis, permutations
+           shard the remaining axes, partials psum-reduced — mirroring
+           core.distributed, but without ever building the matrix.
+
 The fused partial is the Gower-centered trace statistic in disguise:
 s_W over row blocks is exactly the blockwise trace form of Anderson's
 centered inner-product matrix, so consuming mat2 blocks as produced IS
@@ -34,8 +47,14 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import fstat, permutations
+
+try:  # jax >= 0.5 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 Array = jax.Array
 
@@ -202,3 +221,278 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
         peak_slab_bytes=4 * row_block * n,
         peak_label_bytes=4 * chunk * n)
     return out, s_t_sum / 2.0 / n, stats
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel: single-pass distance → s_W (tentpole of the megakernel PR).
+# ---------------------------------------------------------------------------
+
+class FusedKernelStats(NamedTuple):
+    """Execution evidence: how the single-pass sweep actually ran."""
+    impl: str                # 'pallas' | 'xla'
+    n_total: int
+    chunk: int
+    n_chunks: int
+    row_block: int
+    peak_slab_bytes: int     # (row_block, n) D² residency (0 for pallas:
+                             # tiles never leave VMEM)
+    peak_label_bytes: int    # (chunk, n) labels + (chunk, n, G) one-hot
+
+
+def _sweep_rows_perms(x_rows_pad, x_full, grouping, inv_gs, key,
+                      row_offset, perm_lo, *, rows_fn, block, chunk,
+                      n_chunks, n, n_rows_pad, n_groups):
+    """Fully-traced fused sweep over LOCAL rows × a permutation range.
+
+    x_rows_pad: (n_local, d) prepared features, n_local a multiple of
+                `block`; the slab's global rows start at `row_offset`
+                (traced — one program serves every shard/offset).
+    perm_lo:    first global permutation index (traced); the sweep covers
+                [perm_lo, perm_lo + n_chunks*chunk).
+    Returns (s_w (n_chunks*chunk,) f32 partial over these rows,
+             row_sums (n_local,) f32). Scan over row blocks outside, scan
+    over permutation chunks inside — each D² block is built once and
+    consumed immediately; nothing (n, n)-shaped ever exists.
+    """
+    n_local = x_rows_pad.shape[0]
+    d_feat = x_rows_pad.shape[1]
+    chunk_los = perm_lo + jnp.arange(n_chunks) * chunk
+
+    def slab_body(carry, lo_r):
+        sw_acc, rs = carry
+        xb = jax.lax.dynamic_slice(x_rows_pad, (lo_r, 0), (block, d_feat))
+        drows = rows_fn(xb, x_full)                      # (block, n)
+        gids = row_offset + lo_r + jnp.arange(block)
+        valid = (gids < n)[:, None] & (gids[:, None]
+                                       != jnp.arange(n)[None, :])
+        m2 = jnp.where(valid, drows * drows, 0.0)
+
+        def chunk_body(_, lo_p):
+            g = permutations.permutation_batch_dyn(key, grouping, lo_p,
+                                                   chunk)
+            e = fstat.onehot_perm_factors(g, inv_gs, m2.dtype)
+            e_pad = jnp.pad(e, ((0, 0), (0, n_rows_pad - n), (0, 0)))
+            e_rows = jax.lax.dynamic_slice(
+                e_pad, (0, row_offset + lo_r, 0), (chunk, block, n_groups))
+            return None, fstat.sw_matmul_contract(m2, e, e_rows)
+
+        _, sws = jax.lax.scan(chunk_body, None, chunk_los)
+        rs = jax.lax.dynamic_update_slice(rs, jnp.sum(m2, axis=1), (lo_r,))
+        return (sw_acc + sws.reshape(-1), rs), None
+
+    init = (jnp.zeros((n_chunks * chunk,), jnp.float32),
+            jnp.zeros((n_local,), jnp.float32))
+    (s_w, rs), _ = jax.lax.scan(slab_body, init,
+                                jnp.arange(n_local // block) * block)
+    return s_w, rs
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rows_fn", "block", "chunk", "n_chunks", "n", "n_rows_pad", "n_groups"))
+def _onepass_step(x_rows_pad, x_full, grouping, inv_gs, key, *, rows_fn,
+                  block, chunk, n_chunks, n, n_rows_pad, n_groups):
+    return _sweep_rows_perms(
+        x_rows_pad, x_full, grouping, inv_gs, key, jnp.int32(0),
+        jnp.int32(0), rows_fn=rows_fn, block=block, chunk=chunk,
+        n_chunks=n_chunks, n=n, n_rows_pad=n_rows_pad, n_groups=n_groups)
+
+
+def fused_sw_onepass(xprep: Array, rows_fn: Callable, grouping: Array,
+                     inv_gs: Array, key: jax.Array, n_total: int, *,
+                     row_block: int, chunk: int):
+    """The fused sweep as ONE jitted program (the off-TPU megakernel form).
+
+    Same math as `fused_sw`, but the (row block × perm chunk) double loop
+    runs as a scan-of-scans inside a single dispatch: no per-cell host
+    round trips, no host-side accumulation buffers, and XLA keeps each D²
+    block live exactly as long as its contractions need it.
+    """
+    n = int(xprep.shape[0])
+    n_groups = int(inv_gs.shape[0])
+    block = int(min(row_block, n))
+    chunk = int(max(1, min(chunk, n_total)))
+    n_chunks = -(-n_total // chunk)
+    xpad, n_pad = _pad_rows(xprep, block)
+    s_w, rs = _onepass_step(
+        xpad, xprep, jnp.asarray(grouping, jnp.int32), inv_gs, key,
+        rows_fn=rows_fn, block=block, chunk=chunk, n_chunks=n_chunks, n=n,
+        n_rows_pad=n_pad, n_groups=n_groups)
+    s_t = float(jnp.sum(rs)) / 2.0 / n
+    stats = FusedKernelStats(
+        impl="xla", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+        row_block=block, peak_slab_bytes=4 * block * n,
+        peak_label_bytes=4 * chunk * n * (n_groups + 1))
+    return np.asarray(s_w[:n_total], np.float64), s_t, stats
+
+
+_labels_step = jax.jit(permutations.permutation_batch_dyn,
+                       static_argnames=("chunk", "identity_first"))
+
+
+def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
+                        key: jax.Array, n_total: int, *, kernel_metric: str,
+                        chunk: int, tuning: Optional[dict] = None,
+                        interpret: Optional[bool] = None,
+                        progress: Optional[Callable[[int, int], None]] = None):
+    """The fused sweep through the Pallas megakernel (kernels.fused_sw).
+
+    One kernel launch per permutation chunk covers ALL row/col tiles and
+    every perm block of the chunk: D² tiles are built from feature slabs
+    and contracted in VMEM, so the only HBM traffic per chunk is the
+    feature table and the (chunk, n) labels — the distance matrix never
+    exists at any scope wider than one (tile_r, tile_c) scratch buffer.
+    """
+    from repro.kernels.fused_sw import ops as _fops  # deferred: pallas
+    n = int(xprep.shape[0])
+    chunk = int(max(1, min(chunk, n_total)))
+    tuning = dict(tuning or {})
+    grouping = jnp.asarray(grouping, jnp.int32)
+    out = np.zeros((n_total,), np.float64)
+    rowsums = None
+    n_chunks = 0
+    for lo in range(0, n_total, chunk):
+        g = _labels_step(key, grouping, jnp.int32(lo), chunk=chunk)
+        sw, rs = _fops.fused_sw_rows(
+            xprep, xprep, g, g, inv_gs, 0, metric=kernel_metric,
+            interpret=interpret, **tuning)
+        hi = min(lo + chunk, n_total)
+        out[lo:hi] = np.asarray(sw[: hi - lo], np.float64)
+        if rowsums is None:
+            rowsums = np.asarray(rs, np.float64)
+        n_chunks += 1
+        if progress is not None:
+            progress(hi, n_total)
+    s_t = float(rowsums.sum()) / 2.0 / n
+    tr = int(tuning.get("tile_r", 128))
+    tc = int(tuning.get("tile_c", 128))
+    stats = FusedKernelStats(
+        impl="pallas", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+        row_block=tr, peak_slab_bytes=16 * tr * tc,  # 4 VMEM scratch tiles
+        peak_label_bytes=4 * chunk * n)
+    return out, s_t, stats
+
+
+def fused_kernel_sw(xprep: Array, rows_fn: Callable, grouping: Array,
+                    inv_gs: Array, key: jax.Array, n_total: int, *,
+                    impl: str, kernel_metric: str, row_block: int,
+                    chunk: int, tuning: Optional[dict] = None,
+                    interpret: Optional[bool] = None,
+                    progress: Optional[Callable[[int, int], None]] = None):
+    """Dispatch the single-pass fused sweep to the planned implementation.
+
+    impl: 'pallas' (the megakernel; interpret mode off TPU) or 'xla' (the
+    one-jit scan-of-scans). Both return (s_w (n_total,) float64, s_t,
+    FusedKernelStats) with identical statistics for a fixed key.
+    """
+    if impl == "pallas":
+        return fused_sw_megakernel(
+            xprep, grouping, inv_gs, key, n_total,
+            kernel_metric=kernel_metric, chunk=chunk, tuning=tuning,
+            interpret=interpret, progress=progress)
+    if impl == "xla":
+        return fused_sw_onepass(
+            xprep, rows_fn, grouping, inv_gs, key, n_total,
+            row_block=row_block, chunk=chunk)
+    raise ValueError(f"unknown fused-kernel impl {impl!r}; "
+                     "expected 'pallas' or 'xla'")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device fused sharding: row slabs over 'model', perms over the rest.
+# ---------------------------------------------------------------------------
+
+def fused_sw_sharded(mesh, xprep: Array, rows_fn: Callable, grouping: Array,
+                     inv_gs: Array, key: jax.Array, n_total: int, *,
+                     row_block: int, chunk: int):
+    """The fused sweep over a (…, 'data', 'model') device mesh.
+
+    Mirrors core.distributed's mapping without ever building the matrix:
+    'model' shards the feature-table ROWS (each device sweeps only its row
+    slab's D² blocks — peak per-device residency (row_block, n)), the
+    remaining axes shard the PERMUTATION range (labels regenerated
+    shard-locally by global-index key folding). One psum over 'model'
+    reconstructs each permutation's statistic exactly.
+
+    The host drives one shard_map dispatch per permutation WINDOW of
+    perm_ways * chunk global indices; inside it each shard generates its
+    (chunk, n) label block with a single key-folding call. (Folding inside
+    a lax.scan over traced chunk offsets miscompiles under shard_map on
+    jax 0.4.x — the folded offsets silently collapse to the first shard's
+    when the labels feed a matmul — so the chunk loop stays at the host,
+    exactly like the megakernel driver.)
+
+    Returns (s_w (n_total,) float64, s_t float, FusedKernelStats).
+    """
+    from repro.core import distributed as _distrib  # deferred: jax mesh
+    n, d_feat = (int(s) for s in xprep.shape)
+    n_groups = int(inv_gs.shape[0])
+    model_ways = mesh.shape["model"]
+    perm_axes = _distrib._perm_axes(mesh)
+    perm_ways = 1
+    for a in perm_axes:
+        perm_ways *= mesh.shape[a]
+
+    rows_per_shard = -(-n // model_ways)
+    block = int(min(row_block, rows_per_shard))
+    rows_per_shard = -(-rows_per_shard // block) * block
+    n_rows_pad = rows_per_shard * model_ways
+    xpad = jnp.pad(xprep, ((0, n_rows_pad - n), (0, 0)))
+
+    chunk_local = int(max(1, min(chunk, -(-n_total // perm_ways))))
+    window = chunk_local * perm_ways
+    grouping = jnp.asarray(grouping, jnp.int32)
+
+    def body(x_rows, x_full, grp, igs, k, wlo):
+        row_offset = jax.lax.axis_index("model") * rows_per_shard
+        pidx = jnp.zeros((), jnp.int32)
+        for a in perm_axes:  # row-major linearization over perm axes
+            pidx = pidx * mesh.shape[a] + jax.lax.axis_index(a)
+        lo = wlo[0] + pidx * chunk_local
+        g = permutations.permutation_batch_dyn(k, grp, lo, chunk_local)
+        e = fstat.onehot_perm_factors(g, igs, jnp.float32)
+        e_pad = jnp.pad(e, ((0, 0), (0, n_rows_pad - n), (0, 0)))
+
+        def slab_body(carry, lo_r):
+            sw_acc, rs = carry
+            xb = jax.lax.dynamic_slice(x_rows, (lo_r, 0), (block, d_feat))
+            drows = rows_fn(xb, x_full)
+            gids = row_offset + lo_r + jnp.arange(block)
+            valid = (gids < n)[:, None] & (gids[:, None]
+                                           != jnp.arange(n)[None, :])
+            m2 = jnp.where(valid, drows * drows, 0.0)
+            e_rows = jax.lax.dynamic_slice(
+                e_pad, (0, row_offset + lo_r, 0),
+                (chunk_local, block, n_groups))
+            rs = jax.lax.dynamic_update_slice(rs, jnp.sum(m2, axis=1),
+                                              (lo_r,))
+            return (sw_acc + fstat.sw_matmul_contract(m2, e, e_rows),
+                    rs), None
+
+        init = (jnp.zeros((chunk_local,), jnp.float32),
+                jnp.zeros((rows_per_shard,), jnp.float32))
+        (s_w, rs), _ = jax.lax.scan(
+            slab_body, init, jnp.arange(rows_per_shard // block) * block)
+        return jax.lax.psum(s_w, axis_name="model"), rs
+
+    fn = _shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", None), P(), P(), P(), P(), P()),
+        out_specs=(P(perm_axes), P("model")))
+    out = np.zeros((n_total,), np.float64)
+    rowsums = None
+    n_windows = 0
+    for wlo in range(0, n_total, window):
+        s_w, rs = fn(xpad, xprep, grouping, inv_gs, key,
+                     jnp.full((1,), wlo, jnp.int32))
+        hi = min(wlo + window, n_total)
+        out[wlo:hi] = np.asarray(s_w[: hi - wlo], np.float64)
+        if rowsums is None:
+            rowsums = np.asarray(rs, np.float64)
+        n_windows += 1
+    s_t = float(rowsums[:n].sum()) / 2.0 / n
+    stats = FusedKernelStats(
+        impl="xla", n_total=n_total, chunk=chunk_local,
+        n_chunks=n_windows * perm_ways, row_block=block,
+        peak_slab_bytes=4 * block * n,
+        peak_label_bytes=4 * chunk_local * n * (n_groups + 1))
+    return out, s_t, stats

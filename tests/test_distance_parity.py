@@ -69,21 +69,36 @@ def test_blocked_matches_dense_odd_block(metric, block):
         np.testing.assert_allclose(blocked, dense, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("metric", ["braycurtis", "euclidean"])
+@pytest.mark.parametrize("metric", ["braycurtis", "euclidean", "jaccard"])
 @pytest.mark.parametrize("block", ODD_BLOCKS)
 def test_pallas_row_slabs_match_dense(metric, block):
     from repro.kernels.distance import ops as dops
 
-    x = jnp.asarray(_features(seed=7))
+    x = jnp.asarray(_features(seed=7, sparse=metric == "jaccard"))
     dense = np.asarray(dist.distance_matrix(x, metric))
+    xp = dist.ROW_METRICS[metric].prepare(x)  # presence cast for jaccard
     out = np.empty((N, N), np.float32)
     for lo in range(0, N, block):
         hi = min(lo + block, N)
         slab = np.array(dops.pairwise_distance_rows(
-            x[lo:hi], x, metric=metric, tile_r=16, tile_c=16, feat_block=16))
+            xp[lo:hi], xp, metric=metric, tile_r=16, tile_c=16,
+            feat_block=16))
         slab[np.arange(lo, hi) - lo, np.arange(lo, hi)] = 0.0  # diag contract
         out[lo:hi] = slab
     np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_jaccard_dense_matches_scipy():
+    """Satellite: the presence/absence matmul-form Pallas kernel is a real
+    stage-1 impl — full-matrix parity against scipy at prime n."""
+    from repro.kernels.distance import ops as dops
+
+    x = _features(seed=11, sparse=True)
+    xp = dist.ROW_METRICS["jaccard"].prepare(jnp.asarray(x))
+    got = np.asarray(dops.pairwise_distance(
+        xp, metric="jaccard", tile_r=16, tile_c=16, feat_block=16))
+    want = _scipy_reference(x, "jaccard")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
 
 
 def test_streaming_builder_matches_dense_squared():

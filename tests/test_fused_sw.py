@@ -1,0 +1,368 @@
+"""Fused distance→s_W megakernel: kernel-vs-oracle parity (odd tiles,
+prime n, ragged groups, row-slab partials), the single-pass drivers,
+fused-kernel planner rules, persisted stage-1/fused autotune entries,
+multi-device equality under a forced CPU mesh, and pipeline_many's
+per-study permutation seeds."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro.core import distance as dist
+from repro.core import permutations
+from repro.engine import planner as eplanner
+from repro.kernels.fused_sw import ops as fops
+from repro.kernels.fused_sw import ref as fref
+from repro.pipeline import planner as pplanner
+from repro.pipeline import streaming
+
+N, D, G = 53, 24, 5   # prime n, ragged group count
+
+
+def _study(seed=0, n=N, d=D, g=G):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x *= rng.random(size=(n, d)) < 0.5
+    x[:, 0] = np.maximum(x[:, 0], 1e-3)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)          # ragged sizes, every group present
+    return x, grouping
+
+
+def _perm_batch(grouping, n_perms, seed=3):
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.permutation(grouping) for _ in range(n_perms)])
+
+
+class TestMegakernelParity:
+    """ops.fused_sw_rows vs the dense jnp oracle (ref.fused_sw_ref)."""
+
+    @pytest.mark.parametrize("metric", ["euclidean", "braycurtis",
+                                        "jaccard"])
+    @pytest.mark.parametrize("tiles", [
+        dict(tile_r=16, tile_c=16, feat_block=8, perm_block=4),
+        dict(tile_r=8, tile_c=32, feat_block=16, perm_block=3),  # odd PB
+    ])
+    def test_matches_oracle(self, metric, tiles):
+        x, grouping = _study(seed=1)
+        prep = dist.ROW_METRICS[metric].prepare(jnp.asarray(x))
+        inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), G)
+        g = jnp.asarray(_perm_batch(grouping, 10))
+        sw, rs = fops.fused_sw_rows(prep, prep, g, g, inv_gs, 0,
+                                    metric=metric, **tiles)
+        sw_r, rs_r = fref.fused_sw_ref(prep, prep, g, g, inv_gs, 0,
+                                       metric=metric)
+        np.testing.assert_allclose(np.asarray(sw), np.asarray(sw_r),
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(rs), np.asarray(rs_r),
+                                   rtol=2e-4, atol=1e-5)
+
+    def test_aitchison_maps_to_euclidean_body(self):
+        x, grouping = _study(seed=2)
+        prep = dist.ROW_METRICS["aitchison"].prepare(jnp.asarray(x))
+        inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), G)
+        g = jnp.asarray(_perm_batch(grouping, 6))
+        sw, _ = fops.fused_sw_rows(prep, prep, g, g, inv_gs, 0,
+                                   metric="aitchison", tile_r=16, tile_c=16,
+                                   feat_block=8, perm_block=4)
+        sw_r, _ = fref.fused_sw_ref(prep, prep, g, g, inv_gs, 0,
+                                    metric="euclidean")
+        np.testing.assert_allclose(np.asarray(sw), np.asarray(sw_r),
+                                   rtol=2e-4, atol=1e-5)
+
+    def test_row_slab_partials_sum_to_full(self):
+        """Offset slabs (the 'model'-shard unit) reconstruct the statistic
+        exactly — slab pad rows must not leak into neighbouring slabs."""
+        x, grouping = _study(seed=3)
+        prep = dist.ROW_METRICS["braycurtis"].prepare(jnp.asarray(x))
+        inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), G)
+        g = jnp.asarray(_perm_batch(grouping, 7))
+        acc, rs_parts = None, []
+        for lo in range(0, N, 19):          # 19 divides nothing here
+            hi = min(lo + 19, N)
+            sw, rs = fops.fused_sw_rows(
+                prep[lo:hi], prep, g[:, lo:hi], g, inv_gs, lo,
+                metric="braycurtis", tile_r=8, tile_c=16, feat_block=8,
+                perm_block=4)
+            acc = np.asarray(sw) if acc is None else acc + np.asarray(sw)
+            rs_parts.append(np.asarray(rs))
+        full, rs_full = fref.fused_sw_ref(prep, prep, g, g, inv_gs, 0,
+                                          metric="braycurtis")
+        np.testing.assert_allclose(acc, np.asarray(full), rtol=1e-4)
+        np.testing.assert_allclose(np.concatenate(rs_parts),
+                                   np.asarray(rs_full), rtol=1e-4)
+
+
+class TestFusedKernelDrivers:
+    """The one-jit XLA sweep and the megakernel chunk loop must equal the
+    PR 2 fused bridge bit-for-policy (same key → same F, p)."""
+
+    def _common(self, seed=4):
+        x, grouping = _study(seed=seed)
+        mdef = dist.ROW_METRICS["braycurtis"]
+        xp = mdef.prepare(jnp.asarray(x))
+        inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), G)
+        key = jax.random.key(7)
+        ref_sw, ref_st, _ = streaming.fused_sw(
+            xp, mdef.rows, jnp.asarray(grouping), inv_gs, key, 101,
+            row_block=13, chunk=17)
+        return x, grouping, mdef, xp, inv_gs, key, ref_sw, ref_st
+
+    def test_onepass_matches_fused(self):
+        _, grouping, mdef, xp, inv_gs, key, ref_sw, ref_st = self._common()
+        sw, s_t, stats = streaming.fused_sw_onepass(
+            xp, mdef.rows, jnp.asarray(grouping), inv_gs, key, 101,
+            row_block=13, chunk=17)
+        np.testing.assert_allclose(sw, ref_sw, rtol=1e-4)
+        assert abs(s_t - ref_st) < 1e-3
+        assert stats.impl == "xla" and stats.n_chunks == 6
+
+    def test_megakernel_matches_fused(self):
+        _, grouping, mdef, xp, inv_gs, key, ref_sw, ref_st = self._common()
+        sw, s_t, stats = streaming.fused_kernel_sw(
+            xp, mdef.rows, jnp.asarray(grouping), inv_gs, key, 101,
+            impl="pallas", kernel_metric="braycurtis", row_block=13,
+            chunk=17, tuning=dict(tile_r=16, tile_c=16, feat_block=8,
+                                  perm_block=4))
+        np.testing.assert_allclose(sw, ref_sw, rtol=1e-4)
+        assert abs(s_t - ref_st) < 1e-3
+        assert stats.impl == "pallas"
+
+    def test_unknown_impl_rejected(self):
+        _, grouping, mdef, xp, inv_gs, key, _, _ = self._common()
+        with pytest.raises(ValueError, match="fused-kernel impl"):
+            streaming.fused_kernel_sw(
+                xp, mdef.rows, jnp.asarray(grouping), inv_gs, key, 10,
+                impl="nope", kernel_metric="braycurtis", row_block=13,
+                chunk=17)
+
+
+class TestFusedKernelPlanner:
+    def test_over_budget_prefers_fused_kernel(self):
+        pl = pipeline.plan_pipeline(2048, 64, 1000, 8, backend="cpu",
+                                    matrix_budget_bytes=1000)
+        assert pl.materialize == "fused-kernel"
+        assert pl.fused_impl == "braycurtis.fusedk.xla"
+        assert pl.sw.impl == "matmul"
+
+    def test_tpu_gets_megakernel_with_tile_tuning(self):
+        pl = pipeline.plan_pipeline(2048, 64, 1000, 8, backend="tpu",
+                                    materialize="fused-kernel")
+        assert pl.fused_impl == "braycurtis.fusedk.pallas"
+        assert {"tile_r", "tile_c", "feat_block", "perm_block"} <= \
+            set(pl.fused_tuning)
+
+    def test_caller_pins_and_overrides(self):
+        pl = pipeline.plan_pipeline(
+            512, 64, 100, 8, backend="cpu", materialize="fused-kernel",
+            fused_impl="pallas", fused_tuning={"tile_r": 32, "bogus": 1})
+        assert pl.fused_impl == "braycurtis.fusedk.pallas"
+        assert pl.fused_tuning["tile_r"] == 32
+        assert "bogus" not in pl.fused_tuning
+
+    def test_metric_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="computes"):
+            pipeline.plan_pipeline(512, 64, 100, 8, metric="euclidean",
+                                   materialize="fused-kernel",
+                                   fused_impl="braycurtis.fusedk.xla")
+
+    def test_mesh_requires_fused_kernel(self):
+        x, grouping = _study(seed=5)
+        with pytest.raises(ValueError, match="fused-kernel only"):
+            pipeline.pipeline(x, grouping, n_perms=9, materialize="dense",
+                              mesh=object())
+
+
+class TestAutotunePersistedStage1AndFused:
+    """Satellite: the per-host cache extends to stage-1 distance and
+    fused-kernel candidates, keyed by (backend, metric, impl), and the
+    planner reads the winners back as defaults."""
+
+    def test_roundtrip_feeds_planner(self, tmp_path, monkeypatch):
+        cache = tmp_path / "autotune.json"
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        eplanner.load_autotune_cache(reload=True)
+        try:
+            x, grouping = _study(seed=6, n=32, d=16, g=3)
+            s1 = pplanner.autotune_stage1(x, "euclidean", backend="cpu")
+            fk = pplanner.autotune_fused(x, grouping, metric="euclidean",
+                                         backend="cpu", n_groups=3)
+            data = json.loads(cache.read_text())
+            assert f"dist|cpu|euclidean|{s1}" in data
+            assert f"fusedk|cpu|euclidean|{fk}" in data
+            entry = data[f"fusedk|cpu|euclidean|{fk}"]
+            assert entry["impl"] == fk and "us" in entry
+            # fresh load (new process analogue) feeds both pickers
+            eplanner.load_autotune_cache(reload=True)
+            assert pplanner.measured_stage1("cpu", "euclidean", 32) == s1
+            assert pplanner.measured_fused("cpu", "euclidean", 32) == fk
+            pl = pipeline.plan_pipeline(32, 16, 100, 3, backend="cpu",
+                                        metric="euclidean")
+            assert pl.dist_impl == s1
+            assert "stage-1 autotune" in pl.reason
+            # a different n-bucket falls back to the heuristics
+            assert pplanner.measured_stage1("cpu", "euclidean", 4096) is None
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)
+
+    def test_first_entry_of_fresh_process_persists(self, tmp_path,
+                                                   monkeypatch):
+        """record_entry must survive being the FIRST cache touch in a
+        process (the lazy first load clears the dirty set)."""
+        cache = tmp_path / "autotune.json"
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        monkeypatch.setattr(eplanner, "_PERSIST", None)  # fresh-process view
+        eplanner._DIRTY.clear()
+        try:
+            eplanner.record_entry("dist|cpu|x|first", {
+                "impl": "first", "us": 1.0, "bucket": 32})
+            data = json.loads(cache.read_text())
+            assert "dist|cpu|x|first" in data
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)
+
+    def test_partial_shootout_does_not_feed(self, tmp_path, monkeypatch):
+        cache = tmp_path / "autotune.json"
+        cache.write_text(json.dumps({
+            "dist|cpu|euclidean|euclidean.dense": {
+                "impl": "euclidean.dense", "us": 1.0, "bucket": 32},
+        }))
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        eplanner.load_autotune_cache(reload=True)
+        try:
+            # blocked candidate unmeasured -> no winner
+            assert pplanner.measured_stage1("cpu", "euclidean", 32) is None
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)
+
+    def test_autotune_pipeline_entry(self, tmp_path, monkeypatch):
+        cache = tmp_path / "autotune.json"
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, str(cache))
+        eplanner.load_autotune_cache(reload=True)
+        try:
+            x, grouping = _study(seed=7, n=24, d=8, g=3)
+            res = pipeline.pipeline(x, grouping, n_groups=3, n_perms=19,
+                                    materialize="fused-kernel",
+                                    autotune=True)
+            assert res.method == "pipeline[fused-kernel]" or \
+                res.method.startswith("pipeline[")
+            data = json.loads(cache.read_text())
+            assert any(k.startswith("fusedk|") for k in data)
+        finally:
+            monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+            eplanner.load_autotune_cache(reload=True)
+
+
+MULTI_DEVICE_FUSED = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import pipeline
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(31)
+n, d, G = 53, 24, 5
+x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+grouping = rng.integers(0, G, size=n).astype(np.int32)
+grouping[:G] = np.arange(G)
+key = jax.random.key(11)
+assert len(jax.devices()) == 8, jax.devices()
+
+ref = pipeline.pipeline(x, grouping, n_groups=G, n_perms=99, key=key,
+                        materialize="dense")
+for shape in ((2, 4), (8, 1), (1, 8)):
+    mesh = make_mesh(shape, ("data", "model"))
+    got = pipeline.pipeline(x, grouping, n_groups=G, n_perms=99, key=key,
+                            mesh=mesh, row_block=13, chunk=25)
+    np.testing.assert_allclose(np.asarray(got.f_perms),
+                               np.asarray(ref.f_perms), rtol=1e-4)
+    assert float(got.p_value) == float(ref.p_value), shape
+    assert abs(float(got.f_stat) - float(ref.f_stat)) < 1e-4 * abs(
+        float(ref.f_stat))
+print("OK single-study")
+
+S = 4
+xs = np.stack([rng.gamma(1.0, 1.0, size=(32, 16)).astype(np.float32)
+               for _ in range(S)])
+gs = np.stack([np.concatenate([np.arange(3),
+                               rng.integers(0, 3, 29)]).astype(np.int32)
+               for _ in range(S)])
+mesh = make_mesh((4, 2), ("data", "model"))
+many = pipeline.pipeline_many(jnp.asarray(xs), jnp.asarray(gs), n_groups=3,
+                              n_perms=49, key=key,
+                              materialize="fused-kernel", mesh=mesh)
+for s in range(S):
+    single = pipeline.pipeline(xs[s], gs[s], n_groups=3, n_perms=49,
+                               key=jax.random.fold_in(key, s),
+                               materialize="dense")
+    np.testing.assert_allclose(np.asarray(many.f_perms[s]),
+                               np.asarray(single.f_perms), rtol=1e-4)
+    assert float(many.p_value[s]) == float(single.p_value), s
+print("OK many")
+"""
+
+
+def test_sharded_fused_kernel_matches_single_host():
+    """F and p-value equality: fused-kernel over a forced 8-device CPU
+    mesh (row slabs over 'model', perms/studies over 'data') vs the
+    single-host dense plan."""
+    from conftest import run_subprocess
+    out = run_subprocess(MULTI_DEVICE_FUSED, devices=8, timeout=900)
+    assert "OK single-study" in out and "OK many" in out
+
+
+class TestPipelineManySeeds:
+    """Satellite: stacked studies must each draw an independent null from
+    fold_in(key, global_study_index) on EVERY batched path."""
+
+    @pytest.mark.parametrize("materialize", ["dense", "fused-kernel"])
+    def test_identical_studies_draw_independent_nulls(self, materialize):
+        x, grouping = _study(seed=8, n=32, g=3)
+        xs = jnp.asarray(np.stack([x] * 3))
+        gs = jnp.asarray(np.stack([grouping] * 3))
+        many = pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=29,
+                                      key=jax.random.key(2),
+                                      materialize=materialize)
+        f = np.asarray(many.f_perms)
+        # observed stat identical (same data) ...
+        np.testing.assert_allclose(f[:, 0], f[0, 0], rtol=1e-5)
+        # ... but the null draws must differ between studies
+        for a in range(3):
+            for b in range(a + 1, 3):
+                assert not np.allclose(f[a, 1:], f[b, 1:]), (a, b)
+
+    def test_fused_kernel_matches_independent_pipelines(self):
+        s_count = 3
+        xs, gs = zip(*[_study(seed=40 + s, n=32, g=3)
+                       for s in range(s_count)])
+        xs = jnp.asarray(np.stack(xs))
+        gs = jnp.asarray(np.stack(gs))
+        key = jax.random.key(13)
+        many = pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=49,
+                                      key=key, materialize="fused-kernel")
+        assert "studies=3" in many.plan
+        for s in range(s_count):
+            single = pipeline.pipeline(
+                xs[s], gs[s], n_groups=3, n_perms=49,
+                key=jax.random.fold_in(key, s), materialize="dense")
+            np.testing.assert_allclose(np.asarray(many.f_perms[s]),
+                                       np.asarray(single.f_perms),
+                                       rtol=1e-4)
+            assert float(many.p_value[s]) == float(single.p_value)
+
+    def test_auto_upgrades_to_fused_kernel_over_budget(self):
+        x, grouping = _study(seed=9, n=48, g=3)
+        xs = jnp.asarray(np.stack([x] * 2))
+        gs = jnp.asarray(np.stack([grouping] * 2))
+        many = pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=19,
+                                      matrix_budget_bytes=1000)
+        assert "fusedk" in many.plan
+        with pytest.raises(ValueError, match="dense"):
+            pipeline.pipeline_many(xs, gs, n_groups=3, n_perms=9,
+                                   materialize="stream")

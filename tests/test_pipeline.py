@@ -64,8 +64,23 @@ class TestRegistry:
 
     def test_capability_filters(self):
         assert pipeline.names(metric="braycurtis", kind="pallas")
-        assert not pipeline.names(metric="jaccard", kind="pallas")
+        # every metric carries a tiled stage-1 impl (jaccard rides the
+        # presence/absence matmul form)
+        assert pipeline.names(metric="jaccard", kind="pallas")
         assert "euclidean.dense" in pipeline.names(backend="gpu")
+
+    def test_fused_registry_complete(self):
+        for metric in pipeline.metrics():
+            kinds = {pipeline.get_fused(nm).kind
+                     for nm in pipeline.fused_names(metric=metric)}
+            assert kinds == {"pallas", "xla"}, metric
+        for name in pipeline.fused_names():
+            spec = pipeline.get_fused(name)
+            assert spec.workset_bytes(4096, 128, 512, 8, 256) > 0
+            # the megakernel's working set must not scale with n
+            if spec.kind == "pallas":
+                assert spec.workset_bytes(4096, 128, 512, 8, 256) == \
+                    spec.workset_bytes(65536, 128, 512, 8, 256)
 
 
 class TestPlanner:
@@ -78,9 +93,15 @@ class TestPlanner:
         stream = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
                                         matrix_budget_bytes=1.5 * mat2)
         assert stream.materialize == "stream"
+        # over-budget problems land on the single-pass fused-kernel sweep
         fused = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
                                        matrix_budget_bytes=0.5 * mat2)
-        assert fused.materialize == "fused"
+        assert fused.materialize == "fused-kernel"
+        assert fused.fused_impl == "braycurtis.fusedk.xla"
+        # the two-dispatch fused bridge stays reachable by pinning
+        pinned = pipeline.plan_pipeline(n, 64, 1000, 8, backend="cpu",
+                                        materialize="fused")
+        assert pinned.materialize == "fused"
 
     def test_backend_dispatch(self):
         tpu = pipeline.plan_pipeline(1024, 128, 1000, 8, backend="tpu",
@@ -119,10 +140,14 @@ class TestPlanner:
         assert (pl.sw.impl, pl.sw.chunk) == ("brute", 10)
 
     def test_fused_cannot_honor_pinned_sw_impl(self):
-        # both pinned: hard error
+        # both pinned: hard error (either fused bridge)
         with pytest.raises(ValueError, match="one-hot matmul"):
             pipeline.plan_pipeline(512, 64, 100, 8, backend="cpu",
                                    materialize="fused", sw_impl="tiled")
+        with pytest.raises(ValueError, match="one-hot matmul"):
+            pipeline.plan_pipeline(512, 64, 100, 8, backend="cpu",
+                                   materialize="fused-kernel",
+                                   sw_impl="brute")
         # bridge auto-chosen: downgrade to stream, honor the pinned impl
         pl = pipeline.plan_pipeline(512, 64, 100, 8, backend="cpu",
                                     sw_impl="tiled",
@@ -148,7 +173,8 @@ class TestPipelineParity:
     """Acceptance bar: pipeline(features) == distance() -> permanova()."""
 
     @pytest.mark.parametrize("metric", sorted(dist.METRICS))
-    @pytest.mark.parametrize("materialize", ["dense", "stream", "fused"])
+    @pytest.mark.parametrize("materialize",
+                             ["dense", "stream", "fused", "fused-kernel"])
     def test_matches_two_stage(self, metric, materialize):
         x, grouping = _study(seed=11)
         key = jax.random.key(5)
@@ -170,7 +196,7 @@ class TestPipelineParity:
         key = jax.random.key(6)
         outs = [pipeline.pipeline(x, grouping, n_perms=199, key=key,
                                   materialize=m, row_block=16)
-                for m in ("dense", "stream", "fused")]
+                for m in ("dense", "stream", "fused", "fused-kernel")]
         for other in outs[1:]:
             np.testing.assert_allclose(np.asarray(other.f_perms),
                                        np.asarray(outs[0].f_perms),
