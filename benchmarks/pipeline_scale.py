@@ -100,3 +100,36 @@ def run(emit):
     t = time.perf_counter() - t0
     emit("pipeline/many_4x128", t * 1e6,
          f"studies={s_count} perms=99 studies_s={s_count/t:.1f}")
+
+    # matrix-input multi-study engine, study axis over the 'data' mesh
+    # (smoke: on a 1-device CI host the mesh degenerates to the vmap path;
+    # the multidevice CI job asserts sharded == single-host bit-equality)
+    from repro import engine
+    from repro.core.distance import distance_matrix
+    from repro.launch.mesh import make_host_mesh
+    dms = jnp.stack([distance_matrix(xs[s], "braycurtis")
+                     for s in range(s_count)])
+    mesh = make_host_mesh()
+    t0 = time.perf_counter()
+    manym = engine.permanova_many(dms, gs, n_groups=8, n_perms=99,
+                                  key=jax.random.key(0), mesh=mesh)
+    jax.block_until_ready(manym.f_perms)
+    t = time.perf_counter() - t0
+    emit("pipeline/many_sharded_4x128", t * 1e6,
+         f"studies={s_count} perms=99 data_ways={mesh.shape['data']} "
+         f"studies_s={s_count/t:.1f}")
+
+    # PCoA ordination consumer riding the stream bridge (implicit centered
+    # operator — mat2 stays the only (n, n) array) and the fused bridge
+    # (matvecs re-streamed from features; nothing (n, n)-shaped)
+    for mat in ("stream", "fused-kernel"):
+        t0 = time.perf_counter()
+        res = pipeline.pipeline(x, grouping, metric="braycurtis",
+                                n_perms=99, materialize=mat, ordination=3,
+                                key=jax.random.key(0))
+        jax.block_until_ready(res.ordination.coords)
+        t = time.perf_counter() - t0
+        expl = float(res.ordination.explained[0])
+        emit(f"pipeline/pcoa3_{mat}", t * 1e6,
+             f"n={n} perms=99 method={res.ordination.method} "
+             f"expl0={expl:.3f} r2={float(res.r2):.3f}")

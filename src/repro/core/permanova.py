@@ -47,11 +47,20 @@ class PermanovaResult:
     n_perms: int
     method: str = "permanova"
     plan: str = ""         # engine execution plan (impl, tuning, chunking)
+    ordination: object = None   # Optional[pipeline.ordination.PCoAResult]
+                                # when the caller asked for PCoA axes
+
+    @property
+    def r2(self) -> Array:
+        """Effect size R^2 = s_A / s_T = 1 - s_W / s_T (variance explained
+        by the grouping)."""
+        return 1.0 - self.s_w / self.s_t
 
     def __repr__(self):  # pragma: no cover - cosmetic
         return (f"PermanovaResult(F={float(self.f_stat):.6g}, "
-                f"p={float(self.p_value):.6g}, n={self.n_objects}, "
-                f"a={self.n_groups}, perms={self.n_perms})")
+                f"p={float(self.p_value):.6g}, R2={float(self.r2):.4g}, "
+                f"n={self.n_objects}, a={self.n_groups}, "
+                f"perms={self.n_perms})")
 
 
 def s_total(mat2: Array) -> Array:

@@ -70,3 +70,47 @@ def permutation_batch_dyn(key: jax.Array, grouping: Array, lo: Array,
 def permutation_batch_host(key: jax.Array, grouping, n_perms: int):
     """Convenience full-batch generator (host-side, small studies)."""
     return permutation_batch(key, jnp.asarray(grouping), 0, n_perms)
+
+
+# ---------------------------------------------------------------------------
+# Masked permutations: ragged studies padded to a common length.
+# ---------------------------------------------------------------------------
+
+def masked_permute_grouping(key: jax.Array, grouping: Array,
+                            n_valid: Array) -> Array:
+    """One random relabeling of the VALID PREFIX [0, n_valid) only.
+
+    Pad entries (the suffix, carrying a sentinel group) stay in place, so
+    the permutation never mixes pad labels into valid positions — group
+    sizes over the valid samples are invariant, exactly as an unpadded
+    permutation. Draw: uniform keys on the prefix, +inf on the pad, one
+    stable argsort — positions [0, n_valid) receive a uniform random
+    permutation of themselves, the pad suffix maps to itself in order.
+    `n_valid` may be traced (one program serves every study of a ragged
+    batch).
+    """
+    n = grouping.shape[0]
+    u = jax.random.uniform(key, (n,))
+    u = jnp.where(jnp.arange(n) < n_valid, u, jnp.inf)
+    return grouping[jnp.argsort(u)]
+
+
+def masked_permutation_batch_dyn(key: jax.Array, grouping: Array,
+                                 n_valid: Array, lo: Array, chunk: int, *,
+                                 identity_first: bool = True) -> Array:
+    """permutation_batch_dyn for a padded ragged study.
+
+    Same global-index key folding (shard-position independent), but each
+    draw permutes only the valid prefix via masked_permute_grouping. NOTE:
+    the draws differ from the unpadded jax.random.permutation stream, so
+    a ragged study's null is deterministic and independent per study but
+    not bit-identical to an unpadded single-study run; the observed
+    statistic (index 0, identity labels) IS identical.
+    """
+    idx = lo + jnp.arange(chunk)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    perms = jax.vmap(
+        lambda k: masked_permute_grouping(k, grouping, n_valid))(keys)
+    if identity_first:
+        perms = jnp.where((idx == 0)[:, None], grouping[None, :], perms)
+    return perms

@@ -12,11 +12,13 @@ remain the public signatures; they are thin wrappers over this module.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import permutations
 # NOTE: `from repro.core import permanova` would resolve to the *function*
@@ -119,52 +121,192 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
 
 @dataclasses.dataclass
 class PermanovaManyResult:
-    """Stacked results over S studies (leading axis S on every array)."""
+    """Stacked results over S studies (leading axis S on every array).
+
+    The shared multi-study result contract for `engine.permanova_many`
+    AND `pipeline.pipeline_many`: F, p, effect size R^2, and (when the
+    caller asked for ordination) top-k PCoA coordinates with explained
+    variance per study.
+    """
     f_stat: Array        # (S,)
     p_value: Array       # (S,)
     s_t: Array           # (S,)
     s_w: Array           # (S,)
     f_perms: Array       # (S, n_perms + 1)
-    n_objects: int
+    n_objects: int       # common (ragged input: padded) study size n
     n_groups: int
     n_perms: int
     plan: str = ""
+    n_valid: Optional[Array] = None   # (S,) per-study sample counts when
+                                      # the input was a ragged list
+    ordination: object = None         # pipeline.ordination.PCoAResult with
+                                      # stacked (S, n, k) coords, or None
+
+    @property
+    def r2(self) -> Array:
+        """(S,) effect sizes R^2 = s_A / s_T = 1 - s_W / s_T."""
+        return 1.0 - self.s_w / self.s_t
 
     def __len__(self):
         return int(self.f_stat.shape[0])
 
     def study(self, s: int) -> "PermanovaResult":
         """View one study as a standard PermanovaResult."""
+        n_obj = (self.n_objects if self.n_valid is None
+                 else int(self.n_valid[s]))
         return PermanovaResult(
             f_stat=self.f_stat[s], p_value=self.p_value[s], s_t=self.s_t[s],
             s_w=self.s_w[s], f_perms=self.f_perms[s],
-            n_objects=self.n_objects, n_groups=self.n_groups,
-            n_perms=self.n_perms, method="permanova_many", plan=self.plan)
+            n_objects=n_obj, n_groups=self.n_groups,
+            n_perms=self.n_perms, method="permanova_many", plan=self.plan,
+            ordination=(None if self.ordination is None
+                        else self.ordination.study(s)))
 
 
-def permanova_many(dms: Array, groupings: Array, *, n_groups: int,
+def _pad_ragged_studies(dms: Sequence, groupings: Sequence, n_groups: int):
+    """Pad a ragged study list to one (S, n_max, n_max) stack.
+
+    Pad distance rows/cols are zero and pad labels carry the SENTINEL
+    group `n_groups` — one past the one-hot width, so every s_W form
+    sees them contribute exactly nothing (zero one-hot row on the matmul
+    path; zero mat2 entries everywhere else)."""
+    if len(dms) != len(groupings):
+        raise ValueError(f"ragged input: {len(dms)} matrices vs "
+                         f"{len(groupings)} groupings")
+    sizes = [int(np.asarray(d).shape[0]) for d in dms]
+    n = max(sizes)
+    s_count = len(dms)
+    dm_stack = np.zeros((s_count, n, n), np.float32)
+    g_stack = np.full((s_count, n), n_groups, np.int32)     # sentinel pad
+    for i, (d, g) in enumerate(zip(dms, groupings)):
+        m = sizes[i]
+        d = np.asarray(d, np.float32)
+        if d.shape != (m, m):
+            raise ValueError(f"study {i}: expected square matrix, "
+                             f"got {d.shape}")
+        dm_stack[i, :m, :m] = d
+        g_stack[i, :m] = np.asarray(g, np.int32)
+    return (jnp.asarray(dm_stack), jnp.asarray(g_stack),
+            jnp.asarray(sizes, jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def _many_program(impl: str, tuning: tuple, ch: int, n_chunks: int,
+                  n_total: int, n: int, n_groups: int, ragged: bool):
+    """The jitted vmapped multi-study program, cached per static config.
+
+    Rebuilding jax.jit(...) per call would re-trace and re-compile the
+    whole chunk-scanned program on every request — fatal for the serving
+    scenario this entry point exists for. The registry fn is recreated
+    from (impl, tuning) so the cache key is hashable and stable."""
+    fn = registry.get(impl).bound(**dict(tuning))
+
+    def one(dm, grouping, study_key, nv):
+        mat2 = dm * dm
+        inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+
+        def body(_, lo):
+            if ragged:   # static: one branch is ever traced
+                g = permutations.masked_permutation_batch_dyn(
+                    study_key, grouping, nv, lo, ch)
+            else:
+                g = permutations.permutation_batch_dyn(study_key, grouping,
+                                                       lo, ch)
+            return None, fn(mat2, g, inv_gs)
+
+        _, sws = jax.lax.scan(body, None, jnp.arange(n_chunks) * ch)
+        s_w_all = sws.reshape(-1)[:n_total]
+        if ragged:
+            s_t = jnp.sum(mat2) / 2.0 / nv
+            f_all = f_from_sw(s_w_all, s_t, nv, n_groups)
+        else:
+            s_t = s_total(mat2)
+            f_all = f_from_sw(s_w_all, s_t, n, n_groups)
+        return f_all, s_t, s_w_all[0]
+
+    return jax.jit(jax.vmap(one))
+
+
+def study_axis_padding(mesh, s_count: int):
+    """(data_ways, s_pad, wrap_idx) for sharding a study axis over 'data'.
+
+    Study counts that do not divide the axis are wrap-padded (any S
+    works, even S < data_ways); callers slice results back to S. Shared
+    by engine.permanova_many and pipeline_many's fused path so the two
+    multi-study entry points keep one divisibility contract."""
+    data_ways = int(mesh.shape.get("data", 1)) if mesh is not None else 0
+    if data_ways <= 1:
+        return data_ways, 0, None
+    s_pad = (-s_count) % data_ways
+    idx = jnp.arange(s_count + s_pad) % s_count if s_pad else None
+    return data_ways, s_pad, idx
+
+
+def put_study_sharded(mesh, args):
+    """device_put every array with a leading-'data' NamedSharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def spec(a):
+        return NamedSharding(mesh, P(*(["data"] + [None] * (a.ndim - 1))))
+
+    return tuple(jax.device_put(a, spec(a)) for a in args)
+
+
+def permanova_many(dms: Union[Array, Sequence[Array]],
+                   groupings: Union[Array, Sequence[Array]], *,
+                   n_groups: int,
                    n_perms: int = 999, key: Optional[jax.Array] = None,
                    impl: str = "auto", chunk: Optional[int] = None,
                    memory_budget_bytes: Optional[float] = None,
-                   backend: Optional[str] = None) -> PermanovaManyResult:
-    """PERMANOVA over a stack of studies in one vmapped program.
+                   backend: Optional[str] = None,
+                   mesh=None,
+                   ordination: Optional[int] = None) -> PermanovaManyResult:
+    """PERMANOVA over a stack of studies in one planned, shardable program.
 
-    dms:        (S, n, n) distance matrices.
-    groupings:  (S, n) int labels in [0, n_groups); n_groups must be shared
-                (it sets the one-hot width — the serving scenario runs many
-                users through one study design).
-    Study s draws its null from fold_in(key, s), so results match S
-    independent run(..., key=fold_in(key, s)) calls exactly.
+    dms:        (S, n, n) distance matrices — or a RAGGED list of
+                (n_s, n_s) matrices, padded internally under one plan
+                (pad rows zero, pad labels a sentinel group; per-study
+                dof/s_T use the true n_s, recorded in `n_valid`).
+    groupings:  (S, n) int labels in [0, n_groups) (a list for ragged
+                input); n_groups must be shared — it sets the one-hot
+                width (the serving scenario runs many users through one
+                study design).
+    mesh:       optional jax.sharding.Mesh with a 'data' axis — shards
+                the STUDY axis over 'data' (same convention as
+                pipeline_many's fused path). Study counts that do not
+                divide the axis are padded and sliced. Per-study PRNG
+                keys are folded by GLOBAL study index ONCE per dispatch
+                before any sharding (the jax 0.4.x shard_map key-folding
+                miscompile note in streaming.fused_sw_sharded), so
+                sharded == single-host == S separate run() calls,
+                bit-identically, regardless of which shard runs a study.
+    ordination: optional k — also compute top-k PCoA coordinates per
+                study (pipeline.ordination; implicit centered operator,
+                no Gower matrix materialized) into `result.ordination`.
+
+    Stacked study s draws its null from fold_in(key, s), so results match
+    S independent run(..., key=fold_in(key, s)) calls exactly. Ragged
+    studies draw from the masked generator instead (deterministic and
+    independent per study, observed F identical to run(); the draws are
+    not the unpadded stream — see permutations.masked_permutation_batch_dyn).
 
     Permutations are chunk-scanned inside the jitted program, so the live
     label tensor is (S, chunk, n) — the same fixed-memory contract as the
-    streaming scheduler, vectorized over studies.
+    streaming scheduler, vectorized over studies; the engine planner
+    still picks the s_W impl and chunk per backend, so each shard runs
+    the hardware-aware plan.
     """
     if key is None:
         key = jax.random.key(0)
-    dms = jnp.asarray(dms)
-    groupings = jnp.asarray(groupings, dtype=jnp.int32)
-    s_count, n = groupings.shape
+    ragged = isinstance(dms, (list, tuple))
+    if ragged:
+        dms, groupings, n_valid = _pad_ragged_studies(dms, groupings,
+                                                      n_groups)
+    else:
+        dms = jnp.asarray(dms)
+        groupings = jnp.asarray(groupings, dtype=jnp.int32)
+        n_valid = None
+    s_count, n = (int(v) for v in groupings.shape)
     n_total = n_perms + 1
 
     pinned = None if impl == "auto" else impl
@@ -175,30 +317,46 @@ def permanova_many(dms: Array, groupings: Array, *, n_groups: int,
     per_study_budget = total_budget / s_count
     pl = planner.plan(n, n_total, n_groups, backend=backend, impl=pinned,
                       memory_budget_bytes=per_study_budget, chunk=chunk)
-    fn = registry.get(pl.impl).bound(**pl.tuning)
     ch = pl.chunk
     n_chunks = -(-n_total // ch)
+    run_many = _many_program(pl.impl, tuple(sorted(pl.tuning.items())),
+                             ch, n_chunks, n_total, n, n_groups, ragged)
 
-    def one(dm, grouping, study_key):
-        mat2 = dm * dm
-        inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+    nv_arg = (jnp.full((s_count,), n, jnp.float32) if n_valid is None
+              else n_valid.astype(jnp.float32))
+    study_idx = jnp.arange(s_count)
+    args = (dms, groupings, nv_arg)
+    where = "vmap"
+    data_ways, s_pad, wrap_idx = study_axis_padding(mesh, s_count)
+    if wrap_idx is not None:
+        # pad the STUDY axis (wrapping, so any S works) by replaying
+        # studies; padded results are computed and sliced off below
+        args = tuple(jnp.take(a, wrap_idx, axis=0) for a in args)
+        study_idx = wrap_idx
+    # GLOBAL study index -> per-study key, folded ONCE here, before any
+    # sharding (never inside the sharded program: jax 0.4.x miscompile);
+    # a padded slot replays its source study's key, so the pad is inert.
+    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(study_idx)
+    args = (args[0], args[1], study_keys, args[2])
+    if data_ways > 1:
+        args = put_study_sharded(mesh, args)
+        where = (f"vmap@data[{data_ways}]"
+                 + (f"+pad{s_pad}" if s_pad else ""))
 
-        def body(_, lo):
-            g = permutations.permutation_batch_dyn(study_key, grouping,
-                                                   lo, ch)
-            return None, fn(mat2, g, inv_gs)
-
-        _, sws = jax.lax.scan(body, None, jnp.arange(n_chunks) * ch)
-        s_w_all = sws.reshape(-1)[:n_total]
-        s_t = s_total(mat2)
-        f_all = f_from_sw(s_w_all, s_t, n, n_groups)
-        return f_all, s_t, s_w_all[0]
-
-    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
-        jnp.arange(s_count))
-    f_perms, s_t, s_w = jax.vmap(one)(dms, groupings, study_keys)
+    f_perms, s_t, s_w = run_many(*args)
+    f_perms, s_t, s_w = (a[:s_count] for a in (f_perms, s_t, s_w))
     p_vals = jax.vmap(p_value_from_null)(f_perms)
+
+    ord_res = None
+    if ordination is not None:
+        # computed OUTSIDE the sharded dispatch (deterministic subspace
+        # iteration), so sharded and single-host embeddings are identical
+        from repro.pipeline import ordination as _ord  # deferred: cycle
+        ord_res = _ord.pcoa_many(dms, int(ordination), n_valid=n_valid)
+
     return PermanovaManyResult(
         f_stat=f_perms[:, 0], p_value=p_vals, s_t=s_t, s_w=s_w,
         f_perms=f_perms, n_objects=n, n_groups=n_groups, n_perms=n_perms,
-        plan=f"{pl.describe()} studies={s_count} chunks={n_chunks}")
+        n_valid=n_valid, ordination=ord_res,
+        plan=(f"{pl.describe()} studies={s_count}"
+              f"{' ragged' if ragged else ''} chunks={n_chunks} [{where}]"))

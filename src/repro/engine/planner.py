@@ -244,10 +244,24 @@ def _save_autotune_cache() -> None:
                 pass
         ours = {k: v for k, v in _PERSIST.items() if k in _DIRTY}
         _PERSIST = {**on_disk, **ours}
+        # Atomic publish: serialize to a per-pid temp file, fsync, then
+        # os.replace. Readers (and the merge-read above) can only ever
+        # observe a complete JSON document — concurrent writers cannot
+        # interleave partial writes (the two-writer regression test in
+        # tests/test_autotune_cache.py hammers exactly this).
         tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(_PERSIST, f, indent=2, sort_keys=True)
-        os.replace(tmp, path)                # atomic on POSIX
+        try:
+            with open(tmp, "w") as f:
+                json.dump(_PERSIST, f, indent=2, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)            # atomic on POSIX
+        except BaseException:
+            try:
+                os.unlink(tmp)               # never leave partial temps
+            except OSError:
+                pass
+            raise
     except OSError:  # read-only home etc. — cache is best-effort
         pass
 

@@ -85,6 +85,12 @@ def main():
                     help="pin the stage-1 distance impl (e.g. "
                          "'braycurtis.blocked', 'euclidean.pallas'); "
                          "'auto' = pipeline planner")
+    ap.add_argument("--pcoa", type=int, default=None, metavar="K",
+                    help="also compute the top-K PCoA ordination axes "
+                         "(coordinates + explained variance) from the "
+                         "same pipeline dataflow — the stream/fused "
+                         "bridges never materialize the Gower matrix; "
+                         "implies the pipeline path")
     ap.add_argument("--kernel", action="store_true",
                     help="legacy alias: maps brute/matmul to the Pallas "
                          "kernel variant (interpret mode off TPU)")
@@ -105,7 +111,8 @@ def main():
     budget = None if args.budget_mb is None else args.budget_mb * 2**20
 
     if args.from_features or args.materialize != "auto" \
-            or args.dist_impl != "auto" or args.shard_rows is not None:
+            or args.dist_impl != "auto" or args.shard_rows is not None \
+            or args.pcoa is not None:
         if args.distributed:
             ap.error("--distributed is not supported with the pipeline "
                      "path (--from-features/--materialize/--dist-impl); "
@@ -125,6 +132,7 @@ def main():
             dist_impl=args.dist_impl, sw_impl=impl,
             materialize=args.materialize, chunk=args.chunk,
             fused_impl=args.fused_impl, mesh=mesh,
+            ordination=args.pcoa,
             memory_budget_bytes=budget, autotune=args.autotune)
         jax.block_until_ready(res.f_perms)
         t_pa = time.time() - t0
@@ -134,7 +142,12 @@ def main():
         print(f"[permanova] features->p-value {t_pa:.2f}s "
               f"({res.n_perms / t_pa:.1f} perms/s)")
         print(f"[permanova] F={float(res.f_stat):.6g} "
-              f"p={float(res.p_value):.6g}")
+              f"p={float(res.p_value):.6g} R2={float(res.r2):.4g}")
+        if res.ordination is not None:
+            o = res.ordination
+            expl = ", ".join(f"{float(v):.3f}" for v in o.explained)
+            print(f"[permanova] pcoa[{o.method}] k={o.k} "
+                  f"explained=[{expl}] coords={tuple(o.coords.shape)}")
         return 0
 
     t0 = time.time()

@@ -13,15 +13,22 @@ F-statistics and p-values under ONE plan:
   streaming   the bridge implementations: mat2 row-block producer, the
               never-resident-twice streaming builder (+ Gower marginals),
               and the fused distance→s_W driver
+  ordination  PCoA consumer for the Gower marginals: dense eigh, the
+              implicit-operator subspace iteration (no centered matrix),
+              and the feature-streamed matvec path for the fused bridges
   api         pipeline() single study, pipeline_many() stacked studies
 
 Entry points routing here: core.permanova.permanova(features, metric=...),
-the launch CLI's --from-features, examples/emp_scale_permanova.py, and the
-pipeline benchmark suite.
+the launch CLI's --from-features/--pcoa, examples/emp_scale_permanova.py,
+and the pipeline benchmark suite.
 """
 
-from repro.pipeline import api, planner, registry, streaming  # noqa: F401
+from repro.pipeline import (api, ordination, planner,  # noqa: F401
+                            registry, streaming)
 from repro.pipeline.api import pipeline, pipeline_many  # noqa: F401
+from repro.pipeline.ordination import (PCoAResult, pcoa_eigh,  # noqa: F401
+                                       pcoa_features, pcoa_many,
+                                       pcoa_subspace)
 from repro.pipeline.planner import (DEFAULT_MATRIX_BUDGET_BYTES,  # noqa: F401
                                     PipelinePlan, autotune_fused,
                                     autotune_stage1, plan_pipeline)

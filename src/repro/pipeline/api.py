@@ -14,6 +14,7 @@ CLI exposes it as `--from-features`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Dict, Optional
 
@@ -24,6 +25,7 @@ from repro import engine
 from repro.core import permutations
 from repro.core.permanova import (PermanovaResult, f_from_sw,
                                   p_value_from_null)
+from repro.pipeline import ordination as _ordination
 from repro.pipeline import planner as _planner
 from repro.pipeline import registry as _registry
 from repro.pipeline import streaming as _streaming
@@ -46,6 +48,7 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
              fused_tuning: Optional[Dict[str, int]] = None,
              backend: Optional[str] = None,
              mesh=None,
+             ordination: Optional[int] = None,
              autotune: bool = False) -> PermanovaResult:
     """Full features→p-value PERMANOVA under one joint plan.
 
@@ -61,6 +64,15 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                  fused-kernel sweep multi-device (row slabs over 'model',
                  permutations over the remaining axes, psum-reduced).
                  Implies materialize='fused-kernel'.
+    ordination:  optional k — also compute the top-k PCoA axes into
+                 `result.ordination` (coords, eigvals, explained
+                 variance). The path rides the bridge's residency
+                 contract: dense eigendecomposes the Gower matrix
+                 outright, stream runs the implicit-operator subspace
+                 iteration against the SAME resident mat2 (no second
+                 (n, n) array), and the fused bridges re-stream
+                 squared-distance slabs from the features (nothing
+                 (n, n)-shaped, ever).
     Remaining knobs mirror engine.run(); budgets split per stage
     (matrix/slab for distances, memory_budget_bytes for s_W labels).
     For a fixed key every materialization produces the same F and p-value
@@ -114,6 +126,7 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     prepare, rows_fn, dense_fn = dspec.bound(
         **{**pl.dist_tuning, **(dist_tuning or {})})
 
+    ordn = None
     if pl.materialize == "dense":
         dm = dense_fn(x)
         res = engine.run(dm, grouping, n_perms=n_perms, key=key,
@@ -121,6 +134,10 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                          memory_budget_bytes=memory_budget_bytes,
                          chunk=chunk, autotune=autotune, backend=backend,
                          tuning=sw_tuning)
+        if ordination is not None:
+            # the dense bridge already budgets (n, n) transients; the
+            # centered matrix + eigh is the exact path
+            ordn = _ordination.pcoa_eigh(dm * dm, ordination)
     elif pl.materialize == "stream":
         mat2, gower = _streaming.build_mat2_streaming(
             prepare(x), rows_fn, block=pl.row_block)
@@ -133,6 +150,13 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                          memory_budget_bytes=memory_budget_bytes,
                          chunk=chunk, autotune=autotune, backend=backend,
                          tuning=sw_tuning, squared=True, s_t=gower.s_t)
+        if ordination is not None:
+            # implicit centered operator against the SAME resident mat2 +
+            # the marginals the streaming pass already accumulated — the
+            # Gower matrix itself is never materialized (one (n, n) array
+            # stays the bridge's contract)
+            ordn = _ordination.pcoa_subspace(mat2_dev, ordination,
+                                             stats=gower)
     elif pl.materialize == "fused":
         if autotune:
             warnings.warn(
@@ -142,8 +166,9 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                 "materialize='fused-kernel' for the measured single-pass "
                 "candidates)", stacklevel=2)
         inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+        xprep = prepare(x)
         s_w, s_t, stats = _streaming.fused_sw(
-            prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+            xprep, rows_fn, grouping, inv_gs, key, n_total,
             row_block=pl.row_block, chunk=pl.sw.chunk)
         f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
                           jnp.float32(s_t), n, n_groups)
@@ -158,17 +183,18 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     elif pl.materialize == "fused-kernel":
         inv_gs = permutations.inv_group_sizes(grouping, n_groups)
         fspec = _registry.get_fused(pl.fused_impl)
+        xprep = prepare(x)
         if mesh is not None:
             if fspec.kind != "xla" and fused_impl not in (None, "auto"):
                 warnings.warn(
                     f"mesh execution runs the XLA fused sweep; pinned "
                     f"fused_impl={fused_impl!r} is not used", stacklevel=2)
             s_w, s_t, stats = _streaming.fused_sw_sharded(
-                mesh, prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+                mesh, xprep, rows_fn, grouping, inv_gs, key, n_total,
                 row_block=pl.row_block, chunk=pl.sw.chunk)
         else:
             s_w, s_t, stats = _streaming.fused_kernel_sw(
-                prepare(x), rows_fn, grouping, inv_gs, key, n_total,
+                xprep, rows_fn, grouping, inv_gs, key, n_total,
                 impl=fspec.kind, kernel_metric=fspec.kernel_metric,
                 row_block=pl.row_block, chunk=pl.sw.chunk,
                 tuning=pl.fused_tuning)
@@ -186,6 +212,14 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     else:  # pragma: no cover - planner validates
         raise ValueError(pl.materialize)
 
+    if ordination is not None and ordn is None:
+        # fused bridges: every matvec of the subspace iteration re-streams
+        # squared-distance row slabs from the feature table — ordination
+        # inherits the fused contract (nothing (n, n)-shaped ever exists);
+        # xprep was bound by the fused branch above
+        ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
+                                         row_block=pl.row_block)
+
     if pl.materialize in ("fused", "fused-kernel"):
         # the fused bridge IS stage 2; the joint plan string is authoritative
         executed_sw = pl.sw.impl
@@ -199,7 +233,7 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     return dataclasses.replace(
         res,
         method=f"pipeline[{pl.dist_impl}->{pl.materialize}->{executed_sw}]",
-        plan=plan_str)
+        plan=plan_str, ordination=ordn)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +250,8 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
                   memory_budget_bytes: Optional[float] = None,
                   matrix_budget_bytes: Optional[float] = None,
                   backend: Optional[str] = None,
-                  mesh=None
+                  mesh=None,
+                  ordination: Optional[int] = None
                   ) -> engine.PermanovaManyResult:
     """Stacked studies features→p-values through ONE joint plan.
 
@@ -236,6 +271,13 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
                 study's null is independent and sharded == single-host ==
                 S separate pipeline() calls, regardless of which shard
                 runs it.
+    ordination: optional k — per-study top-k PCoA axes into
+                `result.ordination` (engine.PermanovaManyResult is the
+                shared multi-study contract: F, p, R^2, coordinates +
+                explained variance). The dense path eigendecomposes from
+                the distance stack; the fused-kernel path re-streams
+                squared-distance slabs from the features per study, so
+                nothing (n, n)-shaped is added to its footprint.
 
     Study s draws its null from fold_in(key, s) — identical to S
     independent pipeline() calls — on EVERY path; a single fold must never
@@ -271,7 +313,7 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
             xs, groupings, n_groups=n_groups, metric=metric,
             n_perms=n_perms, key=key, row_block=row_block, chunk=chunk,
             memory_budget_bytes=memory_budget_bytes, backend=backend,
-            mesh=mesh)
+            mesh=mesh, ordination=ordination)
 
     pl = _planner.plan_pipeline(
         n, d, n_total, n_groups, metric=metric, backend=backend,
@@ -292,10 +334,29 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
     res = engine.permanova_many(
         dms, groupings, n_groups=n_groups, n_perms=n_perms, key=key,
         impl=sw_impl, chunk=chunk,
-        memory_budget_bytes=memory_budget_bytes, backend=backend)
+        memory_budget_bytes=memory_budget_bytes, backend=backend,
+        ordination=ordination)
     res.plan = (f"{pl.dist_impl} -> dense(batched lax.map) -> "
                 f"{res.plan}")
     return res
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_many_program(metric: str, block: int, ch: int, n_chunks: int,
+                        n: int, pad: int, n_groups: int):
+    """The jitted vmapped fused sweep, cached per static config — serving
+    callers must not pay a fresh trace/compile of the scan-of-scans per
+    request (mirrors engine.api._many_program)."""
+    from repro.core import distance as _dist
+    mdef = _dist.ROW_METRICS[metric]
+
+    def one(xp_pad, xp, grouping, igs, study_key):
+        return _streaming._sweep_rows_perms(
+            xp_pad, xp, grouping, igs, study_key, jnp.int32(0),
+            jnp.int32(0), rows_fn=mdef.rows, block=block, chunk=ch,
+            n_chunks=n_chunks, n=n, n_rows_pad=n + pad, n_groups=n_groups)
+
+    return jax.jit(jax.vmap(one))
 
 
 def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
@@ -303,7 +364,9 @@ def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
                          row_block: Optional[int], chunk: Optional[int],
                          memory_budget_bytes: Optional[float],
                          backend: Optional[str],
-                         mesh) -> engine.PermanovaManyResult:
+                         mesh,
+                         ordination: Optional[int] = None
+                         ) -> engine.PermanovaManyResult:
     """Batched single-pass sweep: vmap of the fused-kernel dataflow over
     the study axis, optionally sharded over the mesh's 'data' axis.
 
@@ -335,40 +398,61 @@ def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
     xs_pad = jnp.pad(xs_prep, ((0, 0), (0, pad), (0, 0)))
     inv_gs = jax.vmap(
         lambda g: permutations.inv_group_sizes(g, n_groups))(groupings)
-    # GLOBAL study index -> per-study key, folded before any sharding
-    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
-        jnp.arange(s_count))
+    run = _fused_many_program(metric, block, ch, n_chunks, n, pad,
+                              n_groups)
 
-    def one(xp_pad, xp, grouping, igs, study_key):
-        return _streaming._sweep_rows_perms(
-            xp_pad, xp, grouping, igs, study_key, jnp.int32(0),
-            jnp.int32(0), rows_fn=mdef.rows, block=block, chunk=ch,
-            n_chunks=n_chunks, n=n, n_rows_pad=n + pad, n_groups=n_groups)
-
-    run = jax.jit(jax.vmap(one))
-    args = (xs_pad, xs_prep, groupings, inv_gs, study_keys)
+    study_idx = jnp.arange(s_count)
+    args = (xs_pad, xs_prep, groupings, inv_gs)
     where = "vmap"
-    if mesh is not None and mesh.shape.get("data", 1) > 1:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        data_ways = mesh.shape["data"]
-        if s_count % data_ways:
-            raise ValueError(
-                f"study count {s_count} must divide the 'data' axis "
-                f"({data_ways}) for the sharded batched path")
-        spec = lambda a: NamedSharding(  # noqa: E731
-            mesh, P(*(["data"] + [None] * (a.ndim - 1))))
-        args = tuple(jax.device_put(a, spec(a)) for a in args)
-        where = f"vmap@data[{data_ways}]"
-    s_w_all, rs = run(*args)               # (S, n_chunks*ch), (S, n+pad)
-    s_w_all = s_w_all[:, :n_total]
-    s_t = jnp.sum(rs[:, :n], axis=1) / 2.0 / n
+    # study counts that do not divide 'data' wrap-pad and slice, the same
+    # contract as engine.permanova_many (shared helper)
+    data_ways, s_pad, wrap_idx = engine.api.study_axis_padding(mesh,
+                                                              s_count)
+    if wrap_idx is not None:
+        args = tuple(jnp.take(a, wrap_idx, axis=0) for a in args)
+        study_idx = wrap_idx
+    # GLOBAL study index -> per-study key, folded before any sharding;
+    # a padded slot replays its source study's key, so the pad is inert
+    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(study_idx)
+    args = args + (study_keys,)
+    if data_ways > 1:
+        args = engine.api.put_study_sharded(mesh, args)
+        where = (f"vmap@data[{data_ways}]"
+                 + (f"+pad{s_pad}" if s_pad else ""))
+    s_w_all, rs = run(*args)               # (S', n_chunks*ch), (S', n+pad)
+    s_w_all = s_w_all[:s_count, :n_total]
+    s_t = jnp.sum(rs[:s_count, :n], axis=1) / 2.0 / n
     f_perms = jax.vmap(f_from_sw, in_axes=(0, 0, None, None))(
         s_w_all, s_t.astype(jnp.float32), n, n_groups)
     p_vals = jax.vmap(p_value_from_null)(f_perms)
+
+    ord_res = None
+    if ordination is not None:
+        # per-study streamed PCoA (unsharded, deterministic — identical
+        # embeddings whether or not the sweep above ran on a mesh);
+        # lax.map bounds transients to ONE study's subspace iterate, and
+        # the Gower marginals reuse the sweep's row sums (`rs`) instead
+        # of paying another full distance rebuild per study
+        from repro.pipeline import ordination as _ord
+
+        def one_pcoa(xp_rs):
+            xp, rs_s = xp_rs
+            stats = _streaming.GowerStats(row_sums=rs_s,
+                                          total=jnp.sum(rs_s), n=n)
+            r = _ord.pcoa_features(xp, mdef.rows, int(ordination),
+                                   row_block=block, stats=stats)
+            return r.coords, r.eigvals, r.explained
+
+        coords, eigvals, explained = jax.lax.map(
+            one_pcoa, (xs_prep, rs[:s_count, :n]))
+        ord_res = _ord.PCoAResult(coords=coords, eigvals=eigvals,
+                                  explained=explained,
+                                  method="subspace-stream")
+
     return engine.PermanovaManyResult(
         f_stat=f_perms[:, 0], p_value=p_vals, s_t=s_t.astype(jnp.float32),
         s_w=s_w_all[:, 0], f_perms=f_perms, n_objects=n, n_groups=n_groups,
-        n_perms=n_perms,
+        n_perms=n_perms, ordination=ord_res,
         plan=(f"{pl.fused_impl}({where}) rows={block} "
               f"chunk={ch} studies={s_count} chunks={n_chunks} | "
               f"{pl.reason}"))

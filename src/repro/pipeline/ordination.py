@@ -1,0 +1,329 @@
+"""PCoA ordination — the consumer for the pipeline's Gower marginals.
+
+Principal Coordinates Analysis (classical MDS) embeds the samples of a
+distance matrix into k dimensions: eigendecompose the Gower-centered
+matrix G = -1/2 J (D∘D) J (J the centering projector) and scale the top
+eigenvectors by sqrt(eigenvalue). PERMANOVA and PCoA share ALL of their
+expensive inputs — mat2 = D∘D and its Gower marginals (row sums / grand
+sum), which the streaming builder already accumulates — so ordination
+rides the pipeline's dataflow instead of re-deriving it.
+
+Three execution paths, chosen by what is resident:
+
+  pcoa_eigh       dense eigendecomposition of G. Builds G outright — only
+                  appropriate where an extra (n, n) transient is already
+                  within budget (the pipeline's 'dense' bridge).
+  pcoa_subspace   subspace (orthogonal/block-power) iteration against an
+                  IMPLICIT centered operator: G @ V is evaluated from
+                  mat2 @ V plus rank-1 corrections built from the Gower
+                  marginals, so G itself is never materialized. This is
+                  the 'stream' bridge's path — mat2 stays the only (n, n)
+                  array resident.
+  pcoa_features   the same subspace iteration with mat2 @ V itself
+                  streamed: every matvec rebuilds squared-distance row
+                  slabs from the (n, d) feature table (the fused bridges'
+                  path — nothing (n, n)-shaped ever exists).
+
+The centered operator is indefinite for semi-metrics (Bray-Curtis,
+Jaccard), and plain power iteration converges to the largest |lambda| —
+possibly a NEGATIVE eigenvalue. The subspace paths therefore first
+estimate the spectral radius rho with a short power iteration and then
+iterate on the SHIFTED operator G + rho I (all eigenvalues >= 0, order
+preserved), recovering the true eigenvalues by a Rayleigh-Ritz step
+against the unshifted operator.
+
+Conventions (shared by every path, asserted by the parity tests):
+  * eigenvalues descending; coordinates coords[:, i] = v_i * sqrt(max
+    (lambda_i, 0)) — non-positive axes embed as zero width.
+  * explained[i] = lambda_i / trace(G), and trace(G) == s_T (the
+    PERMANOVA total sum of squares) — so "explained variance" is the
+    fraction of the total dispersion the axis carries. Semi-metrics can
+    make individual ratios exceed 1 (negative eigenvalues elsewhere in
+    the spectrum); we report the raw ratio rather than renormalizing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.pipeline.streaming import (GowerStats, _mat2_rows_step,
+                                      _pad_rows, gower_center)
+
+Array = jax.Array
+
+DEFAULT_ITERS = 96
+DEFAULT_OVERSAMPLE = 8
+
+
+@dataclasses.dataclass
+class PCoAResult:
+    """Top-k principal coordinates. Arrays may carry a leading study axis
+    (the stacked permanova_many / pipeline_many consumers)."""
+    coords: Array          # (..., n, k) sample coordinates
+    eigvals: Array         # (..., k) descending eigenvalues of G
+    explained: Array       # (..., k) eigval / trace(G) == eigval / s_T
+    method: str            # 'eigh' | 'subspace' | 'subspace-stream'
+
+    @property
+    def k(self) -> int:
+        return int(self.coords.shape[-1])
+
+    def study(self, s: int) -> "PCoAResult":
+        """View one study of a stacked result."""
+        return PCoAResult(coords=self.coords[s], eigvals=self.eigvals[s],
+                          explained=self.explained[s], method=self.method)
+
+
+# ---------------------------------------------------------------------------
+# Implicit centered operator: G @ V from mat2 @ V + Gower marginals.
+# ---------------------------------------------------------------------------
+
+def centered_matvec(matvec: Callable[[Array], Array], row_sums: Array,
+                    total: Array, n, valid: Optional[Array] = None
+                    ) -> Callable[[Array], Array]:
+    """Wrap V -> mat2 @ V into V -> G @ V without materializing G.
+
+    G = -1/2 (M - r 1^T/n - 1 r^T/n + t/n^2 1 1^T) gives
+
+      G @ V = -1/2 (M @ V - (r/n) colsum(V) - 1 (r^T V)/n
+                    + (t/n^2) 1 colsum(V))
+
+    with r/t the Gower marginals the streaming pass accumulates. `n` is
+    the number of VALID samples (may be traced); `valid` masks pad rows
+    of a padded study — the rank-1 terms are constant across rows, so
+    the mask must be applied to the OUTPUT, not just the inputs.
+    """
+    r = jnp.asarray(row_sums, jnp.float32)
+    t = jnp.float32(total)
+
+    def gv(v: Array) -> Array:
+        vv = v if valid is None else v * valid[:, None]
+        mv = matvec(vv)
+        cs = jnp.sum(vv, axis=0)                       # (k,) column sums
+        rv = r @ vv                                    # (k,)
+        out = -0.5 * (mv - r[:, None] * (cs[None, :] / n)
+                      - rv[None, :] / n + (t / (n * n)) * cs[None, :])
+        return out if valid is None else out * valid[:, None]
+
+    return gv
+
+
+def _spectral_radius(gv: Callable, n: int, key: jax.Array,
+                     iters: int = 16) -> Array:
+    """Power-iteration estimate of ||G||_2 (largest |eigenvalue|)."""
+    v = jax.random.normal(key, (n, 1), jnp.float32)
+    v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+
+    def body(carry, _):
+        v, _ = carry
+        w = gv(v)
+        nrm = jnp.linalg.norm(w)
+        return (w / jnp.maximum(nrm, 1e-30), nrm), None
+
+    (v, rho), _ = jax.lax.scan(body, (v, jnp.float32(0.0)), None,
+                               length=iters)
+    return rho
+
+
+def subspace_eigs(gv: Callable[[Array], Array], n: int, k: int, *,
+                  iters: int = DEFAULT_ITERS,
+                  oversample: int = DEFAULT_OVERSAMPLE,
+                  key: Optional[jax.Array] = None,
+                  valid: Optional[Array] = None,
+                  tol: float = 1e-8):
+    """Top-k (eigenvalues desc, eigenvectors (n, k)) of the implicit
+    symmetric operator `gv`, by shifted orthogonal iteration.
+
+    Early exit: the loop stops once the shifted Rayleigh quotients
+    stagnate (relative change <= tol) — typically well under `iters`
+    steps, which matters most on the feature-streamed path where every
+    matvec rebuilds the distance slabs; `iters` is the hard cap.
+    Deterministic for a fixed key (default key(0)): sharded and
+    single-host callers produce identical embeddings. `valid` confines
+    the iterate to the valid-sample subspace of a padded study.
+    """
+    if key is None:
+        key = jax.random.key(0)
+    p = int(min(n, k + oversample))
+    rho = _spectral_radius(gv, n, jax.random.fold_in(key, 1))
+    shift = rho * 1.05 + 1e-12      # strictly dominate any negative tail
+
+    def gv_shifted(v):
+        vv = v if valid is None else v * valid[:, None]
+        return gv(vv) + shift * vv
+
+    v0 = jax.random.normal(jax.random.fold_in(key, 0), (n, p), jnp.float32)
+    if valid is not None:
+        v0 = v0 * valid[:, None]
+    q0, _ = jnp.linalg.qr(gv_shifted(v0))
+
+    def cond(carry):
+        _, _, i, done = carry
+        return (i < iters) & ~done
+
+    def body(carry):
+        v, rq_prev, i, _ = carry
+        w = gv_shifted(v)
+        rq = jnp.sum(v * w, axis=0)        # shifted Rayleigh quotients
+        q, _ = jnp.linalg.qr(w)
+        scale = jnp.maximum(jnp.max(jnp.abs(rq)), 1e-30)
+        done = jnp.max(jnp.abs(rq - rq_prev)) <= tol * scale
+        return q, rq, i + 1, done
+
+    v, _, _, _ = jax.lax.while_loop(
+        cond, body, (q0, jnp.full((p,), jnp.inf, jnp.float32),
+                     jnp.int32(0), jnp.bool_(False)))
+    # Rayleigh-Ritz against the UNSHIFTED operator: eigenvalues come out
+    # directly, no shift subtraction (and no rho error) in the result.
+    b = v.T @ gv(v)
+    b = 0.5 * (b + b.T)
+    evals, evecs = jnp.linalg.eigh(b)                  # ascending
+    order = jnp.argsort(-evals)[:k]
+    return evals[order], v @ evecs[:, order]
+
+
+def _coords_from_eigs(evals: Array, evecs: Array, s_t: Array) -> PCoAResult:
+    lam = jnp.maximum(evals, 0.0)
+    coords = evecs * jnp.sqrt(lam)[None, :]
+    explained = evals / s_t
+    return PCoAResult(coords=coords, eigvals=evals, explained=explained,
+                      method="")
+
+
+# ---------------------------------------------------------------------------
+# Execution paths.
+# ---------------------------------------------------------------------------
+
+def pcoa_eigh(mat2: Array, k: int, *,
+              stats: Optional[GowerStats] = None) -> PCoAResult:
+    """Dense path: materialize G and eigendecompose it outright.
+
+    Costs one extra (n, n) transient — the 'dense' bridge's ordination
+    (where D and mat2 transients were already in budget). This is also
+    the oracle the subspace paths are tested against.
+    """
+    mat2 = jnp.asarray(mat2, jnp.float32)
+    n = mat2.shape[0]
+    g = gower_center(mat2, stats)
+    s_t = jnp.trace(g)                                  # == s_T exactly
+    evals, evecs = jnp.linalg.eigh(g)                   # ascending
+    order = jnp.argsort(-evals)[: int(min(k, n))]
+    res = _coords_from_eigs(evals[order], evecs[:, order], s_t)
+    return dataclasses.replace(res, method="eigh")
+
+
+def pcoa_subspace(mat2: Array, k: int, *,
+                  stats: Optional[GowerStats] = None,
+                  iters: int = DEFAULT_ITERS,
+                  oversample: int = DEFAULT_OVERSAMPLE,
+                  key: Optional[jax.Array] = None) -> PCoAResult:
+    """Implicit path for a RESIDENT mat2: G is never materialized — the
+    'stream' bridge keeps its single-(n, n)-array contract."""
+    mat2 = jnp.asarray(mat2, jnp.float32)
+    n = int(mat2.shape[0])
+    if stats is None:
+        rs = jnp.sum(mat2, axis=1)
+        total = jnp.sum(rs)
+    else:
+        rs = jnp.asarray(stats.row_sums, jnp.float32)
+        total = jnp.float32(stats.total)
+    gv = centered_matvec(lambda v: mat2 @ v, rs, total, n)
+    evals, evecs = subspace_eigs(gv, n, int(min(k, n)), iters=iters,
+                                 oversample=oversample, key=key)
+    res = _coords_from_eigs(evals, evecs, total / 2.0 / n)
+    return dataclasses.replace(res, method="subspace")
+
+
+@functools.partial(jax.jit, static_argnames=("rows_fn", "block", "n"))
+def _streamed_matvec_step(xpad, xprep, v, *, rows_fn, block, n):
+    """(mat2 @ V, row_sums) in one slab sweep — nothing (n, n) resident."""
+    n_pad = xpad.shape[0]
+
+    def body(_, lo):
+        m2 = _mat2_rows_step(xpad, xprep, lo, rows_fn=rows_fn,
+                             block=block, n=n)
+        return None, (m2 @ v, jnp.sum(m2, axis=1))
+
+    _, (mv, rs) = jax.lax.scan(body, None,
+                               jnp.arange(n_pad // block) * block)
+    return mv.reshape(n_pad, -1)[:n], rs.reshape(-1)[:n]
+
+
+def pcoa_features(xprep: Array, rows_fn: Callable, k: int, *,
+                  row_block: int,
+                  stats: Optional[GowerStats] = None,
+                  iters: int = DEFAULT_ITERS,
+                  oversample: int = DEFAULT_OVERSAMPLE,
+                  key: Optional[jax.Array] = None) -> PCoAResult:
+    """Fully-streamed path for the fused bridges: every matvec rebuilds
+    the squared-distance row slabs from the prepared feature table, so
+    ordination inherits the fused contract — peak residency is one
+    (row_block, n) slab, never an (n, n) array.
+
+    The Gower marginals come free from the first sweep when the caller
+    has none (the fused bridges only retain s_T).
+    """
+    n = int(xprep.shape[0])
+    block = int(min(row_block, n))
+    xpad, _ = _pad_rows(xprep, block)
+    step = functools.partial(_streamed_matvec_step, xpad, xprep,
+                             rows_fn=rows_fn, block=block, n=n)
+    if stats is None:
+        _, rs = step(jnp.zeros((n, 1), jnp.float32))
+        total = jnp.sum(rs)
+    else:
+        rs = jnp.asarray(stats.row_sums, jnp.float32)
+        total = jnp.float32(stats.total)
+    gv = centered_matvec(lambda v: step(v)[0], rs, total, n)
+    evals, evecs = subspace_eigs(gv, n, int(min(k, n)), iters=iters,
+                                 oversample=oversample, key=key)
+    res = _coords_from_eigs(evals, evecs, total / 2.0 / n)
+    return dataclasses.replace(res, method="subspace-stream")
+
+
+def pcoa_many(dms: Array, k: int, *,
+              n_valid: Optional[Array] = None,
+              iters: int = DEFAULT_ITERS,
+              oversample: int = DEFAULT_OVERSAMPLE,
+              key: Optional[jax.Array] = None) -> PCoAResult:
+    """Stacked-study PCoA from an (S, n, n) distance stack.
+
+    lax.map over studies bounds peak transients to ONE study's mat2 (the
+    stack itself is caller-resident; we never hold a second (S, n, n)
+    array). `n_valid` (S,) masks ragged studies padded to a common n —
+    pad coordinates come out exactly zero.
+    """
+    dms = jnp.asarray(dms, jnp.float32)
+    s_count, n, _ = dms.shape
+    k = int(min(k, n))
+    if key is None:
+        key = jax.random.key(0)
+
+    def one(args):
+        dm, nv = args
+        mat2 = dm * dm
+        if n_valid is None:     # static: skip the masking on stacked input
+            vmask = None
+        else:
+            vmask = (jnp.arange(n) < nv).astype(jnp.float32)
+            mat2 = mat2 * vmask[:, None] * vmask[None, :]
+        rs = jnp.sum(mat2, axis=1)
+        total = jnp.sum(rs)
+        gv = centered_matvec(lambda v: mat2 @ v, rs, total, nv, valid=vmask)
+        evals, evecs = subspace_eigs(gv, n, k, iters=iters,
+                                     oversample=oversample, key=key,
+                                     valid=vmask)
+        lam = jnp.maximum(evals, 0.0)
+        return evals, evecs * jnp.sqrt(lam)[None, :], total / 2.0 / nv
+
+    nv = (jnp.full((s_count,), n, jnp.float32) if n_valid is None
+          else jnp.asarray(n_valid, jnp.float32))
+    evals, coords, s_t = jax.lax.map(one, (dms, nv))
+    return PCoAResult(coords=coords, eigvals=evals,
+                      explained=evals / s_t[:, None],
+                      method="subspace")

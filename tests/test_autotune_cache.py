@@ -1,0 +1,115 @@
+"""Persisted autotune cache: concurrent writers must never leave a
+partial/interleaved JSON document (write-temp + os.replace publish), and
+merge-on-save must keep both writers' keys."""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from conftest import SRC
+
+WRITER = r"""
+import os, sys, time
+from repro.engine import planner
+
+name = sys.argv[1]
+n_writes = int(sys.argv[2])
+settle = float(sys.argv[3])
+for i in range(n_writes):
+    planner.record_entry(f"dist|cpu|stress|{name}", {
+        "impl": name, "us": float(i), "bucket": 32, "i": i})
+# staggered final write: re-read the file (fresh merge base) so the last
+# publisher has seen the other writer's keys
+time.sleep(settle)
+planner.load_autotune_cache(reload=True)
+planner.record_entry(f"dist|cpu|stress|{name}", {
+    "impl": name, "us": -1.0, "bucket": 32})
+print("WRITER-DONE", name)
+"""
+
+
+def test_two_writers_never_corrupt_cache(tmp_path):
+    """Two processes hammering record_entry against one cache file: every
+    concurrent read parses as complete JSON (atomic publish), no temp
+    files are left behind, and both writers' keys survive the race."""
+    cache = tmp_path / "autotune.json"
+    env = dict(os.environ)
+    env["REPRO_AUTOTUNE_CACHE"] = str(cache)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", WRITER, name, "40", settle],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True)
+        for name, settle in (("writerA", "0.3"), ("writerB", "0.9"))
+    ]
+
+    # concurrent reader: every observable state of the file must be a
+    # complete JSON document — a non-atomic writer fails this immediately
+    deadline = time.time() + 120
+    parses = 0
+    while any(p.poll() is None for p in procs):
+        if time.time() > deadline:
+            for p in procs:
+                p.kill()
+            raise AssertionError("writers did not finish in time")
+        if cache.exists():
+            try:
+                data = json.loads(cache.read_text())
+            except ValueError as e:  # pragma: no cover - the regression
+                for p in procs:
+                    p.kill()
+                raise AssertionError(
+                    f"cache file observed mid-write / corrupt: {e}")
+            assert isinstance(data, dict)
+            parses += 1
+        time.sleep(0.005)
+
+    for p in procs:
+        out, err = p.communicate(timeout=60)
+        assert p.returncode == 0, f"writer failed:\n{out}\n{err}"
+        assert "WRITER-DONE" in out
+    assert parses > 0, "reader never saw the cache file"
+
+    data = json.loads(cache.read_text())
+    # merge-on-save: the staggered final writes guarantee the last
+    # publisher merged the other's key from disk
+    assert "dist|cpu|stress|writerA" in data
+    assert "dist|cpu|stress|writerB" in data
+    for v in data.values():
+        assert "impl" in v
+    # atomic publish leaves no temp droppings
+    leftovers = [p for p in os.listdir(tmp_path) if ".tmp." in p]
+    assert not leftovers, leftovers
+
+
+def test_failed_write_leaves_no_temp(tmp_path, monkeypatch):
+    """A writer that dies mid-serialization must not leave a partial temp
+    file (the unlink-on-failure path in _save_autotune_cache)."""
+    import repro.engine.planner as planner
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, str(cache))
+    planner.load_autotune_cache(reload=True)
+    try:
+        real_dump = json.dump
+
+        def boom(*a, **k):
+            raise KeyboardInterrupt("simulated death mid-write")
+
+        monkeypatch.setattr(json, "dump", boom)
+        try:
+            planner.record_entry("dist|cpu|x|doomed", {
+                "impl": "doomed", "us": 1.0, "bucket": 32})
+        except KeyboardInterrupt:
+            pass
+        monkeypatch.setattr(json, "dump", real_dump)
+        leftovers = [p for p in os.listdir(tmp_path) if ".tmp." in p]
+        assert not leftovers, leftovers
+        assert not cache.exists()
+    finally:
+        monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, "off")
+        planner.load_autotune_cache(reload=True)

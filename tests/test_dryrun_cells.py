@@ -44,6 +44,7 @@ print("CELLS-JSON:" + json.dumps(results))
 """
 
 
+@pytest.mark.multidevice
 def test_smoke_cells_lower_compile_and_analyze():
     from conftest import run_subprocess
     out = run_subprocess(CODE, devices=4, timeout=900)

@@ -305,9 +305,22 @@ for s in range(S):
                                np.asarray(single.f_perms), rtol=1e-4)
     assert float(many.p_value[s]) == float(single.p_value), s
 print("OK many")
+
+# non-divisible study count: S=3 over data=4 wrap-pads and slices (same
+# contract as engine.permanova_many), bit-identical to single-host
+ref3 = pipeline.pipeline_many(jnp.asarray(xs[:3]), jnp.asarray(gs[:3]),
+                              n_groups=3, n_perms=49, key=key,
+                              materialize="fused-kernel")
+got3 = pipeline.pipeline_many(jnp.asarray(xs[:3]), jnp.asarray(gs[:3]),
+                              n_groups=3, n_perms=49, key=key,
+                              materialize="fused-kernel", mesh=mesh)
+assert "+pad1" in got3.plan, got3.plan
+assert np.array_equal(np.asarray(got3.f_perms), np.asarray(ref3.f_perms))
+print("OK many-nondivisible")
 """
 
 
+@pytest.mark.multidevice
 def test_sharded_fused_kernel_matches_single_host():
     """F and p-value equality: fused-kernel over a forced 8-device CPU
     mesh (row slabs over 'model', perms/studies over 'data') vs the
@@ -315,6 +328,7 @@ def test_sharded_fused_kernel_matches_single_host():
     from conftest import run_subprocess
     out = run_subprocess(MULTI_DEVICE_FUSED, devices=8, timeout=900)
     assert "OK single-study" in out and "OK many" in out
+    assert "OK many-nondivisible" in out
 
 
 class TestPipelineManySeeds:

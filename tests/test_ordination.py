@@ -1,0 +1,191 @@
+"""PCoA ordination: every execution path against a dense float64 eigh
+oracle (up to sign / near-degenerate column order), residency contracts,
+masked ragged studies, and the pipeline/engine integration surfaces."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine, pipeline
+from repro.core import distance as dist
+from repro.pipeline import ordination as ordn
+
+N, D, G, K = 37, 12, 4, 3
+METRICS = ("euclidean", "braycurtis", "jaccard", "aitchison")
+
+
+def _study(seed=3, n=N, d=D, g=G):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x *= rng.random(size=(n, d)) < 0.6
+    x[:, 0] = np.maximum(x[:, 0], 1e-3)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    return x, grouping
+
+
+def _oracle(mat2: np.ndarray, k: int):
+    """Dense float64 Gower-center + eigh: the scipy-equivalent reference."""
+    n = mat2.shape[0]
+    m = np.asarray(mat2, np.float64)
+    j = np.eye(n) - np.ones((n, n)) / n
+    g = -0.5 * j @ m @ j
+    w, v = np.linalg.eigh(g)
+    order = np.argsort(-w)[:k]
+    wk, vk = w[order], v[:, order]
+    return wk, vk * np.sqrt(np.maximum(wk, 0.0)), np.trace(g)
+
+
+def _assert_matches_oracle(res, wk, coords_ref, s_t, *, rtol=2e-4):
+    scale = np.abs(wk).max()
+    np.testing.assert_allclose(np.asarray(res.eigvals), wk,
+                               rtol=rtol, atol=rtol * scale)
+    c = np.asarray(res.coords)
+    # align per-column signs (eigenvectors are sign-free)
+    sgn = np.sign(np.sum(c * coords_ref, axis=0))
+    sgn[sgn == 0] = 1.0
+    np.testing.assert_allclose(
+        c * sgn, coords_ref, rtol=rtol,
+        atol=rtol * np.abs(coords_ref).max())
+    np.testing.assert_allclose(np.asarray(res.explained), wk / s_t,
+                               rtol=1e-3, atol=1e-5)
+
+
+class TestPathsVsOracle:
+    """eigh / subspace / feature-streamed paths vs the dense fp64 oracle,
+    for every registered metric (the acceptance criterion)."""
+
+    @pytest.mark.parametrize("metric", METRICS)
+    def test_all_paths_match(self, metric):
+        x, _ = _study()
+        mdef = dist.ROW_METRICS[metric]
+        xp = mdef.prepare(jnp.asarray(x))
+        dmat = np.array(mdef.rows(xp, xp))
+        np.fill_diagonal(dmat, 0.0)
+        mat2 = (dmat * dmat).astype(np.float32)
+        wk, coords_ref, s_t = _oracle(mat2, K)
+
+        for res in (
+            ordn.pcoa_eigh(jnp.asarray(mat2), K),
+            ordn.pcoa_subspace(jnp.asarray(mat2), K),
+            ordn.pcoa_features(xp, mdef.rows, K, row_block=13),
+        ):
+            _assert_matches_oracle(res, wk, coords_ref, s_t)
+
+    def test_methods_recorded(self):
+        x, _ = _study()
+        mdef = dist.ROW_METRICS["euclidean"]
+        xp = mdef.prepare(jnp.asarray(x))
+        dmat = np.array(mdef.rows(xp, xp))
+        mat2 = jnp.asarray((dmat * dmat).astype(np.float32))
+        assert ordn.pcoa_eigh(mat2, 2).method == "eigh"
+        assert ordn.pcoa_subspace(mat2, 2).method == "subspace"
+        assert ordn.pcoa_features(xp, mdef.rows, 2,
+                                  row_block=8).method == "subspace-stream"
+
+    def test_trace_is_s_total(self):
+        """trace(G) == s_T: the explained-variance denominator is the
+        PERMANOVA total sum of squares."""
+        x, grouping = _study(seed=5)
+        res = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                                n_groups=G, n_perms=9,
+                                materialize="stream", ordination=K)
+        total = np.asarray(res.ordination.eigvals /
+                           res.ordination.explained)
+        np.testing.assert_allclose(total, float(res.s_t), rtol=1e-4)
+
+
+class TestPipelineIntegration:
+    def test_every_bridge_agrees(self):
+        """pipeline(..., ordination=k) under all four bridges produces the
+        same embedding (up to sign) — the stream/fused paths never build a
+        second (n, n) array yet match the dense eigendecomposition."""
+        x, grouping = _study(seed=7)
+        ref = None
+        for mat in ("dense", "stream", "fused", "fused-kernel"):
+            res = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                                    n_groups=G, n_perms=9,
+                                    materialize=mat, ordination=K)
+            assert res.ordination is not None
+            c = np.asarray(res.ordination.coords)
+            assert c.shape == (N, K)
+            if ref is None:
+                ref = c
+                continue
+            sgn = np.sign(np.sum(c * ref, axis=0))
+            sgn[sgn == 0] = 1.0
+            np.testing.assert_allclose(c * sgn, ref, rtol=2e-3,
+                                       atol=2e-4 * np.abs(ref).max())
+
+    def test_off_by_default(self):
+        x, grouping = _study()
+        res = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                                n_groups=G, n_perms=9)
+        assert res.ordination is None
+
+    def test_pipeline_many_fused_matches_dense(self):
+        x0, g0 = _study(seed=11, n=32)
+        x1, g1 = _study(seed=12, n=32)
+        xs = jnp.asarray(np.stack([x0, x1]))
+        gs = jnp.asarray(np.stack([g0, g1]))
+        md = pipeline.pipeline_many(xs, gs, n_groups=G, n_perms=9,
+                                    materialize="dense", ordination=2)
+        mf = pipeline.pipeline_many(xs, gs, n_groups=G, n_perms=9,
+                                    materialize="fused-kernel", ordination=2)
+        assert md.ordination.coords.shape == (2, 32, 2)
+        np.testing.assert_allclose(np.abs(np.asarray(mf.ordination.coords)),
+                                   np.abs(np.asarray(md.ordination.coords)),
+                                   rtol=2e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(mf.ordination.eigvals),
+                                   np.asarray(md.ordination.eigvals),
+                                   rtol=1e-3)
+
+
+class TestEngineManyOrdination:
+    def test_stacked_and_study_view(self):
+        x0, g0 = _study(seed=21, n=24)
+        mdef = dist.ROW_METRICS["braycurtis"]
+        xp = mdef.prepare(jnp.asarray(x0))
+        dmat = np.array(mdef.rows(xp, xp))
+        np.fill_diagonal(dmat, 0.0)
+        dms = jnp.asarray(np.stack([dmat, dmat]).astype(np.float32))
+        gs = jnp.asarray(np.stack([g0, g0]))
+        many = engine.permanova_many(dms, gs, n_groups=G, n_perms=9,
+                                     ordination=2)
+        wk, coords_ref, s_t = _oracle((dmat * dmat).astype(np.float32), 2)
+        _assert_matches_oracle(many.ordination.study(0), wk, coords_ref,
+                               s_t, rtol=5e-4)
+        one = many.study(1)
+        assert one.ordination is not None and one.ordination.k == 2
+        # r2 on the shared result contract
+        np.testing.assert_allclose(np.asarray(many.r2),
+                                   1.0 - np.asarray(many.s_w)
+                                   / np.asarray(many.s_t), rtol=1e-6)
+
+    def test_ragged_pad_coords_zero(self):
+        """Masked studies: pad coordinates exactly zero, valid block
+        matching the unpadded embedding."""
+        sizes = (14, 23, 17)
+        studies = [_study(seed=30 + i, n=m) for i, m in enumerate(sizes)]
+        mdef = dist.ROW_METRICS["euclidean"]
+        dms, gs = [], []
+        for x, g in studies:
+            xp = mdef.prepare(jnp.asarray(x))
+            dmat = np.array(mdef.rows(xp, xp))
+            np.fill_diagonal(dmat, 0.0)
+            dms.append(dmat.astype(np.float32))
+            gs.append(g)
+        many = engine.permanova_many(dms, gs, n_groups=G, n_perms=9,
+                                     ordination=2)
+        coords = np.asarray(many.ordination.coords)
+        for s, m in enumerate(sizes):
+            assert np.all(coords[s, m:] == 0.0), s
+            wk, coords_ref, s_t = _oracle(dms[s] * dms[s], 2)
+            res_s = many.ordination.study(s)
+            res_valid = ordn.PCoAResult(
+                coords=res_s.coords[:m], eigvals=res_s.eigvals,
+                explained=res_s.explained, method=res_s.method)
+            _assert_matches_oracle(res_valid, wk, coords_ref, s_t,
+                                   rtol=1e-3)

@@ -1,4 +1,7 @@
-"""Hypothesis property tests on the PERMANOVA engine's invariants."""
+"""Hypothesis property tests on the PERMANOVA engine's invariants, plus
+the tier-2 statistical-validation suite (slow-marked): null p-value
+uniformity over many synthetic studies and full-test invariance under
+group-id relabeling, with strategies over ragged group sizes and prime n."""
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +14,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import fstat, permutations
 
 jax.config.update("jax_platform_name", "cpu")
+
+PRIMES = (7, 11, 13, 17, 19, 23)
 
 
 def _random_instance(draw):
@@ -103,3 +108,79 @@ def test_permutation_batch_deterministic(seed):
     a = np.asarray(permutations.permutation_batch(key, grouping, 0, 6))
     b = np.asarray(permutations.permutation_batch(key, grouping, 0, 6))
     np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Strategies over PRIME n (no tile/block ever divides evenly) and RAGGED
+# group sizes (explicitly drawn counts, not uniform assignment).
+# ---------------------------------------------------------------------------
+
+@st.composite
+def ragged_prime_instances(draw):
+    """(dm, grouping, g) with prime n and explicitly ragged group sizes."""
+    n = draw(st.sampled_from(PRIMES))
+    g = draw(st.integers(min_value=2, max_value=min(4, n - 1)))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # ragged sizes: every group >= 1, remainder distributed at random
+    sizes = np.ones(g, np.int64)
+    extra = rng.multinomial(n - g, np.ones(g) / g)
+    sizes += extra
+    grouping = np.repeat(np.arange(g), sizes).astype(np.int32)
+    rng.shuffle(grouping)
+    d = rng.random((n, n)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    return d, grouping, g, seed
+
+
+@settings(max_examples=12, deadline=None)
+@given(ragged_prime_instances())
+def test_full_test_invariant_under_group_relabeling(inst):
+    """Renaming the group ids (a bijection on label VALUES) leaves the
+    whole test invariant: observed F, the entire permutation null, and
+    the p-value depend only on the partition. Runs the full engine path
+    (planner + scheduler), not just one s_W kernel."""
+    from repro import engine
+    d, grouping, g, seed = inst
+    rng = np.random.default_rng(seed + 1)
+    relabel = rng.permutation(g)
+    grouping2 = relabel[grouping].astype(np.int32)
+    key = jax.random.key(seed % 997)
+    r1 = engine.run(jnp.asarray(d), jnp.asarray(grouping), n_perms=19,
+                    n_groups=g, key=key)
+    r2 = engine.run(jnp.asarray(d), jnp.asarray(grouping2), n_perms=19,
+                    n_groups=g, key=key)
+    np.testing.assert_allclose(float(r1.f_stat), float(r2.f_stat),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1.f_perms),
+                               np.asarray(r2.f_perms), rtol=1e-4,
+                               atol=1e-5)
+    assert float(r1.p_value) == float(r2.p_value)
+    np.testing.assert_allclose(float(r1.r2), float(r2.r2), rtol=1e-4,
+                               atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ragged_prime_instances())
+def test_sw_impls_agree_on_ragged_prime(inst):
+    """Cross-impl agreement on the awkward shapes (prime n defeats every
+    even tile; ragged sizes exercise the inv_group_sizes weighting)."""
+    d, grouping, g, seed = inst
+    rng = np.random.default_rng(seed)
+    inv_gs = np.asarray(permutations.inv_group_sizes(
+        jnp.asarray(grouping), g))
+    gperms = np.stack([rng.permutation(grouping) for _ in range(3)])
+    mat2 = jnp.asarray(d * d)
+    oracle = fstat.sw_algorithm1_numpy(d, gperms, inv_gs)
+    for fn, kw in ((fstat.sw_brute, {}), (fstat.sw_tiled, {"tile": 8}),
+                   (fstat.sw_matmul, {"perm_block": 2})):
+        got = np.asarray(fn(mat2, jnp.asarray(gperms), jnp.asarray(inv_gs),
+                            **kw))
+        np.testing.assert_allclose(got, oracle, rtol=5e-4, atol=1e-5)
+
+
+# The tier-2 statistical-validation suite (null p-value uniformity over
+# many synthetic studies, slow-marked) lives in
+# tests/test_statistical_validation.py — it needs no hypothesis, so it
+# must not sit behind this module's importorskip guard.

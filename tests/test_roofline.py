@@ -76,16 +76,22 @@ class TestLoopAwareCost:
 
 
 class TestCollectiveParsing:
+    @pytest.mark.multidevice
     def test_psum_produces_all_reduce_bytes(self):
         from conftest import run_subprocess
         code = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh     # AxisType shim (jax 0.4.x)
 from repro.roofline.hlo_cost import loop_aware_cost
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+try:  # jax >= 0.5 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+mesh = make_mesh((8,), ("data",))
 def f(x):
-    return jax.shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
-                         in_specs=P("data"), out_specs=P())(x)
+    return _shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
+                      in_specs=P("data"), out_specs=P())(x)
 xs = jax.ShapeDtypeStruct((1024,), jnp.float32)
 c = jax.jit(f).lower(xs).compile()
 cost = loop_aware_cost(c.as_text())

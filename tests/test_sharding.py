@@ -86,6 +86,7 @@ print("SHARDED-TRAIN-OK", float(metrics["loss"]))
 """
 
 
+@pytest.mark.multidevice
 def test_sharded_train_step_matches_single_device(run=None):
     from conftest import run_subprocess
     out = run_subprocess(MULTI_DEVICE_CODE, devices=8, timeout=600)
@@ -115,6 +116,7 @@ print("DIST-PERMANOVA-OK")
 """
 
 
+@pytest.mark.multidevice
 def test_distributed_permanova_multi_device():
     from conftest import run_subprocess
     out = run_subprocess(DISTRIBUTED_PERMANOVA_CODE, devices=8, timeout=600)
