@@ -89,6 +89,38 @@ def run(emit):
                  f"mat2_mib={4*ns*ns/2**20:.1f} "
                  f"p={float(res.p_value):.3f}")
 
+    # partial/covariate designs: 1 factor + 2 covariates through the same
+    # bridges (the design subsystem's per-column contraction) — wall-clock
+    # + the peak-memory model columns, mirroring the scale rows above
+    rng_d = np.random.default_rng(7)
+    nd, dd, gd, kcols = 384, 64, 8, 10   # basis: 1 + 2 cov + (g-1)
+    xd, gdg = _study(nd, dd, g=gd, seed=7)
+    cov_d = rng_d.normal(size=(nd, 2))
+    st_d = (np.arange(nd) % 4).astype(np.int32)
+    perms_d = 199
+    for mat in ("dense", "stream", "fused-kernel"):
+        def go_d():
+            r = pipeline.pipeline(xd, gdg, metric="braycurtis",
+                                  n_perms=perms_d, materialize=mat,
+                                  covariates=cov_d, strata=st_d,
+                                  n_groups=gd, key=jax.random.key(0))
+            jax.block_until_ready(r.f_perms)
+            return r
+        go_d()                                 # compile + warm
+        t0 = time.perf_counter()
+        res_d = go_d()
+        t = time.perf_counter() - t0
+        pl = pipeline.plan_pipeline(nd, dd, perms_d + 1, gd,
+                                    materialize=mat, design_cols=kcols)
+        if mat == "fused-kernel":
+            peak = 4 * pl.row_block * nd + 4 * pl.sw.chunk * nd * (kcols + 1)
+        else:
+            peak = 4 * nd * nd + 4 * pl.sw.chunk * nd * (kcols + 1)
+        emit(f"pipeline/design_1f2c_{mat}", t * 1e6,
+             f"n={nd} perms={perms_d} cols={kcols} perms_s={perms_d/t:.0f} "
+             f"peak_mib={peak/2**20:.1f} mat2_mib={4*nd*nd/2**20:.1f} "
+             f"p={float(res_d.p_value):.3f}")
+
     # batched studies through one plan (serving scenario)
     s_count, nb = 4, 128
     xs = jnp.stack([_study(nb, 64, seed=s)[0] for s in range(s_count)])

@@ -12,9 +12,11 @@ permutation scheduler). Pass sw_impl='auto' (the default) to let the
 planner encode the paper's CPU-tiled vs GPU-brute result.
 """
 
-from repro.core import fstat, permutations, distance, distributed  # noqa: F401
+from repro.core import design, fstat, permutations, distance, distributed  # noqa: F401
+from repro.core.design import Design, Term  # noqa: F401
 from repro.core.permanova import (  # noqa: F401
     PermanovaResult,
+    TermResult,
     f_from_sw,
     p_value_from_null,
     permanova,

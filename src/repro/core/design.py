@@ -1,0 +1,438 @@
+"""Design-matrix subsystem: the one-hot label path generalized.
+
+The paper's matmul reformulation of the s_W contraction builds the weighted
+one-hot factor E (E[i, g] = sqrt(1/n_g) 1[g_i == g]) and computes
+s_W = 1/2 <mat2, E E'> on the MXU. That factor is a special case of a much
+more general identity (McArdle & Anderson 2001 hat-matrix PERMANOVA): for
+ANY model whose hat matrix is H = Q Q' — Q an orthonormal basis of the
+design's column space, intercept included — the residual sum of squares of
+Anderson's partitioning is a plain matmul contraction against the squared
+distance matrix:
+
+    SS_resid(H) = tr[(I - H) G (I - H)] = 1/2 <mat2, H>
+                = 1/2 sum_k q_k' mat2 q_k
+
+(G = -1/2 C mat2 C is the Gower-centered matrix; H 1 = 1 and the zero
+diagonal of mat2 collapse the trace form). The one-hot E *is* such a Q
+(its columns are orthonormal and span [1 | group indicators]), which is
+exactly why the paper's one-hot matmul computes s_W. Everything downstream
+of this module therefore stays a tiled matmul against D² slabs — the
+memory-bound dataflow the paper optimizes is untouched; only the
+right-hand-side operand changes.
+
+Sequential (adonis2-style) terms: assemble X = [1 | X_term1 | X_term2 ...]
+and Gram-Schmidt each term block against everything before it (fp64 QR /
+SVD per block, rank-revealing). Because the blocks are mutually
+orthonormal, the cumulative-model residuals telescope per COLUMN:
+
+    SS explained by term t = SS_resid(terms < t) - SS_resid(terms <= t)
+                           = -1/2 sum_{k in term t} q_k' mat2 q_k
+
+so one per-column contraction (fstat.sw_cols_contract) yields every
+term's partial SS and the full-model residual in a single pass:
+
+    F_t[p] = (SS_t[p] / df_t) / (SS_resid_full[p] / dof_resid)
+
+with permutation p acting by row-permuting Q (equivalently permuting the
+distance matrix — vegan's "permute raw observations" convention).
+
+Sample weights fold in as W^(1/2): the basis is an orthonormal basis of
+col(W^(1/2) X) with the W^(1/2) factor folded back into the operand
+columns, so the contraction against the *raw* mat2 computes the weighted
+residual 1/2 <W^(1/2) mat2 W^(1/2), H_w>; the intercept column then gives
+the weighted total SS s_T^w = sum_ij w_i w_j d_ij² / (2 sum w). Uniform
+weights reduce to the unweighted statistic exactly.
+
+Two compilation modes keep the paper's fast path byte-identical:
+
+  'labels'  single categorical factor, no weights: operands are the raw
+            labels + inv_group_sizes — every existing s_W impl (brute /
+            tiled / matmul / Pallas / fused megakernel) consumes them
+            exactly as before; permutations.permutation_batch_dyn (or the
+            strata-restricted generator) permutes labels. The no-strata
+            case compiles to the SAME programs as the pre-design repo.
+  'dense'   anything else (covariates, multiple factors, weights):
+            operands are the (n, K) orthonormal basis plus per-term
+            column spans; permutations act as row-index gathers and the
+            contraction is the per-column matmul form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+MODE_LABELS = "labels"
+MODE_DENSE = "dense"
+
+# Rank tolerance for the fp64 per-term orthogonalization: singular values
+# below RANK_TOL * s_max * sqrt(n) are treated as collinear with earlier
+# terms and dropped (their df is absorbed by the terms before them).
+RANK_TOL = 1e-10
+
+
+@dataclasses.dataclass(frozen=True)
+class Term:
+    """One model term: a contiguous span of orthonormal basis columns.
+
+    df is the RANK INCREMENT the term contributes beyond everything before
+    it (a g-level factor after the intercept has df g-1; a covariate
+    collinear with earlier terms has df 0 and is reported as such).
+    lo/hi index the dense basis columns; in labels mode they are 0/0
+    (the one-hot operand is not column-sliced).
+    """
+    name: str
+    kind: str          # 'intercept' | 'factor' | 'covariate'
+    df: int
+    lo: int = 0
+    hi: int = 0
+
+
+class DesignOperands(NamedTuple):
+    """What the s_W implementations actually consume.
+
+    labels mode: `grouping` (n,) int32 + `inv_group_sizes` (G,) f32 — the
+    exact operands of the pre-design repo (every registry impl, the Pallas
+    kernels and the fused megakernel take them unchanged).
+    dense mode: `basis` (n, K) f32 — hat-matrix factor blocks; permuted
+    row-gathers of it replace the one-hot G matrix on the matmul paths.
+    """
+    mode: str
+    grouping: Optional[Array]
+    inv_group_sizes: Optional[Array]
+    n_groups: Optional[int]
+    basis: Optional[Array]
+    term_cols: Tuple[Tuple[int, int], ...]   # (lo, hi) per term, dense mode
+
+
+@dataclasses.dataclass
+class Design:
+    """A compiled PERMANOVA design: terms, permutation scheme, operands."""
+    n: int
+    mode: str                       # MODE_LABELS | MODE_DENSE
+    terms: Tuple[Term, ...]         # term 0 is always the intercept
+    dof_resid: int
+    # labels mode
+    grouping: Optional[Array] = None
+    n_groups: Optional[int] = None
+    # dense mode (basis64 is the fp64 master used by tests/oracles; basis
+    # is the f32 operand with any W^(1/2) factor folded in)
+    basis: Optional[Array] = None
+    basis64: Optional[np.ndarray] = None
+    # shared
+    strata: Optional[Array] = None  # (n,) int32 or None (free permutation)
+    weights: Optional[np.ndarray] = None
+
+    @property
+    def rank(self) -> int:
+        """Total model rank, intercept included (== dense basis width)."""
+        return sum(t.df for t in self.terms)
+
+    @property
+    def k_cols(self) -> int:
+        return 0 if self.basis is None else int(self.basis.shape[1])
+
+    @property
+    def is_plain_labels(self) -> bool:
+        """True when this design IS the pre-refactor fast path: a single
+        categorical factor, free permutations — routed through the exact
+        label-based programs (bit-identical results, identical HLO)."""
+        return self.mode == MODE_LABELS and self.strata is None
+
+    @property
+    def operands(self) -> DesignOperands:
+        if self.mode == MODE_LABELS:
+            from repro.core import permutations
+            return DesignOperands(
+                mode=MODE_LABELS, grouping=self.grouping,
+                inv_group_sizes=permutations.inv_group_sizes(
+                    self.grouping, self.n_groups),
+                n_groups=self.n_groups, basis=None, term_cols=())
+        return DesignOperands(
+            mode=MODE_DENSE, grouping=None, inv_group_sizes=None,
+            n_groups=self.n_groups, basis=self.basis,
+            term_cols=tuple((t.lo, t.hi) for t in self.terms))
+
+    def describe(self) -> str:
+        ts = "+".join(f"{t.name}({t.df})" for t in self.terms[1:])
+        extra = []
+        if self.strata is not None:
+            extra.append("strata")
+        if self.weights is not None:
+            extra.append("weighted")
+        tail = f" [{','.join(extra)}]" if extra else ""
+        return f"design[{self.mode}] ~ {ts or '1'}{tail}"
+
+    # -- constructors -----------------------------------------------------
+
+    @staticmethod
+    def from_labels(grouping, *, n_groups: Optional[int] = None,
+                    strata=None, weights=None,
+                    name: str = "grouping") -> "Design":
+        """The compat shim: a single categorical factor.
+
+        Without weights this compiles to LABELS mode — the operands are the
+        caller's label array itself, so every pre-design call site routes
+        through here with zero behavior change. Weights force dense mode
+        (the one-hot factor is no longer orthonormal under W)."""
+        if isinstance(grouping, Design):
+            return grouping
+        grouping = jnp.asarray(grouping, jnp.int32)
+        n = int(grouping.shape[0])
+        if n_groups is None:
+            n_groups = int(jnp.max(grouping)) + 1
+        if weights is not None:
+            return build(grouping=grouping, n_groups=n_groups,
+                         strata=strata, weights=weights, factor_name=name)
+        strata_arr = None if strata is None else jnp.asarray(strata,
+                                                             jnp.int32)
+        terms = (Term("intercept", "intercept", 1),
+                 Term(name, "factor", n_groups - 1))
+        return Design(n=n, mode=MODE_LABELS, terms=terms,
+                      dof_resid=n - n_groups, grouping=grouping,
+                      n_groups=n_groups, strata=strata_arr)
+
+
+# ---------------------------------------------------------------------------
+# Dense-basis construction (fp64 host arithmetic).
+# ---------------------------------------------------------------------------
+
+def _orth_block(q_prev: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Orthonormal basis of cols' component orthogonal to span(q_prev).
+
+    Two projection passes (classical Gram-Schmidt re-orthogonalization)
+    then a rank-revealing SVD; fp64 throughout."""
+    x = np.asarray(cols, np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    for _ in range(2):
+        if q_prev.shape[1]:
+            x = x - q_prev @ (q_prev.T @ x)
+    u, s, _ = np.linalg.svd(x, full_matrices=False)
+    if s.size == 0:
+        return u[:, :0]
+    thresh = RANK_TOL * max(1.0, float(s[0])) * np.sqrt(x.shape[0])
+    r = int(np.sum(s > thresh))
+    return u[:, :r]
+
+
+def _one_hot_np(labels: np.ndarray, n_groups: int) -> np.ndarray:
+    out = np.zeros((labels.shape[0], n_groups), np.float64)
+    out[np.arange(labels.shape[0]), labels] = 1.0
+    return out
+
+
+def _normalize_covariates(covariates, n: int) -> List[Tuple[str, np.ndarray]]:
+    """Accepts a dict name->(n,), a list of (name, values), or a plain
+    (n,)/(n, c) array (auto-named cov0..)."""
+    if covariates is None:
+        return []
+    if isinstance(covariates, dict):
+        items = list(covariates.items())
+    elif isinstance(covariates, (list, tuple)) and covariates and \
+            isinstance(covariates[0], (list, tuple)) and \
+            len(covariates[0]) == 2 and isinstance(covariates[0][0], str):
+        items = list(covariates)
+    else:
+        arr = np.asarray(covariates, np.float64)
+        if arr.ndim == 1:
+            arr = arr[:, None]
+        if arr.ndim != 2 or arr.shape[0] != n:
+            raise ValueError(f"covariates must be (n, c) with n={n}; "
+                             f"got shape {arr.shape}")
+        items = [(f"cov{j}", arr[:, j]) for j in range(arr.shape[1])]
+    out = []
+    for name, v in items:
+        v = np.asarray(v, np.float64).reshape(-1)
+        if v.shape[0] != n:
+            raise ValueError(f"covariate {name!r} has {v.shape[0]} values, "
+                             f"expected {n}")
+        out.append((str(name), v))
+    return out
+
+
+def _normalize_factors(factors, grouping, n_groups, factor_name):
+    """Ordered (name, labels int64 (n,), n_levels) triples."""
+    items = []
+    if factors is not None:
+        it = factors.items() if isinstance(factors, dict) else factors
+        for name, labels in it:
+            items.append((str(name), np.asarray(labels, np.int64)))
+    if grouping is not None:
+        items.append((str(factor_name), np.asarray(grouping, np.int64)))
+    out = []
+    for name, labels in items:
+        levels = int(labels.max()) + 1 if labels.size else 0
+        out.append((name, labels, levels))
+    if grouping is not None and n_groups is not None:
+        name, labels, _ = out[-1]
+        out[-1] = (name, labels, int(n_groups))
+    return out
+
+
+def build(*, grouping=None, covariates=None, factors=None, strata=None,
+          weights=None, n_groups: Optional[int] = None, n: Optional[int] = None,
+          factor_name: str = "grouping", force_dense: bool = False) -> Design:
+    """Compile a PERMANOVA design.
+
+    Model term order is adonis2-sequential: covariates first, extra
+    factors next, the primary `grouping` factor LAST — so the headline
+    factor's partial F is adjusted for every covariate (the partial /
+    covariate-PERMANOVA reading). Pass `factors` (ordered mapping) for
+    multi-factor models; `grouping` stays the final term.
+
+    A single factor with no covariates/weights compiles to labels mode —
+    the pre-design fast path, byte-identical operands — unless
+    force_dense=True (the batched multi-study program runs ONE dense
+    contraction for every design shape).
+    """
+    covs = _normalize_covariates(covariates, _infer_n(grouping, covariates,
+                                                      n))
+    n = _infer_n(grouping, covariates, n)
+    facs = _normalize_factors(factors, grouping, n_groups, factor_name)
+    if not facs and not covs:
+        raise ValueError("design needs at least one factor or covariate")
+    single_factor = (len(facs) == 1 and not covs and weights is None
+                     and not force_dense)
+    if single_factor:
+        return Design.from_labels(facs[0][1].astype(np.int32),
+                                  n_groups=facs[0][2], strata=strata,
+                                  name=facs[0][0])
+
+    w = None
+    if weights is not None:
+        w = np.asarray(weights, np.float64).reshape(-1)
+        if w.shape[0] != n:
+            raise ValueError(f"weights must be (n,); got {w.shape}")
+        if np.any(w < 0) or not np.any(w > 0):
+            raise ValueError("weights must be non-negative with at least "
+                             "one positive entry")
+    sw = np.sqrt(w) if w is not None else np.ones((n,), np.float64)
+
+    # intercept first, then covariates, then factors (grouping last)
+    blocks: List[Tuple[str, str, np.ndarray]] = [
+        ("intercept", "intercept", np.ones((n, 1), np.float64))]
+    for name, v in covs:
+        blocks.append((name, "covariate", v[:, None]))
+    for name, labels, levels in facs:
+        blocks.append((name, "factor", _one_hot_np(labels, levels)))
+
+    q = np.zeros((n, 0), np.float64)
+    terms: List[Term] = []
+    for name, kind, cols in blocks:
+        qb = _orth_block(q, sw[:, None] * cols)
+        lo = q.shape[1]
+        q = np.concatenate([q, qb], axis=1)
+        terms.append(Term(name, kind, qb.shape[1], lo, q.shape[1]))
+    if terms[0].df != 1:  # pragma: no cover - sw has a positive entry
+        raise ValueError("degenerate design: empty intercept")
+    k = q.shape[1]
+    dof_resid = n - k
+    if dof_resid <= 0:
+        raise ValueError(f"design is saturated: rank {k} >= n={n} leaves "
+                         "no residual degrees of freedom")
+    basis64 = sw[:, None] * q          # W^(1/2) folded into the operand
+    strata_arr = None if strata is None else jnp.asarray(strata, jnp.int32)
+    ngrp = facs[-1][2] if facs else None
+    grp = (jnp.asarray(facs[-1][1], jnp.int32) if facs else None)
+    return Design(n=n, mode=MODE_DENSE, terms=tuple(terms),
+                  dof_resid=dof_resid, grouping=grp, n_groups=ngrp,
+                  basis=jnp.asarray(basis64, jnp.float32), basis64=basis64,
+                  strata=strata_arr, weights=w)
+
+
+def _infer_n(grouping, covariates, n):
+    if n is not None:
+        return int(n)
+    if grouping is not None:
+        return int(np.asarray(grouping).shape[0])
+    if covariates is None:
+        raise ValueError("cannot infer n: pass grouping, covariates, or n=")
+    if isinstance(covariates, dict):
+        return int(np.asarray(next(iter(covariates.values()))).shape[0])
+    if isinstance(covariates, (list, tuple)) and covariates and \
+            isinstance(covariates[0], (list, tuple)):
+        return int(np.asarray(covariates[0][1]).shape[0])
+    arr = np.asarray(covariates)
+    return int(arr.shape[0])
+
+
+def pad_design(design: Design, n_pad: int) -> Design:
+    """Zero-pad a dense design to n_pad rows (ragged multi-study batching).
+
+    Pad rows get EXACTLY-ZERO basis rows, so against a zero-padded mat2
+    every padded contraction term contributes +0.0 — float sums are
+    bit-identical to the unpadded study (x + 0.0 == x), which is what lets
+    the ragged `permanova_many` path report observed per-term F that
+    bit-matches the unpadded run. dof bookkeeping keeps the TRUE n."""
+    if design.mode != MODE_DENSE:
+        raise ValueError("pad_design applies to dense-mode designs")
+    if n_pad < design.n:
+        raise ValueError(f"n_pad={n_pad} < design.n={design.n}")
+    pad = n_pad - design.n
+    if pad == 0:
+        return design
+    basis64 = np.pad(design.basis64, ((0, pad), (0, 0)))
+    strata = (None if design.strata is None
+              else jnp.pad(design.strata, (0, pad)))
+    grp = (None if design.grouping is None
+           else jnp.pad(design.grouping, (0, pad)))
+    return dataclasses.replace(
+        design, basis=jnp.asarray(basis64, jnp.float32), basis64=basis64,
+        strata=strata, grouping=grp)
+
+
+# ---------------------------------------------------------------------------
+# Per-term statistic assembly from the per-column contraction output.
+# ---------------------------------------------------------------------------
+
+class TermStats(NamedTuple):
+    """Per-term statistics over the permutation sweep (leading axes free:
+    (..., P) for single studies, (S, P) for batched)."""
+    ss_resid: Array        # (..., P) full-model residual SS
+    s_t: Array             # (...,)   observed total SS (intercept column)
+    ss_terms: Array        # (..., P, T) explained SS per non-intercept term
+    f_terms: Array         # (..., P, T) pseudo-F per non-intercept term
+
+
+def term_stats(s_cols: Array, design: Design,
+               dof_resid=None) -> TermStats:
+    """Assemble per-term F from the per-column quadratic forms.
+
+    s_cols: (..., P, K) output of the sw_cols contraction, column order =
+            design.basis columns (intercept at [lo,hi) of term 0).
+    dof_resid: scalar or (...,) per-study residual dof (ragged batches
+            use true n_s - rank); defaults to design.dof_resid.
+    """
+    s_cols = jnp.asarray(s_cols)
+    icpt = design.terms[0]
+    ss_resid = jnp.sum(s_cols, axis=-1)
+    s_t = jnp.sum(s_cols[..., 0, icpt.lo:icpt.hi], axis=-1)
+    if dof_resid is None:
+        dof_resid = design.dof_resid
+    dof_resid = jnp.asarray(dof_resid, s_cols.dtype)
+    ss_list, f_list = [], []
+    for t in design.terms[1:]:
+        ss_t = -jnp.sum(s_cols[..., t.lo:t.hi], axis=-1)
+        df_t = max(t.df, 1)          # df 0 (collinear term): F defined 0
+        denom = ss_resid / dof_resid[..., None]
+        f_t = jnp.where(t.df > 0, (ss_t / df_t) / denom,
+                        jnp.zeros_like(ss_t))
+        ss_list.append(ss_t)
+        f_list.append(f_t)
+    return TermStats(ss_resid=ss_resid, s_t=s_t,
+                     ss_terms=jnp.stack(ss_list, axis=-1),
+                     f_terms=jnp.stack(f_list, axis=-1))
+
+
+def observed_scols_fp64(mat2: np.ndarray, design: Design) -> np.ndarray:
+    """fp64 reference of the observed per-column contraction (tests)."""
+    b = design.basis64
+    return 0.5 * np.einsum("ik,ij,jk->k", b, np.asarray(mat2, np.float64),
+                           b)

@@ -127,14 +127,25 @@ def permanova_distributed(mesh: Mesh, dm: Array, grouping: Array, *,
                           n_groups: Optional[int] = None,
                           impl: str = "matmul", perm_block: int = 64):
     """Distributed full PERMANOVA. Semantics match core.permanova.permanova
-    (up to permutation count padding, which only adds extra null draws)."""
+    (up to permutation count padding, which only adds extra null draws).
+
+    Label normalization routes through the design shim like every other
+    entry point; only plain single-factor designs run here (strata /
+    covariate / weighted designs shard over the STUDY axis via
+    engine.permanova_many(mesh=...) instead of matrix rows)."""
+    from repro.core import design as _design  # deferred: light cycle guard
     if key is None:
         key = jax.random.key(0)
     dm = jnp.asarray(dm)
-    grouping = jnp.asarray(grouping, dtype=jnp.int32)
+    design = _design.Design.from_labels(grouping, n_groups=n_groups)
+    if not design.is_plain_labels:
+        raise ValueError(
+            "permanova_distributed shards matrix rows for plain "
+            "single-factor designs; use engine.permanova_many(mesh=...) "
+            "for strata/covariate/weighted designs")
+    grouping = design.grouping
     n = dm.shape[0]
-    if n_groups is None:
-        n_groups = int(jnp.max(grouping)) + 1
+    n_groups = design.n_groups
     mat2 = dm * dm
     inv_gs = permutations.inv_group_sizes(grouping, n_groups)
     s_w_all = sw_distributed(mesh, mat2, grouping, inv_gs, key, n_perms + 1,

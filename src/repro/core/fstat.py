@@ -300,3 +300,93 @@ def sw_matmul_rows_partial(mat2_rows: Array, row_offset: Array,
     gblocks = groupings.reshape(-1, perm_block, n)
     _, out = jax.lax.scan(body, None, gblocks)
     return out.reshape(-1)[:n_perms]
+
+
+# ---------------------------------------------------------------------------
+# Design-basis (hat-matrix) contraction: per-column quadratic forms.
+#
+# The design subsystem (core.design) generalizes the one-hot factor E to an
+# arbitrary orthonormal basis V of a model's column space: SS_resid =
+# 1/2 <mat2, V V'> = sum_k 1/2 v_k' mat2 v_k, and adonis2-style per-term
+# partial SS are (minus) per-column-span sums of the same quadratic forms.
+# The dataflow is IDENTICAL to sw_matmul_contract — a tiled matmul against
+# mat2 — except the per-column sums are kept separate so the caller can
+# slice them into terms.
+# ---------------------------------------------------------------------------
+
+def basis_perm_factors(basis: Array, perms: Array) -> Array:
+    """V[p] = basis[perms[p], :] — the (P, n, K) row-permuted design-basis
+    factor that replaces the one-hot E on the matmul paths (permuting the
+    basis rows is vegan's permute-the-observations convention)."""
+    return basis[perms]
+
+
+def sw_cols_contract(mat2_rows: Array, v: Array, v_rows: Array) -> Array:
+    """Per-column quadratic forms over a block of mat2 rows.
+
+    s[p, k] = 1/2 * sum_i (M2_rows @ V[p])[i, k] * V_rows[p, i, k]
+
+    v: (P, n, K) permuted basis over ALL samples; v_rows: (P, n_local, K)
+    rows aligned with mat2_rows (v itself for the full matrix, a
+    row-offset slice for sharded/fused partials). Zero diagonal makes the
+    full i != j sum twice the triangle sum; summing partials over disjoint
+    row blocks reconstructs the global per-column statistic — exactly the
+    contract of sw_matmul_contract, with the column axis kept."""
+    p, n, k = v.shape
+    n_local = mat2_rows.shape[0]
+    v2d = jnp.transpose(v, (1, 0, 2)).reshape(n, p * k)     # (n, P*K)
+    y = mat2_rows @ v2d                                     # on MXU
+    s = jnp.sum(y.reshape(n_local, p, k)
+                * jnp.transpose(v_rows, (1, 0, 2)), axis=0)
+    return 0.5 * s                                          # (P, K)
+
+
+def sw_cols_block(mat2: Array, v: Array) -> Array:
+    """(P, K) per-column statistic for one block of permuted bases."""
+    return sw_cols_contract(mat2, v, v)
+
+
+def _scan_v_blocks(one_fn: Callable, mat2, vperms: Array, block: int):
+    p = vperms.shape[0]
+    block = min(block, p)
+    pad = (-p) % block
+    if pad:
+        vperms = jnp.pad(vperms, ((0, pad), (0, 0), (0, 0)), mode="edge")
+    vb = vperms.reshape(-1, block, *vperms.shape[1:])
+
+    def body(_, v):
+        return None, one_fn(mat2, v)
+
+    _, out = jax.lax.scan(body, None, vb)
+    return out.reshape(-1, vperms.shape[-1])[:p]
+
+
+def sw_cols_matmul(mat2: Array, vperms: Array, *,
+                   perm_block: int = 64) -> Array:
+    """Per-column statistic over all permutations, matmul form (scan over
+    permutation blocks — the design-mode analogue of sw_matmul)."""
+    return _scan_v_blocks(sw_cols_block, mat2, vperms, perm_block)
+
+
+def sw_cols_brute(mat2: Array, vperms: Array, *, block: int = 16) -> Array:
+    """Per-column statistic, brute dataflow: every permutation re-streams
+    mat2 (the GPU-style Algorithm 3 analogue for dense designs)."""
+    def one_block(m2, vb):
+        return jax.vmap(
+            lambda v: 0.5 * jnp.einsum("ik,ij,jk->k", v, m2, v))(vb)
+    return _scan_v_blocks(one_block, mat2, vperms, block)
+
+
+def sw_cols_rows_partial(mat2_rows: Array, row_offset: Array,
+                         vperms: Array, *, perm_block: int = 64) -> Array:
+    """Row-sharded partial of the per-column contraction: each shard
+    contracts its row block; psum over shards reconstructs (P, K)."""
+    n_local = mat2_rows.shape[0]
+
+    def one(m2, vb):
+        pb, _, k = vb.shape
+        v_rows = jax.lax.dynamic_slice(vb, (0, row_offset, 0),
+                                       (pb, n_local, k))
+        return sw_cols_contract(m2, vb, v_rows)
+
+    return _scan_v_blocks(one, mat2_rows, vperms, perm_block)

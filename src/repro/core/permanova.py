@@ -36,6 +36,33 @@ SW_IMPLS = {
 
 
 @dataclasses.dataclass
+class TermResult:
+    """Per-term statistics of a multi-term (design) PERMANOVA.
+
+    One entry per non-intercept model term, in sequential (adonis2) order:
+    each term's SS is adjusted for everything BEFORE it. Arrays carry a
+    leading study axis on the multi-study entry points."""
+    name: str
+    kind: str              # 'factor' | 'covariate'
+    df: int
+    ss: Array              # observed explained SS (sequential)
+    f_stat: Array          # observed partial pseudo-F
+    p_value: Array
+    r2: Array              # ss / s_T (variance explained by this term)
+    f_perms: Array         # (n_perms + 1,) null incl. observed at 0
+
+    def __repr__(self):  # pragma: no cover - cosmetic
+        try:
+            return (f"TermResult({self.name}: df={self.df}, "
+                    f"F={float(self.f_stat):.6g}, "
+                    f"p={float(self.p_value):.6g}, "
+                    f"R2={float(self.r2):.4g})")
+        except TypeError:   # batched (S,)-leading arrays
+            return (f"TermResult({self.name}: df={self.df}, "
+                    f"batched x{self.f_stat.shape[0]})")
+
+
+@dataclasses.dataclass
 class PermanovaResult:
     f_stat: Array          # observed pseudo-F
     p_value: Array
@@ -49,6 +76,11 @@ class PermanovaResult:
     plan: str = ""         # engine execution plan (impl, tuning, chunking)
     ordination: object = None   # Optional[pipeline.ordination.PCoAResult]
                                 # when the caller asked for PCoA axes
+    terms: object = None   # Optional[tuple[TermResult, ...]] on the design
+                           # path (covariates/strata/weights/multi-factor);
+                           # headline f_stat/p_value are the LAST term's
+                           # (the covariate-adjusted factor of interest).
+                           # None on the classic single-factor path.
 
     @property
     def r2(self) -> Array:
@@ -85,13 +117,14 @@ def p_value_from_null(f_perms: Array) -> Array:
     return (greater + 1.0) / (n_perms + 1.0)
 
 
-def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
+def permanova(dm: Array, grouping: Array = None, *, n_perms: int = 999,
               key: Optional[jax.Array] = None, n_groups: Optional[int] = None,
               sw_impl: str = "auto",
               sw_fn: Optional[Callable] = None,
               memory_budget_bytes: Optional[float] = None,
               chunk: Optional[int] = None,
               metric: Optional[str] = None,
+              covariates=None, strata=None, weights=None,
               autotune: bool = False) -> PermanovaResult:
     """Run the full PERMANOVA test on one host (thin engine wrapper).
 
@@ -101,7 +134,9 @@ def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
                construction and the permutation sweep jointly. A non-square
                2-D input is always treated as features; a square input is
                treated as a distance matrix unless `metric` is given.
-    grouping:  (n,) int labels in [0, n_groups).
+    grouping:  (n,) int labels in [0, n_groups) — or a compiled
+               core.design.Design (then covariates/strata/weights must be
+               None; the Design already carries them).
     metric:    distance metric for the features path ('braycurtis',
                'euclidean', 'jaccard', 'aitchison'). Passing it forces the
                pipeline path even for square inputs.
@@ -110,10 +145,39 @@ def permanova(dm: Array, grouping: Array, *, n_perms: int = 999,
                'brute' | 'tiled' | 'matmul' | 'pallas_{brute,permblock,matmul}'.
     sw_fn:     bypass the registry with a custom batch callable (e.g. a
                Pallas kernel wrapper from repro.kernels.permanova_sw.ops).
+    covariates: continuous columns to adjust for — dict name->(n,), list
+               of (name, values), or an (n, c) array. Model terms are
+               sequential (adonis2): covariates first, the grouping factor
+               LAST, so the headline F is the covariate-adjusted factor;
+               per-term statistics land in `result.terms`.
+    strata:    (n,) int block labels — permutations are restricted WITHIN
+               blocks (vegan's strata=). Works with or without covariates.
+    weights:   (n,) non-negative sample weights (weighted PERMANOVA; the
+               design compiles them into the projection basis).
     memory_budget_bytes / chunk: cap the live label tensor; larger sweeps
                run through the engine's streaming permutation scheduler.
+
+    With none of covariates/strata/weights (and a plain label array), this
+    is exactly the pre-design single-factor path — same programs, same
+    bits.
     """
     from repro import engine  # deferred: engine imports this module
+    from repro.core import design as _design
+    if isinstance(grouping, _design.Design):
+        if covariates is not None or strata is not None \
+                or weights is not None:
+            raise ValueError("pass covariates/strata/weights either to "
+                             "permanova() or inside the Design, not both")
+        # routed below as-is; engine.run and pipeline() accept Designs
+    elif covariates is not None or strata is not None or weights is not None:
+        grouping = _design.build(
+            grouping=None if grouping is None else
+            jnp.asarray(grouping, jnp.int32),
+            covariates=covariates, strata=strata, weights=weights,
+            n_groups=n_groups)
+    elif grouping is None:
+        raise ValueError("permanova needs grouping labels, covariates, or "
+                         "a Design")
     arr = jnp.asarray(dm)
     is_features = metric is not None or (
         arr.ndim == 2 and arr.shape[0] != arr.shape[1])

@@ -73,6 +73,83 @@ def permutation_batch_host(key: jax.Array, grouping, n_perms: int):
 
 
 # ---------------------------------------------------------------------------
+# Strata-restricted permutations (design subsystem).
+#
+# Restricted permutation tests (vegan's `strata=`) shuffle samples only
+# WITHIN blocks — sites, batches, repeated-measure subjects — so the null
+# respects the blocking structure. The generators below ride the exact
+# global-index key-folding contract of the free generators above: any shard
+# holding any index range reproduces the same draws as a single host.
+# ---------------------------------------------------------------------------
+
+def strata_permutation(key: jax.Array, strata: Array) -> Array:
+    """One uniform permutation restricted within strata blocks.
+
+    Returns an INDEX permutation perm (n,) int32 with strata[perm[i]] ==
+    strata[i] for every i, uniformly distributed over all such
+    permutations. Construction: two stable argsorts group positions by
+    stratum — once in a uniformly-random within-block order, once in the
+    original order — and matching them up block-by-block yields a uniform
+    within-block bijection (no float-keyed lexsort, so no tie hazards).
+    A constant strata vector gives an unrestricted uniform permutation
+    (a distinct stream from jax.random.permutation's — documented where
+    the dense design path draws from it)."""
+    n = strata.shape[0]
+    u = jax.random.uniform(key, (n,))
+    a = jnp.argsort(u)                              # random position order
+    a = a[jnp.argsort(strata[a], stable=True)]      # by stratum, random within
+    b = jnp.argsort(strata, stable=True)            # by stratum, original order
+    return jnp.zeros((n,), jnp.int32).at[b].set(a.astype(jnp.int32))
+
+
+def strata_permutation_batch_dyn(key: jax.Array, strata: Array, lo: Array,
+                                 chunk: int, *,
+                                 identity_first: bool = True) -> Array:
+    """(chunk, n) strata-restricted INDEX permutations for global
+    permutation indices [lo, lo+chunk). Key folding is by GLOBAL index
+    (`lo` may be traced), so sharded sweeps are bit-identical to
+    single-host ones. Index 0 is the identity when identity_first."""
+    n = strata.shape[0]
+    idx = lo + jnp.arange(chunk)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    perms = jax.vmap(lambda k: strata_permutation(k, strata))(keys)
+    if identity_first:
+        eye = jnp.arange(n, dtype=jnp.int32)
+        perms = jnp.where((idx == 0)[:, None], eye[None, :], perms)
+    return perms
+
+
+def strata_permutation_batch(key: jax.Array, strata: Array, lo: int,
+                             hi: int, *, identity_first: bool = True) -> Array:
+    """Strata-restricted index permutations for indices [lo, hi)."""
+    return strata_permutation_batch_dyn(key, strata, lo, hi - lo,
+                                        identity_first=identity_first)
+
+
+def strata_label_batch_dyn(key: jax.Array, grouping: Array, strata: Array,
+                           lo: Array, chunk: int, *,
+                           identity_first: bool = True) -> Array:
+    """Permuted LABEL vectors under strata restriction — the labels-mode
+    generator for `strata=` designs: grouping composed with the index
+    permutations, so every label-based s_W impl consumes it unchanged."""
+    perms = strata_permutation_batch_dyn(key, strata, lo, chunk,
+                                         identity_first=identity_first)
+    return grouping[perms]
+
+
+def masked_strata(strata: Array, n_valid: Array) -> Array:
+    """Move the pad suffix [n_valid, n) into its own sentinel stratum so
+    padded ragged studies permute pads only among themselves (pad rows
+    carry zero design rows, so they contribute exactly nothing). The
+    sentinel is max(strata)+1 — strata labels are arbitrary ints, so a
+    fixed sentinel could collide with a real block and leak valid samples
+    onto zero-basis pad slots. A None-equivalent free permutation is the
+    all-zeros strata vector."""
+    n = strata.shape[0]
+    return jnp.where(jnp.arange(n) < n_valid, strata, jnp.max(strata) + 1)
+
+
+# ---------------------------------------------------------------------------
 # Masked permutations: ragged studies padded to a common length.
 # ---------------------------------------------------------------------------
 

@@ -17,7 +17,9 @@ launch CLI, benchmarks) route through this package.
 """
 
 from repro.engine import api, planner, registry, scheduler  # noqa: F401
-from repro.engine.api import PermanovaManyResult, permanova_many, run  # noqa: F401
+from repro.engine.api import (PermanovaManyResult, design_result,  # noqa: F401
+                              permanova_many, run, run_design)
 from repro.engine.planner import Plan, autotune, chunk_for_budget, plan  # noqa: F401
-from repro.engine.registry import SwImpl, get, get_sharded, names  # noqa: F401
+from repro.engine.registry import (SwImpl, bound_cols, get,  # noqa: F401
+                                   get_sharded, names, resolve_cols)
 from repro.engine.scheduler import StreamStats, sw_batch, sw_streaming  # noqa: F401

@@ -90,17 +90,25 @@ def _pick_impl(backend: str, n: int,
 
 def chunk_for_budget(n: int, n_perms: int, impl: registry.SwImpl,
                      n_groups: int,
-                     budget_bytes: Optional[float] = None) -> int:
+                     budget_bytes: Optional[float] = None,
+                     n_cols: Optional[int] = None) -> int:
     """Largest permutation chunk whose LABEL tensor fits the budget.
 
     The budget governs the streamed state — (chunk, n) int32 labels plus the
     per-perm output — which is the only term that scales with n_perms. The
     resident mat2 and the impl's per-block working set are paid regardless
     of chunking and are deliberately not charged against it (n_groups and
-    impl are kept in the signature for footprint-aware callers/tests)."""
+    impl are kept in the signature for footprint-aware callers/tests).
+
+    Dense designs (n_cols = K basis columns) stream a bigger state: the
+    (chunk, n) int32 index permutations PLUS the gathered (chunk, n, K)
+    f32 basis factor — the workset is sized for K design columns instead
+    of G groups, so the chunk shrinks accordingly."""
     del n_groups  # labels dominate the streamed state; see docstring
     budget = DEFAULT_STREAM_BUDGET_BYTES if budget_bytes is None else budget_bytes
     per_perm = 4.0 * n + 8.0
+    if n_cols is not None:
+        per_perm += 4.0 * n * n_cols + 4.0 * n_cols
     if MIN_CHUNK * per_perm > budget:
         warnings.warn(
             f"label budget {budget/2**20:.2f}MiB cannot hold even the "
@@ -118,28 +126,55 @@ def plan(n: int, n_perms: int, n_groups: int, *,
          memory_budget_bytes: Optional[float] = None,
          chunk: Optional[int] = None,
          impl: Optional[str] = None,
-         tuning: Optional[Dict[str, int]] = None) -> Plan:
+         tuning: Optional[Dict[str, int]] = None,
+         n_cols: Optional[int] = None) -> Plan:
     """Resolve impl + tuning + streaming chunk for one problem.
 
     n_perms counts TOTAL permutation slots (i.e. n_perms_requested + 1 for
     the observed labels at index 0). `impl`/`chunk` pin those choices and
     let the planner fill in the rest.
+
+    n_cols: set to the design-basis width K for DENSE designs
+    (covariates/weights/multi-factor): impl choice is restricted to the
+    matmul-family forms that carry a dense companion (the contraction is
+    matmul-native; label-equality dataflows like `tiled` do not apply),
+    and the streaming chunk is sized for the (chunk, n, K) basis factor.
     """
     backend = backend or default_backend()
     if impl is None:
-        name, reason = _pick_impl(backend, n, n_groups)
+        if n_cols is not None:
+            name, reason = _pick_impl_design(backend)
+        else:
+            name, reason = _pick_impl(backend, n, n_groups)
     else:
         name, reason = impl, "caller-pinned impl"
+    if n_cols is not None:
+        resolved_name, _ = registry.resolve_cols(name)
+        if resolved_name != name:
+            reason += (f"; {name!r} is label-only, dense design runs its "
+                       f"{resolved_name!r} companion")
+            name = resolved_name
     spec = registry.get(name)
     resolved = dict(spec.tuning)
     if tuning:
         resolved.update({k: v for k, v in tuning.items() if k in resolved})
     if chunk is None:
         chunk = chunk_for_budget(n, n_perms, spec, n_groups,
-                                 memory_budget_bytes)
+                                 memory_budget_bytes, n_cols=n_cols)
     chunk = max(1, min(int(chunk), n_perms))
     return Plan(impl=name, backend=backend, tuning=resolved, chunk=chunk,
                 streaming=chunk < n_perms, reason=reason)
+
+
+def _pick_impl_design(backend: str) -> Tuple[str, str]:
+    """Impl for DENSE designs: the per-column contraction is a tiled
+    matmul against mat2 on every backend except the GPU, where the
+    re-streaming brute dataflow mirrors the paper's Fig. 1 result."""
+    if backend == "gpu":
+        return "brute", ("dense design, GPU: per-perm re-stream "
+                         "(Fig. 1 brute analogue)")
+    return "matmul", ("dense design: per-column matmul contraction "
+                      "(hat-matrix blocks on the MXU/BLAS path)")
 
 
 # ---------------------------------------------------------------------------

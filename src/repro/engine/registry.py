@@ -57,6 +57,16 @@ class SwImpl:
     sharded: Optional[Callable] = None
     # row-sharded companion with signature
     # (mat2_rows, row_offset, groupings, inv_group_sizes, **tuning) -> (P,)
+    cols: Optional[Callable] = None
+    # design-basis companion for DENSE designs (core.design): signature
+    # (mat2, vperms (P, n, K)) -> (P, K) per-column quadratic forms.
+    # Label-mode designs (single categorical factor, with or without
+    # strata=) need no companion — every impl consumes permuted labels
+    # unchanged. Impls whose dataflow is label-equality-specific (tiled,
+    # the Pallas label kernels) leave this None; the planner falls back
+    # to a matmul-family companion for dense designs. (The row-sharded
+    # dense partial lives in fstat.sw_cols_rows_partial for shard_map
+    # callers; matrix-resident dense sharding is a ROADMAP item.)
 
     def bound(self, **overrides) -> Callable:
         """Resolve tuning (defaults <- overrides) and build the callable.
@@ -118,6 +128,32 @@ def get_sharded(name: str) -> Callable:
     return get(fallback).sharded
 
 
+def resolve_cols(name: str) -> Tuple[str, Callable]:
+    """(impl name, dense-design companion) for `name`, falling back to the
+    jnp matmul form when the exact impl is label-only (tiled and the
+    Pallas label kernels route dense designs there — the contraction is
+    the same tiled matmul against mat2 either way)."""
+    impl = get(name)
+    if impl.cols is not None:
+        return name, impl.cols
+    return "matmul", get("matmul").cols
+
+
+def bound_cols(name: str, **overrides) -> Callable:
+    """Dense-design companion for `name` with tuning bound (memoized, so
+    the scheduler's jitted step sees a stable callable — same contract as
+    SwImpl.bound)."""
+    resolved, fn = resolve_cols(name)
+    impl = get(resolved)
+    kw = {k: v for k, v in overrides.items() if k in impl.tuning}
+    cache_key = ("cols", resolved, tuple(sorted(kw.items())))
+    bound = _BOUND_CACHE.get(cache_key)
+    if bound is None:
+        bound = _BOUND_CACHE[cache_key] = (
+            functools.partial(fn, **kw) if kw else fn)
+    return bound
+
+
 # ---------------------------------------------------------------------------
 # Registration.
 # ---------------------------------------------------------------------------
@@ -141,6 +177,7 @@ register(SwImpl(
     description="paper Algorithm 3 dataflow: every perm re-streams mat2 "
                 "(the MI300A GPU winner)",
     sharded=fstat.sw_rows_partial,
+    cols=fstat.sw_cols_brute,
 ))
 register(SwImpl(
     name="tiled", kind="jnp", make=_make_jnp(fstat.sw_tiled),
@@ -154,6 +191,7 @@ register(SwImpl(
     description="beyond-paper one-hot matmul reformulation (MXU/BLAS-native; "
                 "amortizes each mat2 byte over perm_block*G columns)",
     sharded=fstat.sw_matmul_rows_partial,
+    cols=fstat.sw_cols_matmul,
 ))
 register(SwImpl(
     name="pallas_brute", kind="pallas", make=_make_pallas("brute"),

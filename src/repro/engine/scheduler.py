@@ -41,15 +41,42 @@ def _step(mat2, grouping, inv_gs, key, lo, *, fn, chunk, identity_first):
     return fn(mat2, gperms, inv_gs)
 
 
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_strata(mat2, grouping, strata, inv_gs, key, lo, *, fn, chunk,
+                 identity_first):
+    """The strata-restricted cousin of _step: labels composed with
+    within-block index permutations; every label-based impl consumes them
+    unchanged. A separate jitted program so the free-permutation path
+    stays byte-identical to the pre-design repo."""
+    gperms = permutations.strata_label_batch_dyn(
+        key, grouping, strata, lo, chunk, identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_cols(mat2, basis, strata, key, lo, *, fn, chunk, identity_first):
+    """Dense-design step: index permutations (strata-restricted; a
+    constant strata vector is the free case) gather basis rows, and the
+    per-column contraction returns (chunk, K)."""
+    from repro.core import fstat
+    perms = permutations.strata_permutation_batch_dyn(
+        key, strata, lo, chunk, identity_first=identity_first)
+    return fn(mat2, fstat.basis_perm_factors(basis, perms))
+
+
 def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
                  n_total: int, fn: Callable, *, chunk: int,
                  identity_first: bool = True,
+                 strata: Optional[Array] = None,
                  progress: Optional[Callable[[int, int], None]] = None):
     """s_W for global permutation indices [0, n_total) in fixed-size chunks.
 
     fn: batch impl fn(mat2, groupings, inv_gs) -> (P,) (a registry impl
         bound via SwImpl.bound(), or any compatible callable; must be
         jit-traceable).
+    strata: optional (n,) int32 block labels — permutations restricted
+        within blocks (core.permutations.strata_permutation_batch); None
+        is the pre-design free-permutation program, unchanged.
     Returns (s_w float32 ndarray of shape (n_total,), StreamStats).
     Chunk results beyond n_total (last ragged chunk) are computed and
     discarded — identical labels to any other sweep of the same key, since
@@ -60,8 +87,13 @@ def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
     out = np.empty((n_total,), np.float32)
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        s = _step(mat2, grouping, inv_gs, key, jnp.int32(lo),
-                  fn=fn, chunk=chunk, identity_first=identity_first)
+        if strata is None:
+            s = _step(mat2, grouping, inv_gs, key, jnp.int32(lo),
+                      fn=fn, chunk=chunk, identity_first=identity_first)
+        else:
+            s = _step_strata(mat2, grouping, strata, inv_gs, key,
+                             jnp.int32(lo), fn=fn, chunk=chunk,
+                             identity_first=identity_first)
         hi = min(lo + chunk, n_total)
         out[lo:hi] = np.asarray(s[: hi - lo])
         n_chunks += 1
@@ -73,12 +105,53 @@ def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
 
 
 def sw_batch(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
-             n_total: int, fn: Callable, *, identity_first: bool = True):
+             n_total: int, fn: Callable, *, identity_first: bool = True,
+             strata: Optional[Array] = None):
     """One-shot path for small sweeps: materialize all labels, single
     dispatch. Same key semantics as the streaming path."""
-    gperms = permutations.permutation_batch(
-        key, grouping, 0, n_total, identity_first=identity_first)
+    if strata is None:
+        gperms = permutations.permutation_batch(
+            key, grouping, 0, n_total, identity_first=identity_first)
+    else:
+        gperms = permutations.strata_label_batch_dyn(
+            key, grouping, strata, jnp.int32(0), n_total,
+            identity_first=identity_first)
     s_w = fn(mat2, gperms, inv_gs)
     stats = StreamStats(n_total=n_total, chunk=n_total, n_chunks=1,
                         peak_label_bytes=4 * n_total * int(mat2.shape[0]))
     return s_w, stats
+
+
+# ---------------------------------------------------------------------------
+# Dense-design sweeps: per-column contraction of permuted basis factors.
+# ---------------------------------------------------------------------------
+
+def sw_cols_streaming(mat2: Array, basis: Array, strata: Array,
+                      key: jax.Array, n_total: int, fn: Callable, *,
+                      chunk: int, identity_first: bool = True,
+                      progress: Optional[Callable[[int, int], None]] = None):
+    """Per-column statistic (n_total, K) in fixed-memory chunks.
+
+    The streamed state is (chunk, n) int32 index permutations plus the
+    gathered (chunk, n, K) basis factor (the planner sizes the chunk for
+    K columns); results accumulate host-side exactly like sw_streaming.
+    `strata` is always an array here — pass zeros(n) for free
+    permutations (the dense-mode draws come from the strata generator, a
+    distinct deterministic stream from the label path's).
+    """
+    n = int(mat2.shape[0])
+    k = int(basis.shape[1])
+    chunk = int(max(1, min(chunk, n_total)))
+    out = np.empty((n_total, k), np.float32)
+    n_chunks = 0
+    for lo in range(0, n_total, chunk):
+        s = _step_cols(mat2, basis, strata, key, jnp.int32(lo),
+                       fn=fn, chunk=chunk, identity_first=identity_first)
+        hi = min(lo + chunk, n_total)
+        out[lo:hi] = np.asarray(s[: hi - lo])
+        n_chunks += 1
+        if progress is not None:
+            progress(hi, n_total)
+    stats = StreamStats(n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+                        peak_label_bytes=4 * chunk * n * (k + 1))
+    return out, stats

@@ -50,25 +50,32 @@ FUSED_METRICS = ("euclidean", "braycurtis", "jaccard")
 
 
 def _accumulate(metric, xr, xc, a_ref, b_ref):
-    """One feature block's contribution to the metric's running sums."""
+    """One feature block's contribution to the metric's running sums.
+
+    xr/xc may arrive as bf16 slabs (the feat_dtype option halves HBM
+    feature traffic): the MXU dot_generals consume them directly with
+    fp32 accumulation, while elementwise paths cast up first — the
+    accumulators are always fp32."""
+    xr32 = xr if xr.dtype == jnp.float32 else xr.astype(jnp.float32)
+    xc32 = xc if xc.dtype == jnp.float32 else xc.astype(jnp.float32)
     if metric == "euclidean":
-        sq_r = jnp.sum(xr * xr, axis=-1)[:, None]
-        sq_c = jnp.sum(xc * xc, axis=-1)[None, :]
+        sq_r = jnp.sum(xr32 * xr32, axis=-1)[:, None]
+        sq_c = jnp.sum(xc32 * xc32, axis=-1)[None, :]
         gram = jax.lax.dot_general(                # MXU: (TR,FB)x(TC,FB)^T
             xr, xc, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
         a_ref[...] += sq_r + sq_c - 2.0 * gram     # accumulator IS D²
     elif metric == "braycurtis":
-        a_ref[...] += jnp.sum(jnp.abs(xr[:, None, :] - xc[None, :, :]),
+        a_ref[...] += jnp.sum(jnp.abs(xr32[:, None, :] - xc32[None, :, :]),
                               axis=-1)
-        b_ref[...] += jnp.sum(xr[:, None, :] + xc[None, :, :], axis=-1)
+        b_ref[...] += jnp.sum(xr32[:, None, :] + xc32[None, :, :], axis=-1)
     elif metric == "jaccard":
         inter = jax.lax.dot_general(               # |A ∩ B| on the MXU
             xr, xc, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
         a_ref[...] += inter
-        b_ref[...] += (jnp.sum(xr, axis=-1)[:, None]
-                       + jnp.sum(xc, axis=-1)[None, :])
+        b_ref[...] += (jnp.sum(xr32, axis=-1)[:, None]
+                       + jnp.sum(xc32, axis=-1)[None, :])
     else:  # pragma: no cover - ops validates
         raise ValueError(metric)
 
@@ -212,3 +219,132 @@ def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
         interpret=interpret,
     )(row_offset, xr, xc, g_rows, g_cols, sqrt_w)
     return out_sw.reshape(-1), out_rs[0]
+
+
+# ---------------------------------------------------------------------------
+# Dense-design variant: the perm phase contracts PERMUTED BASIS blocks
+# (hat-matrix factor columns, core.design) instead of building one-hot
+# factors from labels. Feature phase, D² scratch residency and Gower row
+# sums are identical; the output keeps the per-column axis so the host can
+# slice per-term partial statistics.
+# ---------------------------------------------------------------------------
+
+def _fused_sw_cols_body(off_ref, xr_ref, xc_ref, vr_ref, vc_ref,
+                        o_sw_ref, o_rs_ref, a_ref, b_ref, d2_ref, sw_ref, *,
+                        metric, nk, npb, nti, ntj, tile_r, tile_c, n_valid,
+                        nr_valid, k_cols):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (t == 0))
+    def _init_sw():
+        sw_ref[...] = jnp.zeros_like(sw_ref)
+
+    @pl.when(t == 0)
+    def _init_acc():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when(t < nk)
+    def _feature_phase():
+        _accumulate(metric, xr_ref[...], xc_ref[...], a_ref, b_ref)
+
+    @pl.when(t == nk - 1)
+    def _finalize():
+        row_off = off_ref[0, 0]
+        rows_l = i * tile_r + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_r, tile_c), 0)
+        rows_g = row_off + rows_l
+        cols_g = j * tile_c + jax.lax.broadcasted_iota(
+            jnp.int32, (tile_r, tile_c), 1)
+        valid = ((rows_l < nr_valid) & (rows_g < n_valid)
+                 & (cols_g < n_valid) & (rows_g != cols_g))
+        d2 = jnp.where(valid, _finalize_d2(metric, a_ref[...], b_ref[...]),
+                       0.0)
+        d2_ref[...] = d2
+        rs = jnp.sum(d2, axis=1, keepdims=True).T       # (1, TR)
+
+        @pl.when(j == 0)
+        def _rs_init():
+            o_rs_ref[...] = rs
+
+        @pl.when(j > 0)
+        def _rs_acc():
+            o_rs_ref[...] += rs
+
+    @pl.when(t >= nk)
+    def _perm_phase():
+        pb = t - nk
+        v_r = vr_ref[...]                               # (PB, TR, K)
+        v_c = vc_ref[...]                               # (PB, TC, K)
+        # MXU contraction: (PB,TC,K) x (TR,TC) -> (PB, K, TR)
+        y = jax.lax.dot_general(
+            v_c, d2_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s = jnp.sum(y * jnp.transpose(v_r, (0, 2, 1)), axis=2)   # (PB, K)
+        sw_ref[pb, :, :] += 0.5 * s
+
+    @pl.when((i == nti - 1) & (j == ntj - 1) & (t == nk + npb - 1))
+    def _flush():
+        o_sw_ref[...] = sw_ref[...]
+
+
+def fused_sw_cols_pallas(row_offset, xr, xc, v_rows, v_cols, *,
+                         metric, n_valid, nr_valid, tile_r=128, tile_c=128,
+                         feat_block=128, perm_block=16, interpret=True):
+    """Launch the dense-design megakernel over pre-padded operands.
+
+    v_rows: (p_pad, nr_pad, K) f32 permuted basis rows at the slab's rows.
+    v_cols: (p_pad, nc_pad, K) f32 permuted basis over all samples.
+    Returns (s_cols (p_pad, K) f32 per-column partials, row_sums
+    (nr_pad,) f32) — pad entries zero (zero basis rows/cols contribute
+    exactly nothing, which is what keeps ragged studies bit-exact)."""
+    if metric not in FUSED_METRICS:
+        raise ValueError(f"unknown fused metric {metric!r}; "
+                         f"one of {FUSED_METRICS}")
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    p_pad = v_cols.shape[0]
+    k_cols = v_cols.shape[-1]
+    nti, ntj = nr // tile_r, nc // tile_c
+    nk, npb = d // feat_block, p_pad // perm_block
+    kernel = functools.partial(
+        _fused_sw_cols_body, metric=metric, nk=nk, npb=npb, nti=nti,
+        ntj=ntj, tile_r=tile_r, tile_c=tile_c, n_valid=n_valid,
+        nr_valid=nr_valid, k_cols=k_cols)
+    out_sw, out_rs = pl.pallas_call(
+        kernel,
+        grid=(nti, ntj, nk + npb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tile_r, feat_block),
+                         lambda i, j, t: (i, jnp.minimum(t, nk - 1))),
+            pl.BlockSpec((tile_c, feat_block),
+                         lambda i, j, t: (j, jnp.minimum(t, nk - 1))),
+            pl.BlockSpec((perm_block, tile_r, k_cols),
+                         lambda i, j, t: (jnp.clip(t - nk, 0, npb - 1),
+                                          i, 0)),
+            pl.BlockSpec((perm_block, tile_c, k_cols),
+                         lambda i, j, t: (jnp.clip(t - nk, 0, npb - 1),
+                                          j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((npb, perm_block, k_cols),
+                         lambda i, j, t: (0, 0, 0)),
+            pl.BlockSpec((1, tile_r), lambda i, j, t: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npb, perm_block, k_cols), jnp.float32),
+            jax.ShapeDtypeStruct((1, nr), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # metric accum a
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # metric accum b
+            pltpu.VMEM((tile_r, tile_c), jnp.float32),   # masked D² tile
+            pltpu.VMEM((npb, perm_block, k_cols), jnp.float32),  # s_cols
+        ],
+        interpret=interpret,
+    )(row_offset, xr, xc, v_rows, v_cols)
+    return out_sw.reshape(-1, k_cols), out_rs[0]

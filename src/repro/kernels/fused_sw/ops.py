@@ -35,10 +35,10 @@ def _pick(v: int, cap: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "n_valid", "tile_r", "tile_c", "feat_block", "perm_block",
-    "interpret"))
+    "feat_bf16", "interpret"))
 def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
                   metric="braycurtis", n_valid=None, tile_r=128, tile_c=128,
-                  feat_block=128, perm_block=16,
+                  feat_block=128, perm_block=16, feat_bf16: int = 0,
                   interpret: bool | None = None):
     """Fused s_W partial for one (row slab × permutation chunk) cell.
 
@@ -49,6 +49,9 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
     inv_gs:   (G,) f32 inverse group sizes.
     row_offset: scalar global index of x_rows[0] (python int or traced).
     n_valid:  global sample count n (pad masking); defaults to x.shape[0].
+    feat_bf16: 1 = feed the kernel bf16 feature slabs (halves HBM feature
+              traffic; fp32 accumulation throughout — expect ~1e-2 rel
+              drift on the finished distances, the planner/autotune knob).
     Returns (s_W (P,) f32, row_sums (nr,) f32). Summing the partials over
     disjoint row slabs reconstructs the full-statistic / full row sums.
     """
@@ -68,8 +71,9 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
     c_pad = (-n) % tile_c
     d_pad = (-d) % feat_block
     p_pad = (-p) % perm_block
-    xr = jnp.pad(x_rows.astype(jnp.float32), ((0, r_pad), (0, d_pad)))
-    xc = jnp.pad(x.astype(jnp.float32), ((0, c_pad), (0, d_pad)))
+    feat_dtype = jnp.bfloat16 if feat_bf16 else jnp.float32
+    xr = jnp.pad(x_rows.astype(feat_dtype), ((0, r_pad), (0, d_pad)))
+    xc = jnp.pad(x.astype(feat_dtype), ((0, c_pad), (0, d_pad)))
     # pad labels with 0s (masked D² zeroes those tiles' contributions) and
     # perms edge-mode (excess results sliced off)
     gr = jnp.pad(g_rows, ((0, 0), (0, r_pad)))
@@ -84,3 +88,58 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
         nr_valid=nr, tile_r=tile_r, tile_c=tile_c, feat_block=feat_block,
         perm_block=perm_block, interpret=interpret)
     return sw[:p], rs[:nr]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "n_valid", "tile_r", "tile_c", "feat_block", "perm_block",
+    "feat_bf16", "interpret"))
+def fused_sw_rows_cols(x_rows, x, v_rows, v_cols, row_offset, *,
+                       metric="braycurtis", n_valid=None, tile_r=128,
+                       tile_c=128, feat_block=128, perm_block=16,
+                       feat_bf16: int = 0,
+                       interpret: bool | None = None):
+    """Dense-design fused partial: per-COLUMN quadratic forms for one
+    (row slab × permutation chunk) cell (core.design hat-matrix blocks
+    replacing the one-hot labels; the megakernel's MXU contraction
+    consumes permuted basis blocks directly).
+
+    v_rows: (P, nr, K) f32 permuted basis rows at the slab's GLOBAL rows.
+    v_cols: (P, n, K) f32 permuted basis over all samples.
+    Returns (s_cols (P, K) f32, row_sums (nr,) f32); summing partials
+    over disjoint row slabs reconstructs the global per-column statistic.
+    K is padded to a multiple of 8 lanes internally — zero basis columns
+    contribute exactly zero and are sliced off.
+    """
+    metric = KERNEL_METRIC.get(metric, metric)
+    if interpret is None:
+        interpret = not _on_tpu()
+    nr, d = x_rows.shape
+    n = x.shape[0]
+    p, _, k = v_cols.shape
+    if n_valid is None:
+        n_valid = n
+    tile_r = _pick(nr, tile_r)
+    tile_c = _pick(n, tile_c)
+    feat_block = _pick(d, feat_block)
+    perm_block = min(perm_block, p)
+    r_pad = (-nr) % tile_r
+    c_pad = (-n) % tile_c
+    d_pad = (-d) % feat_block
+    p_pad = (-p) % perm_block
+    k_pad = (-k) % 8
+    feat_dtype = jnp.bfloat16 if feat_bf16 else jnp.float32
+    xr = jnp.pad(x_rows.astype(feat_dtype), ((0, r_pad), (0, d_pad)))
+    xc = jnp.pad(x.astype(feat_dtype), ((0, c_pad), (0, d_pad)))
+    vr = jnp.pad(v_rows.astype(jnp.float32),
+                 ((0, 0), (0, r_pad), (0, k_pad)))
+    vc = jnp.pad(v_cols.astype(jnp.float32),
+                 ((0, 0), (0, c_pad), (0, k_pad)))
+    if p_pad:
+        vr = jnp.pad(vr, ((0, p_pad), (0, 0), (0, 0)), mode="edge")
+        vc = jnp.pad(vc, ((0, p_pad), (0, 0), (0, 0)), mode="edge")
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+    sc, rs = _k.fused_sw_cols_pallas(
+        off, xr, xc, vr, vc, metric=metric, n_valid=int(n_valid),
+        nr_valid=nr, tile_r=tile_r, tile_c=tile_c, feat_block=feat_block,
+        perm_block=perm_block, interpret=interpret)
+    return sc[:p, :k], rs[:nr]

@@ -3,6 +3,15 @@
 Handles the padding contract, variant dispatch, and interpret-mode selection
 (interpret=True everywhere except a real TPU backend). These wrappers are the
 `sw_fn` plug-ins for core.permanova.permanova(...).
+
+Design subsystem note: these kernels build the one-hot factor from int
+labels IN-KERNEL, so they serve every LABELS-mode design — including
+strata-restricted permutations, whose labels are generated outside and
+arrive through the same (n_perms, n) operand. DENSE designs (covariates /
+weights / multi-factor, core.design) need the per-column basis contraction
+instead; the engine registry marks these impls label-only (`cols=None`)
+and the planner routes dense designs to the matmul-family companions (the
+fused_sw megakernel has a native dense variant, `fused_sw_cols_pallas`).
 """
 
 from __future__ import annotations

@@ -91,6 +91,22 @@ def main():
                          "same pipeline dataflow — the stream/fused "
                          "bridges never materialize the Gower matrix; "
                          "implies the pipeline path")
+    ap.add_argument("--covariates", default=None, metavar="NAMES",
+                    help="comma-separated covariate names (synthetic "
+                         "standard-normal columns, e.g. 'age,depth') — "
+                         "runs the partial/covariate PERMANOVA design "
+                         "path: sequential adonis2-style terms, the "
+                         "grouping factor last (covariate-adjusted); "
+                         "prints a per-term F/R²/p table; implies the "
+                         "pipeline path")
+    ap.add_argument("--strata", default=None, metavar="NAME[:K]",
+                    help="restrict permutations within K synthetic "
+                         "blocks (default K=4), e.g. 'site' or 'site:6' "
+                         "— vegan's strata=; implies the pipeline path")
+    ap.add_argument("--weights", action="store_true",
+                    help="weighted PERMANOVA: synthetic positive sample "
+                         "weights folded into the design projection; "
+                         "implies the pipeline path")
     ap.add_argument("--kernel", action="store_true",
                     help="legacy alias: maps brute/matmul to the Pallas "
                          "kernel variant (interpret mode off TPU)")
@@ -110,9 +126,24 @@ def main():
                                   effect_size=args.effect, seed=args.seed)
     budget = None if args.budget_mb is None else args.budget_mb * 2**20
 
+    covariates = strata = weights = None
+    design_path = (args.covariates is not None or args.strata is not None
+                   or args.weights)
+    if design_path:
+        from repro.data.microbiome import synthetic_design
+        cov_names = (tuple(s for s in args.covariates.split(",") if s)
+                     if args.covariates else ())
+        n_strata = 0
+        if args.strata is not None:
+            name, _, kk = args.strata.partition(":")
+            n_strata = int(kk) if kk else 4
+        covariates, strata, weights = synthetic_design(
+            args.samples, covariate_names=cov_names, n_strata=n_strata,
+            weighted=args.weights, seed=args.seed)
+
     if args.from_features or args.materialize != "auto" \
             or args.dist_impl != "auto" or args.shard_rows is not None \
-            or args.pcoa is not None:
+            or args.pcoa is not None or design_path:
         if args.distributed:
             ap.error("--distributed is not supported with the pipeline "
                      "path (--from-features/--materialize/--dist-impl); "
@@ -133,6 +164,7 @@ def main():
             materialize=args.materialize, chunk=args.chunk,
             fused_impl=args.fused_impl, mesh=mesh,
             ordination=args.pcoa,
+            covariates=covariates, strata=strata, weights=weights,
             memory_budget_bytes=budget, autotune=args.autotune)
         jax.block_until_ready(res.f_perms)
         t_pa = time.time() - t0
@@ -143,6 +175,13 @@ def main():
               f"({res.n_perms / t_pa:.1f} perms/s)")
         print(f"[permanova] F={float(res.f_stat):.6g} "
               f"p={float(res.p_value):.6g} R2={float(res.r2):.4g}")
+        if res.terms is not None:
+            print(f"[permanova] {'term':<12} {'df':>3} {'SS':>10} "
+                  f"{'F':>9} {'R2':>8} {'p':>8}")
+            for t in res.terms:
+                print(f"[permanova] {t.name:<12} {t.df:>3} "
+                      f"{float(t.ss):>10.4g} {float(t.f_stat):>9.4g} "
+                      f"{float(t.r2):>8.4g} {float(t.p_value):>8.4g}")
         if res.ordination is not None:
             o = res.ordination
             expl = ", ".join(f"{float(v):.3f}" for v in o.explained)

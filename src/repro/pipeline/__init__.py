@@ -38,6 +38,7 @@ from repro.pipeline.registry import (DistanceImpl, FusedImpl,  # noqa: F401
 from repro.pipeline.streaming import (FusedKernelStats,  # noqa: F401
                                       FusedStats, GowerStats,
                                       build_mat2_streaming, fused_kernel_sw,
-                                      fused_sw, fused_sw_onepass,
+                                      fused_kernel_sw_design, fused_sw,
+                                      fused_sw_design, fused_sw_onepass,
                                       fused_sw_sharded, gower_center,
                                       mat2_row_blocks)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import engine
+from repro.core import design as _design
 from repro.core import permutations
 from repro.core.permanova import (PermanovaResult, f_from_sw,
                                   p_value_from_null)
@@ -49,6 +50,7 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
              backend: Optional[str] = None,
              mesh=None,
              ordination: Optional[int] = None,
+             covariates=None, strata=None, weights=None,
              autotune: bool = False) -> PermanovaResult:
     """Full features→p-value PERMANOVA under one joint plan.
 
@@ -73,6 +75,13 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                  (n, n) array), and the fused bridges re-stream
                  squared-distance slabs from the features (nothing
                  (n, n)-shaped, ever).
+    covariates / strata / weights: design columns (see core.design and
+    core.permanova.permanova) — any of them routes through the design
+    path: same joint stage-1/bridge planning, with the permutation sweep
+    contracting hat-matrix basis blocks (dense designs) or strata-
+    restricted labels, and per-term statistics in `result.terms`.
+    `grouping` may also be a prebuilt core.design.Design.
+
     Remaining knobs mirror engine.run(); budgets split per stage
     (matrix/slab for distances, memory_budget_bytes for s_W labels).
     For a fixed key every materialization produces the same F and p-value
@@ -83,8 +92,35 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     x = jnp.asarray(x)
     if x.ndim != 2:
         raise ValueError(f"features must be (n, d); got shape {x.shape}")
-    grouping = jnp.asarray(grouping, dtype=jnp.int32)
     n, d = x.shape
+    design = None
+    if isinstance(grouping, _design.Design):
+        if covariates is not None or strata is not None \
+                or weights is not None:
+            raise ValueError("pass covariates/strata/weights either to "
+                             "pipeline() or inside the Design, not both")
+        design = grouping
+    elif covariates is not None or strata is not None or weights is not None:
+        design = _design.build(
+            grouping=None if grouping is None else
+            jnp.asarray(grouping, jnp.int32),
+            covariates=covariates, strata=strata, weights=weights,
+            n_groups=n_groups, n=int(n))
+    if design is not None and design.is_plain_labels:
+        grouping, n_groups, design = (design.grouping, design.n_groups,
+                                      None)
+    if design is not None:
+        return _pipeline_design(
+            x, design, metric=metric, n_perms=n_perms, key=key,
+            dist_impl=dist_impl, sw_impl=sw_impl, materialize=materialize,
+            row_block=row_block, chunk=chunk,
+            memory_budget_bytes=memory_budget_bytes,
+            matrix_budget_bytes=matrix_budget_bytes,
+            slab_budget_bytes=slab_budget_bytes, dist_tuning=dist_tuning,
+            sw_tuning=sw_tuning, fused_impl=fused_impl,
+            fused_tuning=fused_tuning, backend=backend, mesh=mesh,
+            ordination=ordination, autotune=autotune)
+    grouping = jnp.asarray(grouping, dtype=jnp.int32)
     if n_groups is None:
         n_groups = int(jnp.max(grouping)) + 1
     n_total = n_perms + 1
@@ -236,6 +272,145 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         plan=plan_str, ordination=ordn)
 
 
+def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
+                     n_perms: int, key, dist_impl: str, sw_impl: str,
+                     materialize: str, row_block, chunk,
+                     memory_budget_bytes, matrix_budget_bytes,
+                     slab_budget_bytes, dist_tuning, sw_tuning,
+                     fused_impl, fused_tuning, backend, mesh, ordination,
+                     autotune: bool) -> PermanovaResult:
+    """features→per-term p-values for a non-plain design.
+
+    Every materialization bridge keeps its residency contract: dense and
+    stream hand the (squared-)distance matrix to engine.run_design;
+    the fused bridges contract basis blocks (dense designs) or
+    strata-restricted labels against D² row slabs exactly as the label
+    sweep does — nothing about the memory-bound dataflow changes, only
+    the right-hand-side operand.
+    """
+    n, d = (int(v) for v in x.shape)
+    if design.n != n:
+        raise ValueError(f"design is for n={design.n}, features are "
+                         f"({n}, {d})")
+    if mesh is not None:
+        raise ValueError(
+            "single-study mesh execution supports plain single-factor "
+            "designs only; shard design studies over the 'data' axis via "
+            "pipeline_many/permanova_many instead")
+    n_total = n_perms + 1
+    dense_mode = design.mode == _design.MODE_DENSE
+    k = design.k_cols if dense_mode else None
+    n_groups_plan = (design.n_groups if design.n_groups is not None
+                     else design.rank)
+
+    def _plan():
+        return _planner.plan_pipeline(
+            n, d, n_total, n_groups_plan, metric=metric, backend=backend,
+            dist_impl=dist_impl, materialize=materialize,
+            row_block=row_block, matrix_budget_bytes=matrix_budget_bytes,
+            slab_budget_bytes=slab_budget_bytes,
+            memory_budget_bytes=memory_budget_bytes,
+            sw_impl=sw_impl, chunk=chunk, sw_tuning=sw_tuning,
+            fused_impl=fused_impl, fused_tuning=fused_tuning,
+            design_cols=k)
+
+    pl = _plan()
+    if autotune and pl.materialize in ("dense", "stream") \
+            and dist_impl == "auto":
+        dist_impl = _planner.autotune_stage1(x, metric, backend=backend)
+        pl = _plan()
+    dspec = _registry.get(pl.dist_impl)
+    prepare, rows_fn, dense_fn = dspec.bound(
+        **{**pl.dist_tuning, **(dist_tuning or {})})
+
+    ordn = None
+    xprep = None
+    if pl.materialize == "dense":
+        dm = dense_fn(x)
+        res = engine.run_design(
+            dm, design, n_perms=n_perms, key=key, impl=sw_impl,
+            memory_budget_bytes=memory_budget_bytes, chunk=chunk,
+            backend=backend, tuning=sw_tuning)
+        if ordination is not None:
+            ordn = _ordination.pcoa_eigh(dm * dm, ordination)
+    elif pl.materialize == "stream":
+        mat2, gower = _streaming.build_mat2_streaming(
+            prepare(x), rows_fn, block=pl.row_block)
+        mat2_dev = jnp.asarray(mat2)
+        del mat2
+        res = engine.run_design(
+            mat2_dev, design, n_perms=n_perms, key=key, impl=sw_impl,
+            memory_budget_bytes=memory_budget_bytes, chunk=chunk,
+            backend=backend, tuning=sw_tuning, squared=True,
+            s_t=gower.s_t)
+        if ordination is not None:
+            ordn = _ordination.pcoa_subspace(mat2_dev, ordination,
+                                             stats=gower)
+    elif pl.materialize == "fused":
+        xprep = prepare(x)
+        if dense_mode:
+            s_cols, _, stats = _streaming.fused_sw_design(
+                xprep, rows_fn, design, key, n_total,
+                row_block=pl.row_block, chunk=pl.sw.chunk)
+            res = engine.design_result(
+                jnp.asarray(s_cols, jnp.float32), design, n_objects=n,
+                n_perms=n_perms, method="pipeline-design[fused]",
+                plan=(f"rows={stats.row_block}x{stats.n_row_blocks} "
+                      f"chunks={stats.n_chunks} cols={k}"))
+        else:
+            inv_gs = permutations.inv_group_sizes(design.grouping,
+                                                  design.n_groups)
+            s_w, s_t, stats = _streaming.fused_sw(
+                xprep, rows_fn, design.grouping, inv_gs, key, n_total,
+                row_block=pl.row_block, chunk=pl.sw.chunk,
+                strata=design.strata)
+            res = engine.api.label_design_result(
+                jnp.asarray(s_w, jnp.float32), jnp.float32(s_t), design,
+                n_objects=n, n_perms=n_perms,
+                method="pipeline[fused+strata]",
+                plan=(f"rows={stats.row_block}x{stats.n_row_blocks} "
+                      f"chunks={stats.n_chunks} strata"))
+    elif pl.materialize == "fused-kernel":
+        fspec = _registry.get_fused(pl.fused_impl)
+        xprep = prepare(x)
+        if dense_mode:
+            s_cols, _, stats = _streaming.fused_kernel_sw_design(
+                xprep, rows_fn, design, key, n_total, impl=fspec.kind,
+                kernel_metric=fspec.kernel_metric, row_block=pl.row_block,
+                chunk=pl.sw.chunk, tuning=pl.fused_tuning)
+            res = engine.design_result(
+                jnp.asarray(s_cols, jnp.float32), design, n_objects=n,
+                n_perms=n_perms,
+                method=f"pipeline-design[fused-kernel:{stats.impl}]",
+                plan=(f"{stats.impl} rows={stats.row_block} "
+                      f"chunks={stats.n_chunks} cols={k}"))
+        else:
+            inv_gs = permutations.inv_group_sizes(design.grouping,
+                                                  design.n_groups)
+            s_w, s_t, stats = _streaming.fused_kernel_sw(
+                xprep, rows_fn, design.grouping, inv_gs, key, n_total,
+                impl=fspec.kind, kernel_metric=fspec.kernel_metric,
+                row_block=pl.row_block, chunk=pl.sw.chunk,
+                tuning=pl.fused_tuning, strata=design.strata)
+            res = engine.api.label_design_result(
+                jnp.asarray(s_w, jnp.float32), jnp.float32(s_t), design,
+                n_objects=n, n_perms=n_perms,
+                method=f"pipeline[fused-kernel:{stats.impl}+strata]",
+                plan=(f"{stats.impl} rows={stats.row_block} "
+                      f"chunks={stats.n_chunks} strata"))
+    else:  # pragma: no cover - planner validates
+        raise ValueError(pl.materialize)
+
+    if ordination is not None and ordn is None:
+        ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
+                                         row_block=pl.row_block)
+    return dataclasses.replace(
+        res,
+        plan=f"{pl.describe_stage1()} | {pl.reason} :: {res.plan} "
+             f"({design.describe()})",
+        ordination=ordn)
+
+
 # ---------------------------------------------------------------------------
 # Batched multi-study pipeline (serving scenario).
 # ---------------------------------------------------------------------------
@@ -251,6 +426,7 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
                   matrix_budget_bytes: Optional[float] = None,
                   backend: Optional[str] = None,
                   mesh=None,
+                  covariates=None, strata=None, weights=None,
                   ordination: Optional[int] = None
                   ) -> engine.PermanovaManyResult:
     """Stacked studies features→p-values through ONE joint plan.
@@ -278,6 +454,13 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
                 the distance stack; the fused-kernel path re-streams
                 squared-distance slabs from the features per study, so
                 nothing (n, n)-shaped is added to its footprint.
+
+    covariates / strata / weights: stacked per-study design columns —
+    (S, n, c) / (S, n) arrays (see engine.permanova_many). Any of them
+    routes the batch through the dense-design program: the dense bridge
+    builds the distance stack and delegates, the fused-kernel bridge
+    vmaps the per-column basis contraction over the study axis (still
+    nothing (n, n)-shaped), shardable over 'data'.
 
     Study s draws its null from fold_in(key, s) — identical to S
     independent pipeline() calls — on EVERY path; a single fold must never
@@ -307,6 +490,32 @@ def pipeline_many(xs: Array, groupings: Array, *, n_groups: int,
         raise ValueError(
             f"pipeline_many supports materialize='dense'/'fused-kernel' "
             f"(got {materialize!r}); stream/fused are single-study bridges")
+
+    designed = (covariates is not None or strata is not None
+                or weights is not None)
+    if designed and materialize == "dense":
+        pl = _planner.plan_pipeline(
+            n, d, n_total, n_groups, metric=metric, backend=backend,
+            dist_impl=dist_impl, row_block=row_block, materialize="dense",
+            matrix_budget_bytes=matrix_budget_bytes,
+            memory_budget_bytes=memory_budget_bytes, chunk=chunk)
+        dspec = _registry.get(pl.dist_impl)
+        _, _, dense_fn = dspec.bound(**pl.dist_tuning)
+        dms = jax.lax.map(dense_fn, xs)
+        res = engine.permanova_many(
+            dms, groupings, n_groups=n_groups, n_perms=n_perms, key=key,
+            chunk=chunk, memory_budget_bytes=memory_budget_bytes,
+            backend=backend, mesh=mesh, covariates=covariates,
+            strata=strata, weights=weights, ordination=ordination)
+        res.plan = f"{pl.dist_impl} -> dense(batched lax.map) -> {res.plan}"
+        return res
+    if designed:
+        return _pipeline_many_fused_design(
+            xs, groupings, covariates=covariates, strata=strata,
+            weights=weights, n_groups=n_groups, metric=metric,
+            n_perms=n_perms, key=key, row_block=row_block, chunk=chunk,
+            memory_budget_bytes=memory_budget_bytes, backend=backend,
+            mesh=mesh, ordination=ordination)
 
     if materialize == "fused-kernel":
         return _pipeline_many_fused(
@@ -456,3 +665,109 @@ def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
         plan=(f"{pl.fused_impl}({where}) rows={block} "
               f"chunk={ch} studies={s_count} chunks={n_chunks} | "
               f"{pl.reason}"))
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_many_program_design(metric: str, block: int, ch: int,
+                               n_chunks: int, n: int, pad: int, k: int):
+    """The jitted vmapped fused DESIGN sweep, cached per static config
+    (mirrors _fused_many_program): per study, the chunk scan draws
+    strata-restricted index permutations, gathers basis rows, and runs
+    the per-column contraction against D² row slabs built in-scan."""
+    from repro.core import distance as _dist
+    mdef = _dist.ROW_METRICS[metric]
+
+    def one(xp_pad, xp, basis, strata, study_key):
+        return _streaming._sweep_rows_perms_design(
+            xp_pad, xp, basis, strata, study_key, jnp.int32(0),
+            jnp.int32(0), rows_fn=mdef.rows, block=block, chunk=ch,
+            n_chunks=n_chunks, n=n, n_rows_pad=n + pad, k_cols=k)
+
+    return jax.jit(jax.vmap(one))
+
+
+def _pipeline_many_fused_design(xs: Array, groupings: Array, *,
+                                covariates, strata, weights,
+                                n_groups: int, metric: str, n_perms: int,
+                                key: jax.Array, row_block, chunk,
+                                memory_budget_bytes, backend, mesh,
+                                ordination) -> engine.PermanovaManyResult:
+    """Batched single-pass DESIGN sweep: vmap of the fused dense-basis
+    dataflow over the study axis, optionally sharded over 'data'.
+
+    Per-study keys fold by GLOBAL study index before any sharding, so
+    sharded == single-host == S separate pipeline() calls bit-identically
+    (including strata-restricted draws)."""
+    from repro.core import distance as _dist
+    s_count, n, d = (int(v) for v in xs.shape)
+    n_total = n_perms + 1
+
+    designs = engine.api._build_study_designs(
+        groupings, covariates, strata, weights, n_groups=n_groups, n=n,
+        s_count=s_count)
+    d0 = designs[0]
+    k = d0.k_cols
+    basis_stack = jnp.stack([dd.basis for dd in designs])
+    strata_stack = jnp.stack([
+        dd.strata if dd.strata is not None else jnp.zeros((n,), jnp.int32)
+        for dd in designs])
+
+    total_budget = (engine.planner.DEFAULT_STREAM_BUDGET_BYTES
+                    if memory_budget_bytes is None else memory_budget_bytes)
+    pl = _planner.plan_pipeline(
+        n, d, n_total, n_groups, metric=metric, backend=backend,
+        materialize="fused-kernel", fused_impl="xla", row_block=row_block,
+        memory_budget_bytes=total_budget / s_count, chunk=chunk,
+        design_cols=k)
+    mdef = _dist.ROW_METRICS[metric]
+    xs_prep = mdef.prepare(xs)
+    block = int(min(pl.row_block, n))
+    ch = int(max(1, min(pl.sw.chunk, n_total)))
+    n_chunks = -(-n_total // ch)
+    pad = (-n) % block
+    xs_pad = jnp.pad(xs_prep, ((0, 0), (0, pad), (0, 0)))
+    run = _fused_many_program_design(metric, block, ch, n_chunks, n, pad,
+                                     k)
+
+    study_idx = jnp.arange(s_count)
+    args = (xs_pad, xs_prep, basis_stack, strata_stack)
+    where = "vmap"
+    data_ways, s_pad, wrap_idx = engine.api.study_axis_padding(mesh,
+                                                              s_count)
+    if wrap_idx is not None:
+        args = tuple(jnp.take(a, wrap_idx, axis=0) for a in args)
+        study_idx = wrap_idx
+    study_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(study_idx)
+    args = args + (study_keys,)
+    if data_ways > 1:
+        args = engine.api.put_study_sharded(mesh, args)
+        where = (f"vmap@data[{data_ways}]"
+                 + (f"+pad{s_pad}" if s_pad else ""))
+    s_cols_all, rs = run(*args)        # (S', n_chunks*ch, K), (S', n+pad)
+    s_cols = s_cols_all[:s_count, :n_total]
+
+    ord_res = None
+    if ordination is not None:
+        from repro.pipeline import ordination as _ord
+
+        def one_pcoa(xp_rs):
+            xp, rs_s = xp_rs
+            stats = _streaming.GowerStats(row_sums=rs_s,
+                                          total=jnp.sum(rs_s), n=n)
+            r = _ord.pcoa_features(xp, mdef.rows, int(ordination),
+                                   row_block=block, stats=stats)
+            return r.coords, r.eigvals, r.explained
+
+        coords, eigvals, explained = jax.lax.map(
+            one_pcoa, (xs_prep, rs[:s_count, :n]))
+        ord_res = _ord.PCoAResult(coords=coords, eigvals=eigvals,
+                                  explained=explained,
+                                  method="subspace-stream")
+
+    dof_resid = jnp.full((s_count,), n - d0.rank, jnp.float32)
+    return engine.api.design_many_result(
+        s_cols, d0, dof_resid=dof_resid, n_objects=n, n_groups=n_groups,
+        n_perms=n_perms, ordination=ord_res,
+        plan=(f"{pl.fused_impl}({where}) rows={block} chunk={ch} "
+              f"studies={s_count} cols={k} chunks={n_chunks} | "
+              f"{pl.reason} ({d0.describe()})"))

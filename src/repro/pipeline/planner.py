@@ -182,7 +182,8 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
                   chunk: Optional[int] = None,
                   sw_tuning: Optional[Dict[str, int]] = None,
                   fused_impl: Optional[str] = None,
-                  fused_tuning: Optional[Dict[str, int]] = None
+                  fused_tuning: Optional[Dict[str, int]] = None,
+                  design_cols: Optional[int] = None
                   ) -> PipelinePlan:
     """Resolve the full two-stage plan for one problem.
 
@@ -190,6 +191,11 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     convention as engine.plan(). Caller-pinned fields (dist_impl,
     materialize, row_block, sw_impl, chunk) are respected; the planner
     fills in the rest.
+
+    design_cols: the dense-design basis width K (covariate/weighted/
+    multi-factor designs) — the permutation-state workset models are
+    sized for K design columns instead of G groups, and the engine plan
+    is restricted to the matmul-family dense companions.
     """
     backend = backend or _eplanner.default_backend()
     matrix_budget = (DEFAULT_MATRIX_BUDGET_BYTES
@@ -252,15 +258,17 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
         # plus its (n, chunk*G) reshape — G-fold larger per permutation
         # than the engine's label-only model. Size the chunk against the
         # label budget with that factor so the fused sweep honors the same
-        # memory contract.
+        # memory contract. Dense designs swap G for the basis width K.
         budget = (_eplanner.DEFAULT_STREAM_BUDGET_BYTES
                   if memory_budget_bytes is None else memory_budget_bytes)
-        per_perm = 4.0 * n * (2 * n_groups + 1)
+        cols = n_groups if design_cols is None else design_cols
+        per_perm = 4.0 * n * (2 * cols + 1)
         chunk = int(max(1, min(budget // per_perm, n_perms)))
     sw = _eplanner.plan(n, n_perms, n_groups, backend=backend,
                         impl=pinned_sw,
                         memory_budget_bytes=memory_budget_bytes,
-                        chunk=chunk, tuning=sw_tuning)
+                        chunk=chunk, tuning=sw_tuning,
+                        n_cols=design_cols)
 
     # Fused-kernel: resolve which single-pass impl runs the sweep and its
     # joint tile tuning (registry defaults <- persisted measurements <-

@@ -322,11 +322,16 @@ for _metric in ("euclidean", "aitchison", "braycurtis", "jaccard"):
     register_fused(FusedImpl(
         name=f"{_metric}.fusedk.pallas", metric=_metric, kind="pallas",
         backends=("tpu",),
+        # feat_bf16=1 streams the feature slabs as bf16 (2x less HBM
+        # feature traffic; fp32 accumulation in-kernel) — a planner/
+        # autotune knob whose value lands in the persisted cache entry's
+        # tuning dict alongside the tile sizes
         tuning={"tile_r": 128, "tile_c": 128, "feat_block": 128,
-                "perm_block": 16},
+                "perm_block": 16, "feat_bf16": 0},
         workset_bytes=_ws_fused_pallas, kernel_metric=_kmetric,
         description=f"Pallas megakernel: {_metric} D² tiles built and "
-                    "contracted in VMEM; D² never touches HBM",
+                    "contracted in VMEM; D² never touches HBM "
+                    "(feat_bf16=1 halves feature-slab traffic)",
     ))
     register_fused(FusedImpl(
         name=f"{_metric}.fusedk.xla", metric=_metric, kind="xla",

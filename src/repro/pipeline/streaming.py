@@ -166,7 +166,7 @@ class FusedStats(NamedTuple):
 
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "block", "n", "n_groups"))
-def _fused_sw_step(m2rows, grouping, inv_gs, key, lo_r, lo_p, *,
+def _fused_sw_step(m2rows, grouping, strata, inv_gs, key, lo_r, lo_p, *,
                    chunk, block, n, n_groups):
     """Row-partial s_W (fstat's matmul-form contraction) for permutation
     indices [lo_p, lo_p+chunk), over mat2 rows [lo_r, lo_r+block).
@@ -174,10 +174,16 @@ def _fused_sw_step(m2rows, grouping, inv_gs, key, lo_r, lo_p, *,
     Labels are regenerated on device by global-index key folding (identical
     to the engine scheduler), so every (row block × perm chunk) cell of the
     sweep is independent and the results sum exactly to the full statistic.
-    Pad rows carry zeroed mat2 rows, so their (arbitrary) labels contribute
-    nothing; the row-label slice comes from a zero-padded label block so the
-    slice window never clamps out of alignment."""
-    g = permutations.permutation_batch_dyn(key, grouping, lo_p, chunk)
+    `strata=None` is the free generator — byte-identical to the pre-design
+    sweep (None traces a distinct program); an array restricts draws within
+    blocks. Pad rows carry zeroed mat2 rows, so their (arbitrary) labels
+    contribute nothing; the row-label slice comes from a zero-padded label
+    block so the slice window never clamps out of alignment."""
+    if strata is None:
+        g = permutations.permutation_batch_dyn(key, grouping, lo_p, chunk)
+    else:
+        g = permutations.strata_label_batch_dyn(key, grouping, strata,
+                                                lo_p, chunk)
     e = fstat.onehot_perm_factors(g, inv_gs, m2rows.dtype)   # (P, n, G)
     e_pad = jnp.pad(e, ((0, 0), (0, (-n) % block), (0, 0)))
     e_rows = jax.lax.dynamic_slice(e_pad, (0, lo_r, 0),
@@ -185,9 +191,26 @@ def _fused_sw_step(m2rows, grouping, inv_gs, key, lo_r, lo_p, *,
     return fstat.sw_matmul_contract(m2rows, e, e_rows)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block", "n", "k_cols"))
+def _fused_sw_step_cols(m2rows, basis, strata, key, lo_r, lo_p, *,
+                        chunk, block, n, k_cols):
+    """Dense-design cousin of _fused_sw_step: strata-restricted index
+    permutations gather basis rows; the per-column contraction returns a
+    (chunk, K) partial over this row slab."""
+    perms = permutations.strata_permutation_batch_dyn(key, strata, lo_p,
+                                                      chunk)
+    v = fstat.basis_perm_factors(basis, perms)               # (P, n, K)
+    v_pad = jnp.pad(v, ((0, 0), (0, (-n) % block), (0, 0)))
+    v_rows = jax.lax.dynamic_slice(v_pad, (0, lo_r, 0),
+                                   (chunk, block, k_cols))
+    return fstat.sw_cols_contract(m2rows, v, v_rows)
+
+
 def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
              inv_gs: Array, key: jax.Array, n_total: int, *,
              row_block: int, chunk: int,
+             strata: Optional[Array] = None,
              progress: Optional[Callable[[int, int], None]] = None):
     """s_W for permutation indices [0, n_total) without ever holding the
     (n, n) matrix: outer loop over mat2 row slabs (each built once), inner
@@ -208,7 +231,7 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
         s_t_sum += float(jnp.sum(slab))      # s_T marginal, once per slab
         for lo_p in range(0, n_total, chunk):
             sw = _fused_sw_step(
-                slab, grouping, inv_gs, key, jnp.int32(lo_r),
+                slab, grouping, strata, inv_gs, key, jnp.int32(lo_r),
                 jnp.int32(lo_p), chunk=chunk, block=slab.shape[0], n=n,
                 n_groups=n_groups)
             hi = min(lo_p + chunk, n_total)
@@ -220,6 +243,43 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
         row_block=row_block, n_row_blocks=n_row_blocks,
         peak_slab_bytes=4 * row_block * n,
         peak_label_bytes=4 * chunk * n)
+    return out, s_t_sum / 2.0 / n, stats
+
+
+def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
+                    n_total: int, *, row_block: int, chunk: int,
+                    progress: Optional[Callable[[int, int], None]] = None):
+    """The fused bridge for DENSE designs: per-column quadratic forms
+    accumulated over mat2 row slabs, nothing (n, n)-shaped ever resident.
+
+    Returns (s_cols float64 ndarray (n_total, K), s_t float, FusedStats).
+    """
+    n = int(xprep.shape[0])
+    k = design.k_cols
+    basis = design.basis
+    strata = (design.strata if design.strata is not None
+              else jnp.zeros((n,), jnp.int32))
+    row_block = int(min(row_block, n))
+    chunk = int(max(1, min(chunk, n_total)))
+    out = np.zeros((n_total, k), np.float64)
+    s_t_sum = 0.0
+    n_row_blocks = 0
+    for lo_r, slab in mat2_row_blocks(xprep, rows_fn, block=row_block):
+        n_row_blocks += 1
+        s_t_sum += float(jnp.sum(slab))
+        for lo_p in range(0, n_total, chunk):
+            sc = _fused_sw_step_cols(
+                slab, basis, strata, key, jnp.int32(lo_r), jnp.int32(lo_p),
+                chunk=chunk, block=slab.shape[0], n=n, k_cols=k)
+            hi = min(lo_p + chunk, n_total)
+            out[lo_p:hi] += np.asarray(sc[: hi - lo_p], np.float64)
+        if progress is not None:
+            progress(min(lo_r + row_block, n), n)
+    stats = FusedStats(
+        n_total=n_total, chunk=chunk, n_chunks=-(-n_total // chunk),
+        row_block=row_block, n_row_blocks=n_row_blocks,
+        peak_slab_bytes=4 * row_block * n,
+        peak_label_bytes=4 * chunk * n * (k + 1))
     return out, s_t_sum / 2.0 / n, stats
 
 
@@ -241,7 +301,7 @@ class FusedKernelStats(NamedTuple):
 
 def _sweep_rows_perms(x_rows_pad, x_full, grouping, inv_gs, key,
                       row_offset, perm_lo, *, rows_fn, block, chunk,
-                      n_chunks, n, n_rows_pad, n_groups):
+                      n_chunks, n, n_rows_pad, n_groups, strata=None):
     """Fully-traced fused sweep over LOCAL rows × a permutation range.
 
     x_rows_pad: (n_local, d) prepared features, n_local a multiple of
@@ -249,6 +309,8 @@ def _sweep_rows_perms(x_rows_pad, x_full, grouping, inv_gs, key,
                 (traced — one program serves every shard/offset).
     perm_lo:    first global permutation index (traced); the sweep covers
                 [perm_lo, perm_lo + n_chunks*chunk).
+    strata:     None = free label permutations (the pre-design program);
+                an (n,) array restricts draws within blocks.
     Returns (s_w (n_chunks*chunk,) f32 partial over these rows,
              row_sums (n_local,) f32). Scan over row blocks outside, scan
     over permutation chunks inside — each D² block is built once and
@@ -268,8 +330,12 @@ def _sweep_rows_perms(x_rows_pad, x_full, grouping, inv_gs, key,
         m2 = jnp.where(valid, drows * drows, 0.0)
 
         def chunk_body(_, lo_p):
-            g = permutations.permutation_batch_dyn(key, grouping, lo_p,
-                                                   chunk)
+            if strata is None:
+                g = permutations.permutation_batch_dyn(key, grouping, lo_p,
+                                                       chunk)
+            else:
+                g = permutations.strata_label_batch_dyn(
+                    key, grouping, strata, lo_p, chunk)
             e = fstat.onehot_perm_factors(g, inv_gs, m2.dtype)
             e_pad = jnp.pad(e, ((0, 0), (0, n_rows_pad - n), (0, 0)))
             e_rows = jax.lax.dynamic_slice(
@@ -287,19 +353,72 @@ def _sweep_rows_perms(x_rows_pad, x_full, grouping, inv_gs, key,
     return s_w, rs
 
 
+def _sweep_rows_perms_design(x_rows_pad, x_full, basis, strata, key,
+                             row_offset, perm_lo, *, rows_fn, block, chunk,
+                             n_chunks, n, n_rows_pad, k_cols):
+    """_sweep_rows_perms for DENSE designs: the chunk scan draws
+    strata-restricted index permutations, gathers basis rows, and runs the
+    per-column contraction. Returns (s_cols (n_chunks*chunk, K) f32,
+    row_sums (n_local,) f32)."""
+    n_local = x_rows_pad.shape[0]
+    d_feat = x_rows_pad.shape[1]
+    chunk_los = perm_lo + jnp.arange(n_chunks) * chunk
+
+    def slab_body(carry, lo_r):
+        sc_acc, rs = carry
+        xb = jax.lax.dynamic_slice(x_rows_pad, (lo_r, 0), (block, d_feat))
+        drows = rows_fn(xb, x_full)
+        gids = row_offset + lo_r + jnp.arange(block)
+        valid = (gids < n)[:, None] & (gids[:, None]
+                                       != jnp.arange(n)[None, :])
+        m2 = jnp.where(valid, drows * drows, 0.0)
+
+        def chunk_body(_, lo_p):
+            perms = permutations.strata_permutation_batch_dyn(
+                key, strata, lo_p, chunk)
+            v = fstat.basis_perm_factors(basis, perms)   # (chunk, n, K)
+            v_pad = jnp.pad(v, ((0, 0), (0, n_rows_pad - n), (0, 0)))
+            v_rows = jax.lax.dynamic_slice(
+                v_pad, (0, row_offset + lo_r, 0), (chunk, block, k_cols))
+            return None, fstat.sw_cols_contract(m2, v, v_rows)
+
+        _, scs = jax.lax.scan(chunk_body, None, chunk_los)
+        rs = jax.lax.dynamic_update_slice(rs, jnp.sum(m2, axis=1), (lo_r,))
+        return (sc_acc + scs.reshape(-1, k_cols), rs), None
+
+    init = (jnp.zeros((n_chunks * chunk, k_cols), jnp.float32),
+            jnp.zeros((n_local,), jnp.float32))
+    (s_cols, rs), _ = jax.lax.scan(slab_body, init,
+                                   jnp.arange(n_local // block) * block)
+    return s_cols, rs
+
+
 @functools.partial(jax.jit, static_argnames=(
     "rows_fn", "block", "chunk", "n_chunks", "n", "n_rows_pad", "n_groups"))
-def _onepass_step(x_rows_pad, x_full, grouping, inv_gs, key, *, rows_fn,
-                  block, chunk, n_chunks, n, n_rows_pad, n_groups):
+def _onepass_step(x_rows_pad, x_full, grouping, strata, inv_gs, key, *,
+                  rows_fn, block, chunk, n_chunks, n, n_rows_pad, n_groups):
     return _sweep_rows_perms(
         x_rows_pad, x_full, grouping, inv_gs, key, jnp.int32(0),
         jnp.int32(0), rows_fn=rows_fn, block=block, chunk=chunk,
-        n_chunks=n_chunks, n=n, n_rows_pad=n_rows_pad, n_groups=n_groups)
+        n_chunks=n_chunks, n=n, n_rows_pad=n_rows_pad, n_groups=n_groups,
+        strata=strata)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rows_fn", "block", "chunk", "n_chunks", "n", "n_rows_pad", "k_cols"))
+def _onepass_step_design(x_rows_pad, x_full, basis, strata, key, *,
+                         rows_fn, block, chunk, n_chunks, n, n_rows_pad,
+                         k_cols):
+    return _sweep_rows_perms_design(
+        x_rows_pad, x_full, basis, strata, key, jnp.int32(0),
+        jnp.int32(0), rows_fn=rows_fn, block=block, chunk=chunk,
+        n_chunks=n_chunks, n=n, n_rows_pad=n_rows_pad, k_cols=k_cols)
 
 
 def fused_sw_onepass(xprep: Array, rows_fn: Callable, grouping: Array,
                      inv_gs: Array, key: jax.Array, n_total: int, *,
-                     row_block: int, chunk: int):
+                     row_block: int, chunk: int,
+                     strata: Optional[Array] = None):
     """The fused sweep as ONE jitted program (the off-TPU megakernel form).
 
     Same math as `fused_sw`, but the (row block × perm chunk) double loop
@@ -314,7 +433,7 @@ def fused_sw_onepass(xprep: Array, rows_fn: Callable, grouping: Array,
     n_chunks = -(-n_total // chunk)
     xpad, n_pad = _pad_rows(xprep, block)
     s_w, rs = _onepass_step(
-        xpad, xprep, jnp.asarray(grouping, jnp.int32), inv_gs, key,
+        xpad, xprep, jnp.asarray(grouping, jnp.int32), strata, inv_gs, key,
         rows_fn=rows_fn, block=block, chunk=chunk, n_chunks=n_chunks, n=n,
         n_rows_pad=n_pad, n_groups=n_groups)
     s_t = float(jnp.sum(rs)) / 2.0 / n
@@ -325,14 +444,45 @@ def fused_sw_onepass(xprep: Array, rows_fn: Callable, grouping: Array,
     return np.asarray(s_w[:n_total], np.float64), s_t, stats
 
 
+def fused_sw_onepass_design(xprep: Array, rows_fn: Callable, design,
+                            key: jax.Array, n_total: int, *,
+                            row_block: int, chunk: int):
+    """fused_sw_onepass for DENSE designs: one jitted scan-of-scans, the
+    per-column contraction inside. Returns (s_cols (n_total, K) f64,
+    s_t, FusedKernelStats)."""
+    n = int(xprep.shape[0])
+    k = design.k_cols
+    strata = (design.strata if design.strata is not None
+              else jnp.zeros((n,), jnp.int32))
+    block = int(min(row_block, n))
+    chunk = int(max(1, min(chunk, n_total)))
+    n_chunks = -(-n_total // chunk)
+    xpad, n_pad = _pad_rows(xprep, block)
+    s_cols, rs = _onepass_step_design(
+        xpad, xprep, design.basis, strata, key, rows_fn=rows_fn,
+        block=block, chunk=chunk, n_chunks=n_chunks, n=n, n_rows_pad=n_pad,
+        k_cols=k)
+    s_t = float(jnp.sum(rs)) / 2.0 / n
+    stats = FusedKernelStats(
+        impl="xla", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+        row_block=block, peak_slab_bytes=4 * block * n,
+        peak_label_bytes=4 * chunk * n * (k + 1))
+    return np.asarray(s_cols[:n_total], np.float64), s_t, stats
+
+
 _labels_step = jax.jit(permutations.permutation_batch_dyn,
                        static_argnames=("chunk", "identity_first"))
+_strata_labels_step = jax.jit(permutations.strata_label_batch_dyn,
+                              static_argnames=("chunk", "identity_first"))
+_strata_perms_step = jax.jit(permutations.strata_permutation_batch_dyn,
+                             static_argnames=("chunk", "identity_first"))
 
 
 def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
                         key: jax.Array, n_total: int, *, kernel_metric: str,
                         chunk: int, tuning: Optional[dict] = None,
                         interpret: Optional[bool] = None,
+                        strata: Optional[Array] = None,
                         progress: Optional[Callable[[int, int], None]] = None):
     """The fused sweep through the Pallas megakernel (kernels.fused_sw).
 
@@ -341,6 +491,8 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
     and contracted in VMEM, so the only HBM traffic per chunk is the
     feature table and the (chunk, n) labels — the distance matrix never
     exists at any scope wider than one (tile_r, tile_c) scratch buffer.
+    Labels are generated outside the kernel, so strata-restricted draws
+    slot straight in.
     """
     from repro.kernels.fused_sw import ops as _fops  # deferred: pallas
     n = int(xprep.shape[0])
@@ -351,7 +503,11 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
     rowsums = None
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        g = _labels_step(key, grouping, jnp.int32(lo), chunk=chunk)
+        if strata is None:
+            g = _labels_step(key, grouping, jnp.int32(lo), chunk=chunk)
+        else:
+            g = _strata_labels_step(key, grouping, strata, jnp.int32(lo),
+                                    chunk=chunk)
         sw, rs = _fops.fused_sw_rows(
             xprep, xprep, g, g, inv_gs, 0, metric=kernel_metric,
             interpret=interpret, **tuning)
@@ -372,11 +528,56 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
     return out, s_t, stats
 
 
+def fused_sw_megakernel_design(xprep: Array, design, key: jax.Array,
+                               n_total: int, *, kernel_metric: str,
+                               chunk: int, tuning: Optional[dict] = None,
+                               interpret: Optional[bool] = None,
+                               progress: Optional[Callable[[int, int],
+                                                           None]] = None):
+    """The megakernel sweep for DENSE designs: permuted basis blocks
+    replace the in-kernel one-hot build (the MXU contraction consumes
+    hat-matrix factor columns directly); per-column partials come back
+    per chunk. D² residency is unchanged — VMEM tiles only."""
+    from repro.kernels.fused_sw import ops as _fops  # deferred: pallas
+    n = int(xprep.shape[0])
+    k = design.k_cols
+    basis = design.basis
+    strata = (design.strata if design.strata is not None
+              else jnp.zeros((n,), jnp.int32))
+    chunk = int(max(1, min(chunk, n_total)))
+    tuning = dict(tuning or {})
+    out = np.zeros((n_total, k), np.float64)
+    rowsums = None
+    n_chunks = 0
+    for lo in range(0, n_total, chunk):
+        perms = _strata_perms_step(key, strata, jnp.int32(lo), chunk=chunk)
+        v = fstat.basis_perm_factors(basis, perms)
+        sc, rs = _fops.fused_sw_rows_cols(
+            xprep, xprep, v, v, 0, metric=kernel_metric,
+            interpret=interpret, **tuning)
+        hi = min(lo + chunk, n_total)
+        out[lo:hi] = np.asarray(sc[: hi - lo], np.float64)
+        if rowsums is None:
+            rowsums = np.asarray(rs, np.float64)
+        n_chunks += 1
+        if progress is not None:
+            progress(hi, n_total)
+    s_t = float(rowsums.sum()) / 2.0 / n
+    tr = int(tuning.get("tile_r", 128))
+    tc = int(tuning.get("tile_c", 128))
+    stats = FusedKernelStats(
+        impl="pallas", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
+        row_block=tr, peak_slab_bytes=16 * tr * tc,
+        peak_label_bytes=4 * chunk * n * (k + 1))
+    return out, s_t, stats
+
+
 def fused_kernel_sw(xprep: Array, rows_fn: Callable, grouping: Array,
                     inv_gs: Array, key: jax.Array, n_total: int, *,
                     impl: str, kernel_metric: str, row_block: int,
                     chunk: int, tuning: Optional[dict] = None,
                     interpret: Optional[bool] = None,
+                    strata: Optional[Array] = None,
                     progress: Optional[Callable[[int, int], None]] = None):
     """Dispatch the single-pass fused sweep to the planned implementation.
 
@@ -388,11 +589,30 @@ def fused_kernel_sw(xprep: Array, rows_fn: Callable, grouping: Array,
         return fused_sw_megakernel(
             xprep, grouping, inv_gs, key, n_total,
             kernel_metric=kernel_metric, chunk=chunk, tuning=tuning,
-            interpret=interpret, progress=progress)
+            interpret=interpret, strata=strata, progress=progress)
     if impl == "xla":
         return fused_sw_onepass(
             xprep, rows_fn, grouping, inv_gs, key, n_total,
-            row_block=row_block, chunk=chunk)
+            row_block=row_block, chunk=chunk, strata=strata)
+    raise ValueError(f"unknown fused-kernel impl {impl!r}; "
+                     "expected 'pallas' or 'xla'")
+
+
+def fused_kernel_sw_design(xprep: Array, rows_fn: Callable, design,
+                           key: jax.Array, n_total: int, *,
+                           impl: str, kernel_metric: str, row_block: int,
+                           chunk: int, tuning: Optional[dict] = None,
+                           interpret: Optional[bool] = None):
+    """fused_kernel_sw for DENSE designs: both impls return
+    (s_cols (n_total, K) float64, s_t, FusedKernelStats)."""
+    if impl == "pallas":
+        return fused_sw_megakernel_design(
+            xprep, design, key, n_total, kernel_metric=kernel_metric,
+            chunk=chunk, tuning=tuning, interpret=interpret)
+    if impl == "xla":
+        return fused_sw_onepass_design(
+            xprep, rows_fn, design, key, n_total, row_block=row_block,
+            chunk=chunk)
     raise ValueError(f"unknown fused-kernel impl {impl!r}; "
                      "expected 'pallas' or 'xla'")
 

@@ -1,0 +1,501 @@
+"""Design-matrix subsystem: partial/covariate PERMANOVA, strata-restricted
+permutations, weighted designs.
+
+Contracts under test:
+  * the plain single-factor path routed through Design.from_labels is
+    BIT-identical to the raw-label path across impls (and compiles to the
+    same HLO — the tentpole's fast-path regression),
+  * per-term partial F matches a dense fp64 explicit-projection oracle on
+    all four metrics, for every impl and materialization bridge,
+  * strata-restricted permutations preserve within-stratum multisets
+    (hypothesis, ragged/prime shapes) and ride global-index key folding,
+  * per-term F is invariant under covariate rescaling, and the adjusted
+    factor term under covariate reordering,
+  * ragged/padded permanova_many observed per-term F bit-matches the
+    unpadded study; stacked == loop of singles,
+  * bf16 feature slabs in the fused megakernel stay within tolerance.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine, pipeline
+from repro.core import design as dsg
+from repro.core import fstat, permutations
+from repro.core.distance import distance_matrix
+from repro.engine import registry, scheduler
+
+G = 4
+METRICS = ("braycurtis", "euclidean", "jaccard", "aitchison")
+
+
+def _study(n, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x[rng.random((n, d)) < 0.4] = 0.0   # sparsity: jaccard stays nontrivial
+    labels = rng.integers(0, G, size=n).astype(np.int32)
+    labels[:G] = np.arange(G)
+    cov = rng.normal(size=(n, 2))
+    strata = (np.arange(n) % 3).astype(np.int32)
+    return x, labels, cov, strata
+
+
+def _sym_dm(n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def oracle_term_f_fp64(dm, labels, cov, *, n_groups=G, weights=None):
+    """Explicit sequential-projection oracle (fp64 hat matrices, pinv):
+    residual SS of cumulative model t is 0.5 * tr(H_t W^1/2 mat2 W^1/2);
+    term SS are the telescoped differences. Independent of the production
+    basis/QR code on purpose."""
+    n = dm.shape[0]
+    m2 = np.asarray(dm, np.float64) ** 2
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    sw = np.sqrt(w)
+    mt = sw[:, None] * m2 * sw[None, :]
+    one = np.ones((n, 1))
+    onehot = np.zeros((n, n_groups))
+    onehot[np.arange(n), labels] = 1.0
+    blocks = [one] + [np.asarray(cov)[:, j:j + 1]
+                      for j in range(np.asarray(cov).shape[1])] + [onehot]
+    resid, dfs = [], []
+    rank_prev = 0
+    for t in range(1, len(blocks) + 1):
+        xt = sw[:, None] * np.concatenate(blocks[:t], axis=1)
+        hat = xt @ np.linalg.pinv(xt)
+        resid.append(0.5 * np.sum(hat * mt))
+        rank = np.linalg.matrix_rank(xt)
+        dfs.append(rank - rank_prev)
+        rank_prev = rank
+    ss = [resid[t] - resid[t + 1] for t in range(len(resid) - 1)]
+    dof_resid = n - rank_prev
+    denom = resid[-1] / dof_resid
+    return [s / max(df, 1) / denom for s, df in zip(ss, dfs[1:])]
+
+
+class TestDesignBuild:
+    def test_single_factor_is_labels_mode(self):
+        _, labels, _, _ = _study(20, seed=1)
+        d = dsg.build(grouping=labels, n_groups=G)
+        assert d.mode == dsg.MODE_LABELS and d.is_plain_labels
+        assert [t.df for t in d.terms] == [1, G - 1]
+        assert d.dof_resid == 20 - G
+        ops = d.operands
+        assert ops.mode == dsg.MODE_LABELS
+        assert np.array_equal(np.asarray(ops.grouping), labels)
+
+    def test_covariates_force_dense_orthonormal_basis(self):
+        _, labels, cov, _ = _study(23, seed=2)
+        d = dsg.build(grouping=labels, covariates=cov, n_groups=G)
+        assert d.mode == dsg.MODE_DENSE
+        assert [t.df for t in d.terms] == [1, 1, 1, G - 1]
+        b = d.basis64
+        np.testing.assert_allclose(b.T @ b, np.eye(d.rank), atol=1e-9)
+        assert d.dof_resid == 23 - d.rank
+
+    def test_collinear_covariate_gets_df_zero(self):
+        _, labels, cov, _ = _study(21, seed=3)
+        cov2 = {"a": cov[:, 0], "a_scaled": 3.0 * cov[:, 0]}
+        d = dsg.build(grouping=labels, covariates=cov2, n_groups=G)
+        assert [t.df for t in d.terms] == [1, 1, 0, G - 1]
+
+    def test_weights_validated(self):
+        _, labels, _, _ = _study(16, seed=4)
+        with pytest.raises(ValueError, match="non-negative"):
+            dsg.build(grouping=labels, covariates=None, n_groups=G,
+                      weights=-np.ones(16))
+        with pytest.raises(ValueError, match="weights must be"):
+            dsg.build(grouping=labels, n_groups=G, weights=np.ones(7))
+
+    def test_saturated_design_rejected(self):
+        labels = np.arange(5).astype(np.int32)
+        with pytest.raises(ValueError, match="saturated"):
+            dsg.build(grouping=labels, n_groups=5,
+                      weights=np.ones(5))
+
+    def test_uniform_weights_reduce_to_unweighted(self):
+        dm = _sym_dm(19, seed=5)
+        _, labels, _, _ = _study(19, seed=5)
+        r_plain = engine.run(jnp.asarray(dm), jnp.asarray(labels),
+                             n_perms=0, n_groups=G)
+        d = dsg.build(grouping=labels, n_groups=G, weights=np.ones(19))
+        r_w = engine.run_design(jnp.asarray(dm), d, n_perms=0)
+        np.testing.assert_allclose(float(r_w.f_stat), float(r_plain.f_stat),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(r_w.s_t), float(r_plain.s_t),
+                                   rtol=1e-5)
+
+
+class TestPlainFastPathRegression:
+    """The compat shim: single-factor label-array call sites route through
+    Design.from_labels with ZERO behavior change."""
+
+    @pytest.mark.parametrize("impl", ["brute", "tiled", "matmul",
+                                      "pallas_matmul"])
+    def test_design_route_bit_identical(self, impl):
+        dm = _sym_dm(18, seed=6)
+        _, labels, _, _ = _study(18, seed=6)
+        kw = dict(n_perms=19, key=jax.random.key(2), impl=impl)
+        raw = engine.run(jnp.asarray(dm), jnp.asarray(labels),
+                         n_groups=G, **kw)
+        via = engine.run(jnp.asarray(dm),
+                         dsg.Design.from_labels(labels, n_groups=G), **kw)
+        assert np.array_equal(np.asarray(raw.f_perms),
+                              np.asarray(via.f_perms))
+        assert raw.method == via.method and raw.plan == via.plan
+        assert via.terms is None       # exactly today's output contract
+
+    @pytest.mark.parametrize("mat", ["dense", "stream", "fused",
+                                     "fused-kernel"])
+    def test_plain_design_through_bridges_bit_identical(self, mat):
+        x, labels, _, _ = _study(22, d=8, seed=9)
+        kw = dict(metric="braycurtis", n_perms=9, key=jax.random.key(5),
+                  materialize=mat)
+        raw = pipeline.pipeline(jnp.asarray(x), labels, n_groups=G, **kw)
+        via = pipeline.pipeline(jnp.asarray(x),
+                                dsg.Design.from_labels(labels, n_groups=G),
+                                **kw)
+        assert np.array_equal(np.asarray(raw.f_perms),
+                              np.asarray(via.f_perms)), mat
+        assert raw.method == via.method and via.terms is None
+
+    def test_fast_path_compiles_to_same_hlo(self):
+        """The single-factor fast path must compile to the SAME HLO shape
+        as the pre-design repo: the scheduler step lowered with operands
+        arriving through Design.from_labels is textually identical to the
+        raw-label lowering (no basis gathers, no strata argsorts)."""
+        dm = _sym_dm(16, seed=7)
+        _, labels, _, _ = _study(16, seed=7)
+        mat2 = jnp.asarray(dm * dm)
+        raw_g = jnp.asarray(labels, jnp.int32)
+        design = dsg.Design.from_labels(labels, n_groups=G)
+        inv = permutations.inv_group_sizes(raw_g, G)
+        fn = registry.get("matmul").bound()
+        key = jax.random.key(0)
+
+        def lower(g):
+            return scheduler._step.lower(
+                mat2, g, inv, key, jnp.int32(0), fn=fn, chunk=8,
+                identity_first=True).as_text()
+
+        txt = lower(design.operands.grouping)
+        assert txt == lower(raw_g)
+        # no float-basis gathers in the fast path — the (chunk, n, K)
+        # dense operand is a design-mode-only construct
+        assert "gather" not in txt or "f32[8,16," not in txt
+        # the strata generator's argsorts must NOT leak into the plain
+        # program — it lowers sort ops the label path never uses
+        strata_txt = jax.jit(
+            permutations.strata_permutation_batch_dyn,
+            static_argnames=("chunk", "identity_first")).lower(
+            key, jnp.zeros((16,), jnp.int32), jnp.int32(0),
+            chunk=8).as_text()
+        assert strata_txt.count("sort") > txt.count("sort")
+
+
+class TestStrataPermutations:
+    def test_within_stratum_multiset_invariance(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(n=st.sampled_from([7, 11, 13, 17, 23, 29]),
+               n_strata=st.integers(1, 4), seed=st.integers(0, 10))
+        def check(n, n_strata, seed):
+            rng = np.random.default_rng(seed)
+            strata = jnp.asarray(
+                rng.integers(0, n_strata, n).astype(np.int32))
+            perms = np.asarray(permutations.strata_permutation_batch(
+                jax.random.key(seed), strata, 0, 6))
+            sarr = np.asarray(strata)
+            assert (perms[0] == np.arange(n)).all()    # identity first
+            for p in perms:
+                assert sorted(p) == list(range(n))     # a permutation
+                assert (sarr[p] == sarr).all()         # strata preserved
+
+        check()
+
+    def test_global_index_key_folding_shard_independent(self):
+        strata = jnp.asarray((np.arange(19) % 3).astype(np.int32))
+        key = jax.random.key(9)
+        full = np.asarray(permutations.strata_permutation_batch(
+            key, strata, 0, 12))
+        shard = np.asarray(permutations.strata_permutation_batch(
+            key, strata, 5, 12))
+        np.testing.assert_array_equal(full[5:], shard[:7])
+
+    def test_masked_strata_keeps_pads_in_place(self):
+        strata = jnp.asarray((np.arange(15) % 2).astype(np.int32))
+        eff = permutations.masked_strata(strata, jnp.int32(11))
+        perms = np.asarray(permutations.strata_permutation_batch(
+            jax.random.key(1), eff, 0, 8))
+        for p in perms:
+            assert set(p[11:]) == set(range(11, 15))   # pads stay pads
+
+    def test_masked_strata_sentinel_cannot_collide_with_user_labels(self):
+        """Strata labels are arbitrary ints — a block labeled n (the old
+        fixed sentinel) must NOT merge with the pad stratum, or valid
+        samples would permute onto zero-basis pad slots."""
+        n, nv = 15, 11
+        strata = jnp.full((n,), n, jnp.int32)      # one block, labeled n
+        eff = permutations.masked_strata(strata, jnp.int32(nv))
+        perms = np.asarray(permutations.strata_permutation_batch(
+            jax.random.key(2), eff, 0, 16))
+        for p in perms:
+            assert set(p[nv:]) == set(range(nv, n))       # pads stay pads
+            assert set(p[:nv]) == set(range(nv))          # valid stay valid
+
+    def test_observed_f_unchanged_p_value_differs_from_free(self):
+        dm = _sym_dm(27, seed=8)
+        _, labels, _, strata = _study(27, seed=8)
+        free = engine.run(jnp.asarray(dm), jnp.asarray(labels),
+                          n_perms=99, n_groups=G, key=jax.random.key(3))
+        from repro.core.permanova import permanova
+        res = permanova(jnp.asarray(dm), labels, n_perms=99, n_groups=G,
+                        key=jax.random.key(3), strata=strata)
+        assert "strata" in res.method
+        np.testing.assert_allclose(float(res.f_stat), float(free.f_stat),
+                                   rtol=1e-5)
+        assert res.terms is not None and res.terms[0].df == G - 1
+        # the restricted null is a different draw stream
+        assert not np.array_equal(np.asarray(res.f_perms[1:]),
+                                  np.asarray(free.f_perms[1:]))
+
+
+class TestPartialFOracle:
+    @pytest.mark.parametrize("metric", METRICS)
+    def test_engine_matches_fp64_projection_oracle(self, metric):
+        x, labels, cov, _ = _study(26, seed=10)
+        dm = np.asarray(distance_matrix(jnp.asarray(x), metric))
+        res = engine.run(jnp.asarray(dm), jnp.asarray(labels),
+                         n_perms=5, n_groups=G, covariates=cov,
+                         key=jax.random.key(0))
+        want = oracle_term_f_fp64(dm, labels, cov)
+        got = [float(t.f_stat) for t in res.terms]
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+    def test_row_sharded_cols_partials_reconstruct_full(self):
+        """fstat.sw_cols_rows_partial: summing disjoint row-block partials
+        reconstructs the full per-column statistic (the shard_map building
+        block for matrix-resident dense-design sharding)."""
+        dm = _sym_dm(20, seed=18)
+        _, labels, cov, _ = _study(20, seed=18)
+        des = dsg.build(grouping=labels, covariates=cov, n_groups=G)
+        mat2 = jnp.asarray(dm * dm)
+        perms = permutations.strata_permutation_batch(
+            jax.random.key(6), jnp.zeros((20,), jnp.int32), 0, 5)
+        v = fstat.basis_perm_factors(jnp.asarray(des.basis), perms)
+        full = np.asarray(fstat.sw_cols_matmul(mat2, v))
+        acc = np.zeros_like(full)
+        for lo in (0, 8, 16):
+            hi = min(lo + 8, 20)
+            acc += np.asarray(fstat.sw_cols_rows_partial(
+                mat2[lo:hi], jnp.int32(lo), v))
+        np.testing.assert_allclose(acc, full, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("impl", ["matmul", "brute"])
+    def test_cols_impls_agree(self, impl):
+        dm = _sym_dm(22, seed=11)
+        _, labels, cov, _ = _study(22, seed=11)
+        res = engine.run(jnp.asarray(dm), jnp.asarray(labels), n_perms=9,
+                         n_groups=G, covariates=cov, impl=impl,
+                         key=jax.random.key(1))
+        assert impl in res.method
+        want = oracle_term_f_fp64(dm, labels, cov)
+        got = [float(t.f_stat) for t in res.terms]
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("metric", METRICS)
+    def test_bridges_match_oracle(self, metric):
+        x, labels, cov, strata = _study(24, d=10, seed=12)
+        dm = np.asarray(distance_matrix(jnp.asarray(x), metric))
+        want = oracle_term_f_fp64(dm, labels, cov)
+        for mat in ("dense", "stream", "fused", "fused-kernel"):
+            res = pipeline.pipeline(
+                jnp.asarray(x), labels, metric=metric, n_perms=5,
+                materialize=mat, covariates=cov, n_groups=G,
+                key=jax.random.key(0))
+            got = [float(t.f_stat) for t in res.terms]
+            np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4,
+                                       err_msg=f"{metric}/{mat}")
+
+    def test_pallas_megakernel_dense_variant_matches_oracle(self):
+        x, labels, cov, _ = _study(24, d=8, seed=13)
+        dm = np.asarray(distance_matrix(jnp.asarray(x), "braycurtis"))
+        want = oracle_term_f_fp64(dm, labels, cov)
+        res = pipeline.pipeline(
+            jnp.asarray(x), labels, metric="braycurtis", n_perms=3,
+            materialize="fused-kernel", fused_impl="pallas",
+            fused_tuning={"tile_r": 8, "tile_c": 8, "feat_block": 8,
+                          "perm_block": 2},
+            covariates=cov, n_groups=G, key=jax.random.key(0))
+        assert "pallas" in res.method
+        got = [float(t.f_stat) for t in res.terms]
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4)
+
+    def test_weighted_matches_weighted_oracle(self):
+        x, labels, cov, _ = _study(21, seed=14)
+        dm = _sym_dm(21, seed=14)
+        w = np.random.default_rng(14).gamma(4.0, 0.25, size=21)
+        res = engine.run(jnp.asarray(dm), jnp.asarray(labels), n_perms=5,
+                         n_groups=G, covariates=cov, weights=w,
+                         key=jax.random.key(0))
+        want = oracle_term_f_fp64(dm, labels, cov, weights=w)
+        got = [float(t.f_stat) for t in res.terms]
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+class TestCovariateInvariance:
+    def test_rescaling_leaves_per_term_f_unchanged(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+        dm = _sym_dm(20, seed=15)
+        _, labels, cov, _ = _study(20, seed=15)
+        base = engine.run(jnp.asarray(dm), jnp.asarray(labels), n_perms=0,
+                          n_groups=G, covariates=cov)
+        base_f = [float(t.f_stat) for t in base.terms]
+
+        @settings(max_examples=10, deadline=None)
+        @given(s0=st.floats(0.01, 100.0), s1=st.floats(0.01, 100.0),
+               shift=st.floats(-5.0, 5.0))
+        def check(s0, s1, shift):
+            cov2 = np.stack([cov[:, 0] * s0 + shift, cov[:, 1] * s1],
+                            axis=1)
+            res = engine.run(jnp.asarray(dm), jnp.asarray(labels),
+                             n_perms=0, n_groups=G, covariates=cov2)
+            got = [float(t.f_stat) for t in res.terms]
+            np.testing.assert_allclose(got, base_f, rtol=1e-3, atol=1e-5)
+
+        check()
+
+    def test_reordering_covariates_keeps_adjusted_factor_f(self):
+        dm = _sym_dm(25, seed=16)
+        _, labels, cov, _ = _study(25, seed=16)
+        a = engine.run(jnp.asarray(dm), jnp.asarray(labels), n_perms=0,
+                       n_groups=G,
+                       covariates={"u": cov[:, 0], "v": cov[:, 1]})
+        b = engine.run(jnp.asarray(dm), jnp.asarray(labels), n_perms=0,
+                       n_groups=G,
+                       covariates={"v": cov[:, 1], "u": cov[:, 0]})
+        # the factor term is adjusted for BOTH covariates either way, and
+        # the full-model residual is order-free
+        np.testing.assert_allclose(float(a.terms[-1].f_stat),
+                                   float(b.terms[-1].f_stat), rtol=1e-4)
+        np.testing.assert_allclose(float(a.s_w), float(b.s_w), rtol=1e-5)
+
+
+class TestManyDesign:
+    def _mk(self, n, seed):
+        rng = np.random.default_rng(seed)
+        d = _sym_dm(n, seed)
+        g = rng.integers(0, G, n).astype(np.int32)
+        g[:G] = np.arange(G)
+        cov = rng.normal(size=(n, 2))
+        st = (np.arange(n) % 3).astype(np.int32)
+        return d, g, cov, st
+
+    def test_stacked_matches_single_runs(self):
+        key = jax.random.key(21)
+        studies = [self._mk(20, 30 + s) for s in range(3)]
+        many = engine.permanova_many(
+            np.stack([s[0] for s in studies]),
+            np.stack([s[1] for s in studies]), n_groups=G, n_perms=29,
+            key=key, covariates=np.stack([s[2] for s in studies]),
+            strata=np.stack([s[3] for s in studies]))
+        assert [t.name for t in many.terms] == ["cov0", "cov1", "grouping"]
+        for s, (d, g, cov, stv) in enumerate(studies):
+            des = dsg.build(grouping=g, covariates=cov, strata=stv,
+                            n_groups=G, force_dense=True)
+            single = engine.run_design(jnp.asarray(d), des, n_perms=29,
+                                       key=jax.random.fold_in(key, s))
+            np.testing.assert_allclose(
+                [float(t.f_stat[s]) for t in many.terms],
+                [float(t.f_stat) for t in single.terms], rtol=1e-4)
+            assert ([float(t.p_value[s]) for t in many.terms]
+                    == [float(t.p_value) for t in single.terms]), s
+
+    def test_ragged_observed_per_term_f_bit_matches_unpadded(self):
+        """The acceptance criterion: padded sentinel rows carry ZERO
+        design rows, so every padded contraction term adds exactly +0.0 —
+        the observed per-term F is bit-identical to the unpadded study."""
+        key = jax.random.key(22)
+        sizes = (14, 23, 17)
+        studies = [self._mk(m, 40 + i) for i, m in enumerate(sizes)]
+        many = engine.permanova_many(
+            [s[0] for s in studies], [s[1] for s in studies], n_groups=G,
+            n_perms=9, key=key, covariates=[s[2] for s in studies],
+            strata=[s[3] for s in studies])
+        for s, (d, g, cov, stv) in enumerate(studies):
+            solo = engine.permanova_many(
+                [d], [g], n_groups=G, n_perms=9, key=key,
+                covariates=[cov], strata=[stv])
+            assert ([float(t.f_stat[s]) for t in many.terms]
+                    == [float(t.f_stat[0]) for t in solo.terms]), s
+            assert many.study(s).n_objects == sizes[s]
+
+    def test_mismatched_design_structure_rejected(self):
+        d1, g1, c1, _ = self._mk(15, 50)
+        d2, g2, c2, _ = self._mk(15, 51)
+        c2 = np.stack([c2[:, 0], 2.0 * c2[:, 0]], axis=1)  # collinear
+        with pytest.raises(ValueError, match="different design"):
+            engine.permanova_many([d1, d2], [g1, g2], n_groups=G,
+                                  n_perms=5, covariates=[c1, c2])
+
+    def test_pipeline_many_fused_design_matches_dense(self):
+        rng = np.random.default_rng(23)
+        S, n, d = 3, 24, 8
+        xs = rng.gamma(1.0, 1.0, size=(S, n, d)).astype(np.float32)
+        gs = rng.integers(0, G, size=(S, n)).astype(np.int32)
+        gs[:, :G] = np.arange(G)
+        covs = rng.normal(size=(S, n, 2))
+        key = jax.random.key(4)
+        kw = dict(n_groups=G, metric="braycurtis", n_perms=19, key=key,
+                  covariates=covs)
+        mf = pipeline.pipeline_many(xs, gs, materialize="fused-kernel",
+                                    **kw)
+        md = pipeline.pipeline_many(xs, gs, materialize="dense", **kw)
+        for tf, td in zip(mf.terms, md.terms):
+            np.testing.assert_allclose(np.asarray(tf.f_stat),
+                                       np.asarray(td.f_stat), rtol=1e-3)
+            np.testing.assert_array_equal(np.asarray(tf.p_value),
+                                          np.asarray(td.p_value))
+
+
+class TestBf16FeatureSlabs:
+    def test_megakernel_bf16_parity(self):
+        from repro.kernels.fused_sw import ops as fops
+        x, labels, _, _ = _study(30, d=16, seed=17)
+        xp = jnp.asarray(x)
+        inv = permutations.inv_group_sizes(jnp.asarray(labels), G)
+        gperms = permutations.permutation_batch(
+            jax.random.key(2), jnp.asarray(labels), 0, 6)
+        kw = dict(metric="euclidean", tile_r=16, tile_c=16, feat_block=8,
+                  perm_block=2)
+        sw32, rs32 = fops.fused_sw_rows(xp, xp, gperms, gperms, inv, 0,
+                                        **kw)
+        sw16, rs16 = fops.fused_sw_rows(xp, xp, gperms, gperms, inv, 0,
+                                        feat_bf16=1, **kw)
+        np.testing.assert_allclose(np.asarray(sw16), np.asarray(sw32),
+                                   rtol=2e-2)
+        np.testing.assert_allclose(np.asarray(rs16), np.asarray(rs32),
+                                   rtol=2e-2)
+
+    def test_planner_toggle_flows_into_fused_tuning(self):
+        pl = pipeline.plan_pipeline(
+            512, 64, 100, G, metric="euclidean",
+            materialize="fused-kernel", fused_impl="pallas",
+            fused_tuning={"feat_bf16": 1})
+        assert pl.fused_tuning["feat_bf16"] == 1
+        # default off
+        pl0 = pipeline.plan_pipeline(
+            512, 64, 100, G, metric="euclidean",
+            materialize="fused-kernel", fused_impl="pallas")
+        assert pl0.fused_tuning["feat_bf16"] == 0

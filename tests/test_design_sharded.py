@@ -1,0 +1,95 @@
+"""Sharded multi-study DESIGN path: bit-equality between the forced
+8-device CPU mesh and the single-host vmap for covariate + strata +
+weighted designs (stacked, non-divisible, and ragged study lists) — the
+acceptance criterion `sharded == single-host bit-identical with strata=`.
+"""
+
+import pytest
+
+MULTI_DEVICE_DESIGN = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import engine, pipeline
+from repro.launch.mesh import make_mesh
+
+G = 4
+def mk(n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)).astype(np.float32)
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0.0)
+    g = rng.integers(0, G, size=n).astype(np.int32)
+    g[:G] = np.arange(G)
+    cov = rng.normal(size=(n, 2))
+    st = rng.integers(0, 3, size=n).astype(np.int32)
+    st[:3] = np.arange(3)
+    w = rng.gamma(4.0, 0.25, size=n)
+    return d, g, cov, st, w
+
+assert len(jax.devices()) == 8, jax.devices()
+key = jax.random.key(23)
+
+def assert_many_equal(got, ref, tag):
+    assert np.array_equal(np.asarray(got.f_perms), np.asarray(ref.f_perms)), tag
+    assert np.array_equal(np.asarray(got.p_value), np.asarray(ref.p_value)), tag
+    assert np.array_equal(np.asarray(got.s_t), np.asarray(ref.s_t)), tag
+    for tg, tr in zip(got.terms, ref.terms):
+        assert np.array_equal(np.asarray(tg.f_perms), np.asarray(tr.f_perms)), (tag, tg.name)
+        assert np.array_equal(np.asarray(tg.p_value), np.asarray(tr.p_value)), (tag, tg.name)
+
+# --- stacked S=6 (divisible by 2, padded on 4/8), covariates + strata ---
+S = 6
+studies = [mk(21, seed=s) for s in range(S)]
+dms = np.stack([s[0] for s in studies]); grps = np.stack([s[1] for s in studies])
+covs = np.stack([s[2] for s in studies]); sts = np.stack([s[3] for s in studies])
+ws = np.stack([s[4] for s in studies])
+kw = dict(n_groups=G, n_perms=49, key=key, covariates=covs, strata=sts, weights=ws)
+ref = engine.permanova_many(dms, grps, **kw)
+for shape in ((2, 4), (4, 2), (8, 1)):
+    mesh = make_mesh(shape, ("data", "model"))
+    got = engine.permanova_many(dms, grps, mesh=mesh, **kw)
+    assert f"data[{shape[0]}]" in got.plan, got.plan
+    assert_many_equal(got, ref, shape)
+print("OK stacked")
+
+# --- ragged list (5 studies: not divisible by 2 or 8) ---
+sizes = (14, 23, 17, 21, 9)
+rag = [mk(m, seed=70 + i) for i, m in enumerate(sizes)]
+kwr = dict(n_groups=G, n_perms=49, key=key,
+           covariates=[s[2] for s in rag], strata=[s[3] for s in rag])
+refr = engine.permanova_many([s[0] for s in rag], [s[1] for s in rag], **kwr)
+for shape in ((8, 1), (2, 4)):
+    mesh = make_mesh(shape, ("data", "model"))
+    gotr = engine.permanova_many([s[0] for s in rag], [s[1] for s in rag],
+                                 mesh=mesh, **kwr)
+    assert_many_equal(gotr, refr, shape)
+print("OK ragged")
+
+# --- pipeline_many fused-kernel design sweep over 'data' ---
+rng = np.random.default_rng(99)
+S2, n2, d2 = 4, 24, 8
+xs = rng.gamma(1.0, 1.0, size=(S2, n2, d2)).astype(np.float32)
+gs = rng.integers(0, G, size=(S2, n2)).astype(np.int32); gs[:, :G] = np.arange(G)
+cv = rng.normal(size=(S2, n2, 2))
+stv = np.tile((np.arange(n2) % 3).astype(np.int32), (S2, 1))
+kwp = dict(n_groups=G, metric="braycurtis", n_perms=29, key=key,
+           covariates=cv, strata=stv, materialize="fused-kernel")
+refp = pipeline.pipeline_many(xs, gs, **kwp)
+mesh = make_mesh((4, 2), ("data", "model"))
+gotp = pipeline.pipeline_many(xs, gs, mesh=mesh, **kwp)
+assert "data[4]" in gotp.plan, gotp.plan
+assert_many_equal(gotp, refp, "pipeline_many")
+print("OK pipeline_many")
+"""
+
+
+@pytest.mark.multidevice
+def test_sharded_design_many_matches_single_host():
+    """Per-term F/p bit-equality between the 8-device 'data'-sharded
+    design program and the single-host vmap, with strata-restricted
+    permutations and weighted designs, stacked and ragged."""
+    from conftest import run_subprocess
+    out = run_subprocess(MULTI_DEVICE_DESIGN, devices=8, timeout=900)
+    assert "OK stacked" in out
+    assert "OK ragged" in out
+    assert "OK pipeline_many" in out
