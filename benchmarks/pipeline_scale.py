@@ -57,6 +57,42 @@ def run(emit):
              f"n={n} perms={perms} perms_s={perms/t:.0f} "
              f"p={float(res.p_value):.3f}")
 
+    # precision knobs on the fused-kernel sweep: measured wall-clock per
+    # feature-slab precision plus the kernel-path traffic model columns
+    # (feat_bytes_mib is the Pallas megakernel's predicted feature-slab HBM
+    # bytes per permutation chunk at this precision — the knob's whole
+    # point; off-TPU the measured path is the XLA value-parity sweep, so
+    # the wall-clock tracks quantization cost, not the traffic win)
+    prec_cases = [("braycurtis", "f32"), ("braycurtis", "bf16"),
+                  ("braycurtis", "fp8"), ("jaccard", "f32"),
+                  ("jaccard", "packed")]
+    perms_p = 99
+    for metric_p, tag in prec_cases:
+        ptuning = pipeline.registry.precision_tuning(tag)
+
+        def go_p():
+            r = pipeline.pipeline(x, grouping, metric=metric_p,
+                                  n_perms=perms_p,
+                                  materialize="fused-kernel",
+                                  fused_tuning=ptuning,
+                                  key=jax.random.key(0))
+            jax.block_until_ready(r.f_perms)
+            return r
+        go_p()                                 # compile + warm
+        t0 = time.perf_counter()
+        res_p = go_p()
+        t = time.perf_counter() - t0
+        kspec = pipeline.get_fused(f"{metric_p}.fusedk.pallas")
+        feat_bytes = pipeline.registry.fused_feat_traffic_bytes(
+            kspec, n, d, {**dict(kspec.tuning), **ptuning})
+        emit(f"pipeline/prec_{metric_p}_{tag}", t * 1e6,
+             f"n={n} perms={perms_p} perms_s={perms_p/t:.0f} "
+             f"feat_mib={feat_bytes/2**20:.2f} "
+             f"p={float(res_p.p_value):.3f}",
+             extra={"precision": tag,
+                    "feat_bytes_mib": round(feat_bytes / 2**20, 3),
+                    "traffic_model": "pallas"})
+
     # fused-kernel smoke at scale (CI config): the single-pass sweep vs the
     # PR 2 fused bridge, WARM wall-clock (serving-relevant; compile paid
     # once), plus the peak-device-memory model columns — peak_mib must

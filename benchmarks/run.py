@@ -68,10 +68,14 @@ def main() -> None:
     for name in names:
         rows = []
 
-        def emit(row_name, us, derived, _rows=rows):
+        def emit(row_name, us, derived, extra=None, _rows=rows):
             print(f"{row_name},{us:.1f},{derived}")
-            _rows.append({"name": row_name, "us_per_call": round(us, 1),
-                          "derived": derived})
+            row = {"name": row_name, "us_per_call": round(us, 1),
+                   "derived": derived}
+            if extra:
+                row.update(extra)   # machine-readable columns (precision,
+                                    # feat_bytes_mib, ...) for CI trending
+            _rows.append(row)
 
         t0 = time.time()
         ok = True

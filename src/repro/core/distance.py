@@ -73,6 +73,60 @@ def jaccard_rows(xb: Array, x: Array) -> Array:
     return 1.0 - inter / jnp.maximum(union, 1.0)
 
 
+# ---------------------------------------------------------------------------
+# Precision helpers: fp8 (e4m3) feature-slab quantization and packed-bit
+# presence words. These feed the fused megakernel's precision knobs
+# (feat_fp8 / feat_packed) and the XLA reference round-trips.
+# ---------------------------------------------------------------------------
+
+FP8_MAX = 448.0            # largest finite float8_e4m3fn magnitude
+
+
+def fp8_scale(xprep: Array) -> Array:
+    """Per-slab calibration scale so max|x|/scale hits the e4m3 range.
+
+    Computed ONCE on the prepared feature table (the megakernel driver
+    calls this before its chunk loop); a scalar f32."""
+    amax = jnp.max(jnp.abs(jnp.asarray(xprep, jnp.float32)))
+    return jnp.maximum(amax / FP8_MAX, 1e-12).astype(jnp.float32)
+
+
+def fp8_metric_scale(xprep: Array, metric: str) -> Array:
+    """Metric-aware calibration: presence/absence slabs (jaccard) are
+    {0, 1} — exact in fp8 at scale 1 — everything else calibrates to the
+    slab's max magnitude."""
+    if metric == "jaccard":
+        return jnp.float32(1.0)
+    return fp8_scale(xprep)
+
+
+def fp8_roundtrip(xprep: Array, scale: Array | None = None) -> Array:
+    """Quantize to float8_e4m3fn and dequantize back to f32 — the exact
+    value path the fp8 kernel sees (scale-down, cast, scale-up with fp32
+    accumulation). Used by the XLA ref/onepass paths for parity."""
+    x = jnp.asarray(xprep, jnp.float32)
+    s = fp8_scale(x) if scale is None else jnp.asarray(scale, jnp.float32)
+    q = (x / s).astype(jnp.float8_e4m3fn)
+    return q.astype(jnp.float32) * s
+
+
+def pack_presence_bits(xprep: Array) -> Array:
+    """Pack a presence/absence slab into uint32 words along features.
+
+    (n, d) floats -> (n, ceil(d/32)) uint32; bit k of word w is
+    1[x[:, 32*w + k] > 0]. Pad features are zero words, so popcount
+    tiles over padded word blocks stay exact. 32x feature-traffic cut."""
+    x = jnp.asarray(xprep)
+    n, d = x.shape
+    pad = (-d) % 32
+    bits = (x > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits.reshape(n, -1, 32) << shifts, axis=-1,
+                   dtype=jnp.uint32)
+
+
 class MetricDef(NamedTuple):
     """Factored metric: one-off feature transform + row-block kernel."""
     prepare: Callable[[Array], Array]

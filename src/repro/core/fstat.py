@@ -346,6 +346,61 @@ def sw_cols_block(mat2: Array, v: Array) -> Array:
     return sw_cols_contract(mat2, v, v)
 
 
+# ---------------------------------------------------------------------------
+# Block-sparse basis contraction: one-hot and strata-indicator bases are
+# block-sparse (each column's nonzeros live inside a few strata), and
+# strata-restricted permutations preserve that support — perms[p][i] stays
+# inside stratum(i), so v[p, i, k] can be nonzero only at rows whose
+# stratum belongs to column k's unpermuted strata support. That makes the
+# support a STATIC host-side property: gather the supported rows once and
+# skip every all-zero tile of the contraction.
+# ---------------------------------------------------------------------------
+
+def sparse_col_groups(basis, strata):
+    """Group basis columns by permutation-invariant row support.
+
+    Returns ((cols, rows), ...): `cols` are column indices sharing one
+    support set, `rows` the sorted sample indices whose stratum appears in
+    any of those columns' nonzeros. The groups partition the columns.
+    Host-side (numpy) — call once per design, outside jit."""
+    b = np.asarray(basis)
+    s = np.asarray(strata)
+    by_support: dict[frozenset, list[int]] = {}
+    for k in range(b.shape[1]):
+        nz = np.flatnonzero(b[:, k] != 0)
+        sup = frozenset(np.unique(s[nz]).tolist())
+        by_support.setdefault(sup, []).append(k)
+    groups = []
+    for sup, cols in sorted(by_support.items(), key=lambda t: t[1][0]):
+        rows = np.flatnonzero(np.isin(s, sorted(sup)))
+        groups.append((tuple(cols), tuple(int(r) for r in rows)))
+    return tuple(groups)
+
+
+def sw_cols_contract_sparse(mat2_rows: Array, v: Array, v_rows: Array,
+                            groups) -> Array:
+    """Block-sparse sw_cols_contract: contract each column group against
+    only its supported sample columns of mat2_rows.
+
+    Every skipped (row j, column k) term has v[p, j, k] == 0 exactly, so
+    each group's gathered contraction bit-matches the dense path (the
+    surviving addends keep their order; adding exact zeros is the
+    identity). With one group spanning all rows this degrades gracefully
+    to the dense contraction."""
+    p, n, k = v.shape
+    if len(groups) == 1 and len(groups[0][1]) == n:
+        return sw_cols_contract(mat2_rows, v, v_rows)
+    out = jnp.zeros((p, k), mat2_rows.dtype)
+    for cols, rows in groups:
+        cols_a = jnp.asarray(cols, jnp.int32)
+        rows_a = jnp.asarray(rows, jnp.int32)
+        sg = sw_cols_contract(mat2_rows[:, rows_a],
+                              v[:, rows_a][:, :, cols_a],
+                              v_rows[:, :, cols_a])
+        out = out.at[:, cols_a].set(sg)
+    return out
+
+
 def _scan_v_blocks(one_fn: Callable, mat2, vperms: Array, block: int):
     p = vperms.shape[0]
     block = min(block, p)

@@ -189,6 +189,22 @@ _PERSIST: Optional[Dict[str, dict]] = None   # lazy-loaded disk cache
 _DIRTY: set = set()                          # keys THIS process measured
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
+# Entry schema for the dist|/fusedk| key families. Schema 2 adds the
+# precision knobs (feat_bf16/feat_fp8/feat_packed) to the fused cache
+# keys and tuning payloads; pre-PR6 entries carry no schema field and
+# could silently pin fp32 tile shapes onto fp8/packed runs, so they are
+# dropped on load (migrate-or-drop). The s_W shoot-out keys
+# ('<backend>|n..|g..') predate and outlive the schema — they are kept.
+CACHE_SCHEMA = 2
+
+
+def _valid_entry(key: str, val) -> bool:
+    if not (isinstance(val, dict) and "impl" in val):
+        return False
+    if key.startswith(("dist|", "fusedk|")):
+        return val.get("schema") == CACHE_SCHEMA
+    return True
+
 
 def _bucket(n: int) -> int:
     """Shape bucket: next power of two (timings are stable within one)."""
@@ -225,10 +241,14 @@ def measured_entry(key: str) -> Optional[dict]:
 def record_entry(key: str, entry: dict) -> None:
     """Persist one measurement under an arbitrary domain key.
 
-    `entry` must carry an 'impl' field (the load/save filters key on it).
+    `entry` must carry an 'impl' field (the load/save filters key on it);
+    dist|/fusedk| entries are stamped with the current CACHE_SCHEMA so
+    stale-schema entries from older code are dropped on load.
     Same merge-on-save/best-effort semantics as the s_W autotune path."""
     if "impl" not in entry:
         raise ValueError("autotune cache entries must carry an 'impl' field")
+    entry = dict(entry)
+    entry.setdefault("schema", CACHE_SCHEMA)
     cache = load_autotune_cache()   # BEFORE marking dirty: the first load
     _DIRTY.add(key)                 # in a process clears _DIRTY
     cache[key] = entry
@@ -249,7 +269,7 @@ def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
                 data = json.load(f)
             if isinstance(data, dict):
                 _PERSIST = {k: v for k, v in data.items()
-                            if isinstance(v, dict) and "impl" in v}
+                            if _valid_entry(k, v)}
         except (OSError, ValueError):  # corrupt/unreadable: measure afresh
             pass
     return _PERSIST
@@ -274,7 +294,7 @@ def _save_autotune_cache() -> None:
                     data = json.load(f)
                 if isinstance(data, dict):
                     on_disk = {k: v for k, v in data.items()
-                               if isinstance(v, dict) and "impl" in v}
+                               if _valid_entry(k, v)}
             except (OSError, ValueError):
                 pass
         ours = {k: v for k, v in _PERSIST.items() if k in _DIRTY}

@@ -131,6 +131,70 @@ def jaccard_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
     return out
 
 
+def _jaccard_packed_body(xr_ref, xc_ref, out_ref, inter_ref, card_ref, *,
+                         n_feat_blocks):
+    """Packed-bit jaccard tile: uint32 presence words, popcount forms.
+
+    The intersection/cardinality counts are exact integers (≤ d ≤ 2^24),
+    so their f32 accumulation is exact and the finalize arithmetic is
+    IDENTICAL to _jaccard_body's — the packed path is bit-identical to
+    the float matmul form while moving 32x fewer feature bytes."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        inter_ref[...] = jnp.zeros_like(inter_ref)
+        card_ref[...] = jnp.zeros_like(card_ref)
+
+    xr = xr_ref[...]                                # (TR, WB) uint32 words
+    xc = xc_ref[...]                                # (TC, WB)
+    inter = jnp.sum(                                # |A ∩ B| = popcount(AND)
+        jax.lax.population_count(xr[:, None, :] & xc[None, :, :]),
+        axis=-1).astype(jnp.float32)
+    inter_ref[...] += inter
+    card_r = jnp.sum(jax.lax.population_count(xr),
+                     axis=-1).astype(jnp.float32)
+    card_c = jnp.sum(jax.lax.population_count(xc),
+                     axis=-1).astype(jnp.float32)
+    card_ref[...] += card_r[:, None] + card_c[None, :]
+
+    @pl.when(k == n_feat_blocks - 1)
+    def _finish():
+        inter = inter_ref[...]
+        union = card_ref[...] - inter               # |A ∪ B|
+        out_ref[...] = 1.0 - inter / jnp.maximum(union, 1.0)
+
+
+def jaccard_packed_pallas(xr, xc, *, tile_r=128, tile_c=128, feat_block=128,
+                          interpret=True):
+    """xr/xc are (rows, words) uint32 packed presence slabs
+    (distance.pack_presence_bits); feat_block counts WORDS here."""
+    nr, d = xr.shape
+    nc = xc.shape[0]
+    grid = (nr // tile_r, nc // tile_c, d // feat_block)
+    kernel = functools.partial(_jaccard_packed_body, n_feat_blocks=grid[2])
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, feat_block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile_c, feat_block), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tile_r, tile_c), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # distances
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # intersection accum
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),  # cardinality accum
+        ],
+        interpret=interpret,
+    )(xr, xc)
+    return out
+
+
 def _euclidean_body(xr_ref, xc_ref, out_ref, acc_ref, *, n_feat_blocks):
     k = pl.program_id(2)
 

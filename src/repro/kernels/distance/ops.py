@@ -15,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import distance as _dist
 from repro.kernels.distance import kernel as _k
 
 _KERNELS = {
@@ -36,59 +37,90 @@ def _pick(v: int, cap: int) -> int:
     return max(t, 8)
 
 
+def _check_packed(metric, packed):
+    if packed and metric != "jaccard":
+        raise ValueError(
+            f"packed=1 requires metric='jaccard' (got {metric!r})")
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "tile_r", "tile_c",
-                                             "feat_block", "interpret"))
+                                             "feat_block", "packed",
+                                             "interpret"))
 def pairwise_distance(x, *, metric="braycurtis", tile_r=128, tile_c=128,
-                      feat_block=128, interpret: bool | None = None):
+                      feat_block=128, packed: int = 0,
+                      interpret: bool | None = None):
     """(n, n) distance matrix from (n, d) features via the Pallas kernels.
 
     Pads n/d to tile multiples; zero-padded features are exact for every
     metric (|0-0| = 0, zero presence bits intersect/union nothing; pad
     rows are sliced off). Jaccard expects presence/absence floats
     (distance.presence_prepare) — the registry's prepare supplies them.
+    packed=1 (jaccard only) packs presence into uint32 words and runs the
+    popcount tile body — bit-identical distances, 32x fewer feature bytes
+    (feat_block then counts words).
     """
     if interpret is None:
         interpret = not _on_tpu()
     if metric not in _KERNELS:
         raise ValueError(f"unknown metric {metric!r}")
-    n, d = x.shape
+    _check_packed(metric, packed)
+    n = x.shape[0]
+    if packed:
+        xq = _dist.pack_presence_bits(x)
+        kern = _k.jaccard_packed_pallas
+    else:
+        xq = x.astype(jnp.float32)
+        kern = _KERNELS[metric]
+    d = xq.shape[1]
     tile_r = _pick(n, tile_r)
     tile_c = _pick(n, tile_c)
     feat_block = _pick(d, feat_block)
     n_pad = (-n) % max(tile_r, tile_c)
     d_pad = (-d) % feat_block
-    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
-    out = _KERNELS[metric](xp, xp, tile_r=tile_r, tile_c=tile_c,
-                           feat_block=feat_block, interpret=interpret)
+    xp = jnp.pad(xq, ((0, n_pad), (0, d_pad)))
+    out = kern(xp, xp, tile_r=tile_r, tile_c=tile_c,
+               feat_block=feat_block, interpret=interpret)
     out = out[:n, :n]
     return out * (1.0 - jnp.eye(n, dtype=out.dtype))  # exact zero diagonal
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "tile_r", "tile_c",
-                                             "feat_block", "interpret"))
+                                             "feat_block", "packed",
+                                             "interpret"))
 def pairwise_distance_rows(x_rows, x, *, metric="braycurtis", tile_r=128,
-                           tile_c=128, feat_block=128,
+                           tile_c=128, feat_block=128, packed: int = 0,
                            interpret: bool | None = None):
     """(block, n) distances of a row slab against the full table.
 
     NOTE: no diagonal zeroing — the slab does not know its global row
     offset; the streaming consumer masks the (global_row == col) entries
     (repro.pipeline.streaming does this while squaring into D²).
+    packed=1: as in pairwise_distance (jaccard popcount word slabs).
     """
     if interpret is None:
         interpret = not _on_tpu()
     if metric not in _KERNELS:
         raise ValueError(f"unknown metric {metric!r}")
-    b, d = x_rows.shape
+    _check_packed(metric, packed)
+    b = x_rows.shape[0]
     n = x.shape[0]
+    if packed:
+        xr_q = _dist.pack_presence_bits(x_rows)
+        xc_q = _dist.pack_presence_bits(x)
+        kern = _k.jaccard_packed_pallas
+    else:
+        xr_q = x_rows.astype(jnp.float32)
+        xc_q = x.astype(jnp.float32)
+        kern = _KERNELS[metric]
+    d = xr_q.shape[1]
     tile_r = _pick(b, tile_r)
     tile_c = _pick(n, tile_c)
     feat_block = _pick(d, feat_block)
     b_pad = (-b) % tile_r
     n_pad = (-n) % tile_c
     d_pad = (-d) % feat_block
-    xr = jnp.pad(x_rows.astype(jnp.float32), ((0, b_pad), (0, d_pad)))
-    xc = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
-    out = _KERNELS[metric](xr, xc, tile_r=tile_r, tile_c=tile_c,
-                           feat_block=feat_block, interpret=interpret)
+    xr = jnp.pad(xr_q, ((0, b_pad), (0, d_pad)))
+    xc = jnp.pad(xc_q, ((0, n_pad), (0, d_pad)))
+    out = kern(xr, xc, tile_r=tile_r, tile_c=tile_c,
+               feat_block=feat_block, interpret=interpret)
     return out[:b, :n]

@@ -49,13 +49,41 @@ from jax.experimental.pallas import tpu as pltpu
 FUSED_METRICS = ("euclidean", "braycurtis", "jaccard")
 
 
-def _accumulate(metric, xr, xc, a_ref, b_ref):
+FEAT_MODES = ("dense", "fp8", "packed")
+
+
+def _accumulate(metric, feat_mode, scale, xr, xc, a_ref, b_ref):
     """One feature block's contribution to the metric's running sums.
 
-    xr/xc may arrive as bf16 slabs (the feat_dtype option halves HBM
-    feature traffic): the MXU dot_generals consume them directly with
-    fp32 accumulation, while elementwise paths cast up first — the
-    accumulators are always fp32."""
+    feat_mode selects the slab representation (static — each variant
+    traces its own body):
+
+      dense   f32 or bf16 slabs; MXU dot_generals consume them directly
+              with fp32 accumulation, elementwise paths cast up first
+      fp8     float8_e4m3fn slabs + one SMEM calibration scalar; tiles
+              are dequantized in-register (cast-up x scale) so the
+              running sums stay in real units with fp32 accumulation
+      packed  uint32 presence words (jaccard only); |A∩B| via
+              popcount(AND) and cardinalities via popcount row sums —
+              exact integer counts, bit-identical to the f32 matmul form
+
+    The accumulators are always fp32."""
+    if feat_mode == "packed":
+        if metric != "jaccard":  # pragma: no cover - ops validates
+            raise ValueError("packed slabs require the jaccard body")
+        inter = jnp.sum(
+            jax.lax.population_count(xr[:, None, :] & xc[None, :, :]),
+            axis=-1).astype(jnp.float32)
+        card_r = jnp.sum(jax.lax.population_count(xr),
+                         axis=-1).astype(jnp.float32)
+        card_c = jnp.sum(jax.lax.population_count(xc),
+                         axis=-1).astype(jnp.float32)
+        a_ref[...] += inter
+        b_ref[...] += card_r[:, None] + card_c[None, :]
+        return
+    if feat_mode == "fp8":
+        xr = xr.astype(jnp.float32) * scale
+        xc = xc.astype(jnp.float32) * scale
     xr32 = xr if xr.dtype == jnp.float32 else xr.astype(jnp.float32)
     xc32 = xc if xc.dtype == jnp.float32 else xc.astype(jnp.float32)
     if metric == "euclidean":
@@ -92,10 +120,10 @@ def _finalize_d2(metric, a, b):
     return d * d
 
 
-def _fused_sw_body(off_ref, xr_ref, xc_ref, g_row_ref, g_col_ref, sqrtw_ref,
-                   o_sw_ref, o_rs_ref, a_ref, b_ref, d2_ref, sw_ref, *,
-                   metric, nk, npb, nti, ntj, tile_r, tile_c, n_valid,
-                   nr_valid, n_groups):
+def _fused_sw_body(off_ref, scale_ref, xr_ref, xc_ref, g_row_ref, g_col_ref,
+                   sqrtw_ref, o_sw_ref, o_rs_ref, a_ref, b_ref, d2_ref,
+                   sw_ref, *, metric, feat_mode, nk, npb, nti, ntj, tile_r,
+                   tile_c, n_valid, nr_valid, n_groups):
     i = pl.program_id(0)
     j = pl.program_id(1)
     t = pl.program_id(2)
@@ -111,7 +139,8 @@ def _fused_sw_body(off_ref, xr_ref, xc_ref, g_row_ref, g_col_ref, sqrtw_ref,
 
     @pl.when(t < nk)
     def _feature_phase():
-        _accumulate(metric, xr_ref[...], xc_ref[...], a_ref, b_ref)
+        _accumulate(metric, feat_mode, scale_ref[0, 0], xr_ref[...],
+                    xc_ref[...], a_ref, b_ref)
 
     @pl.when(t == nk - 1)
     def _finalize():
@@ -163,20 +192,28 @@ def _fused_sw_body(off_ref, xr_ref, xc_ref, g_row_ref, g_col_ref, sqrtw_ref,
 
 def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
                     metric, n_valid, nr_valid, tile_r=128, tile_c=128,
-                    feat_block=128, perm_block=16, interpret=True):
+                    feat_block=128, perm_block=16, feat_mode="dense",
+                    feat_scale=None, interpret=True):
     """Launch the megakernel over pre-padded operands.
 
     row_offset: (1, 1) int32 — global index of xr's first row (traced OK).
-    xr:      (nr_pad, d_pad) f32 prepared row-slab features.
-    xc:      (nc_pad, d_pad) f32 prepared full feature table.
+    xr:      (nr_pad, d_pad) prepared row-slab features (f32/bf16 dense,
+             float8_e4m3fn for feat_mode='fp8', uint32 words for 'packed').
+    xc:      (nc_pad, d_pad) prepared full feature table (same dtype).
     g_rows:  (p_pad, nr_pad) int32 permuted labels at the slab's rows.
     g_cols:  (p_pad, nc_pad) int32 permuted labels over all samples.
     sqrt_w:  (1, G) f32 sqrt(inv_group_sizes).
+    feat_scale: (1, 1) f32 fp8 calibration scalar (ignored otherwise).
     Returns (s_W (p_pad,) f32, row_sums (nr_pad,) f32) — pad entries zero.
     """
     if metric not in FUSED_METRICS:
         raise ValueError(f"unknown fused metric {metric!r}; "
                          f"one of {FUSED_METRICS}")
+    if feat_mode not in FEAT_MODES:
+        raise ValueError(f"unknown feat_mode {feat_mode!r}; "
+                         f"one of {FEAT_MODES}")
+    if feat_scale is None:
+        feat_scale = jnp.ones((1, 1), jnp.float32)
     nr, d = xr.shape
     nc = xc.shape[0]
     p_pad = g_cols.shape[0]
@@ -184,13 +221,14 @@ def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
     nti, ntj = nr // tile_r, nc // tile_c
     nk, npb = d // feat_block, p_pad // perm_block
     kernel = functools.partial(
-        _fused_sw_body, metric=metric, nk=nk, npb=npb, nti=nti, ntj=ntj,
-        tile_r=tile_r, tile_c=tile_c, n_valid=n_valid, nr_valid=nr_valid,
-        n_groups=n_groups)
+        _fused_sw_body, metric=metric, feat_mode=feat_mode, nk=nk, npb=npb,
+        nti=nti, ntj=ntj, tile_r=tile_r, tile_c=tile_c, n_valid=n_valid,
+        nr_valid=nr_valid, n_groups=n_groups)
     out_sw, out_rs = pl.pallas_call(
         kernel,
         grid=(nti, ntj, nk + npb),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((tile_r, feat_block),
                          lambda i, j, t: (i, jnp.minimum(t, nk - 1))),
@@ -217,7 +255,7 @@ def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
             pltpu.VMEM((npb, perm_block), jnp.float32),  # s_W accumulator
         ],
         interpret=interpret,
-    )(row_offset, xr, xc, g_rows, g_cols, sqrt_w)
+    )(row_offset, feat_scale, xr, xc, g_rows, g_cols, sqrt_w)
     return out_sw.reshape(-1), out_rs[0]
 
 
@@ -229,13 +267,18 @@ def fused_sw_pallas(row_offset, xr, xc, g_rows, g_cols, sqrt_w, *,
 # slice per-term partial statistics.
 # ---------------------------------------------------------------------------
 
-def _fused_sw_cols_body(off_ref, xr_ref, xc_ref, vr_ref, vc_ref,
+def _fused_sw_cols_body(off_ref, scale_ref, xr_ref, xc_ref, vr_ref, vc_ref,
                         o_sw_ref, o_rs_ref, a_ref, b_ref, d2_ref, sw_ref, *,
-                        metric, nk, npb, nti, ntj, tile_r, tile_c, n_valid,
-                        nr_valid, k_cols):
+                        metric, feat_mode, nk, npb, nti, ntj, tile_r, tile_c,
+                        n_valid, nr_valid, k_cols):
     i = pl.program_id(0)
     j = pl.program_id(1)
     t = pl.program_id(2)
+    # Sharded row slabs can end with fully-dead tiles (every global row
+    # past n_valid): skip their feature accumulation and perm contraction
+    # entirely. Finalize still runs — a/b are zero-initialized and the
+    # validity mask zeroes the whole tile, so the banked row sums stay 0.
+    row_live = off_ref[0, 0] + i * tile_r < n_valid
 
     @pl.when((i == 0) & (j == 0) & (t == 0))
     def _init_sw():
@@ -246,9 +289,10 @@ def _fused_sw_cols_body(off_ref, xr_ref, xc_ref, vr_ref, vc_ref,
         a_ref[...] = jnp.zeros_like(a_ref)
         b_ref[...] = jnp.zeros_like(b_ref)
 
-    @pl.when(t < nk)
+    @pl.when((t < nk) & row_live)
     def _feature_phase():
-        _accumulate(metric, xr_ref[...], xc_ref[...], a_ref, b_ref)
+        _accumulate(metric, feat_mode, scale_ref[0, 0], xr_ref[...],
+                    xc_ref[...], a_ref, b_ref)
 
     @pl.when(t == nk - 1)
     def _finalize():
@@ -273,7 +317,7 @@ def _fused_sw_cols_body(off_ref, xr_ref, xc_ref, vr_ref, vc_ref,
         def _rs_acc():
             o_rs_ref[...] += rs
 
-    @pl.when(t >= nk)
+    @pl.when((t >= nk) & row_live)
     def _perm_phase():
         pb = t - nk
         v_r = vr_ref[...]                               # (PB, TR, K)
@@ -293,17 +337,24 @@ def _fused_sw_cols_body(off_ref, xr_ref, xc_ref, vr_ref, vc_ref,
 
 def fused_sw_cols_pallas(row_offset, xr, xc, v_rows, v_cols, *,
                          metric, n_valid, nr_valid, tile_r=128, tile_c=128,
-                         feat_block=128, perm_block=16, interpret=True):
+                         feat_block=128, perm_block=16, feat_mode="dense",
+                         feat_scale=None, interpret=True):
     """Launch the dense-design megakernel over pre-padded operands.
 
     v_rows: (p_pad, nr_pad, K) f32 permuted basis rows at the slab's rows.
     v_cols: (p_pad, nc_pad, K) f32 permuted basis over all samples.
+    feat_mode/feat_scale: slab precision, as in fused_sw_pallas.
     Returns (s_cols (p_pad, K) f32 per-column partials, row_sums
     (nr_pad,) f32) — pad entries zero (zero basis rows/cols contribute
     exactly nothing, which is what keeps ragged studies bit-exact)."""
     if metric not in FUSED_METRICS:
         raise ValueError(f"unknown fused metric {metric!r}; "
                          f"one of {FUSED_METRICS}")
+    if feat_mode not in FEAT_MODES:
+        raise ValueError(f"unknown feat_mode {feat_mode!r}; "
+                         f"one of {FEAT_MODES}")
+    if feat_scale is None:
+        feat_scale = jnp.ones((1, 1), jnp.float32)
     nr, d = xr.shape
     nc = xc.shape[0]
     p_pad = v_cols.shape[0]
@@ -311,13 +362,14 @@ def fused_sw_cols_pallas(row_offset, xr, xc, v_rows, v_cols, *,
     nti, ntj = nr // tile_r, nc // tile_c
     nk, npb = d // feat_block, p_pad // perm_block
     kernel = functools.partial(
-        _fused_sw_cols_body, metric=metric, nk=nk, npb=npb, nti=nti,
-        ntj=ntj, tile_r=tile_r, tile_c=tile_c, n_valid=n_valid,
-        nr_valid=nr_valid, k_cols=k_cols)
+        _fused_sw_cols_body, metric=metric, feat_mode=feat_mode, nk=nk,
+        npb=npb, nti=nti, ntj=ntj, tile_r=tile_r, tile_c=tile_c,
+        n_valid=n_valid, nr_valid=nr_valid, k_cols=k_cols)
     out_sw, out_rs = pl.pallas_call(
         kernel,
         grid=(nti, ntj, nk + npb),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((tile_r, feat_block),
                          lambda i, j, t: (i, jnp.minimum(t, nk - 1))),
@@ -346,5 +398,5 @@ def fused_sw_cols_pallas(row_offset, xr, xc, v_rows, v_cols, *,
             pltpu.VMEM((npb, perm_block, k_cols), jnp.float32),  # s_cols
         ],
         interpret=interpret,
-    )(row_offset, xr, xc, v_rows, v_cols)
+    )(row_offset, feat_scale, xr, xc, v_rows, v_cols)
     return out_sw.reshape(-1, k_cols), out_rs[0]

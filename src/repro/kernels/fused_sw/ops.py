@@ -33,12 +33,51 @@ def _pick(v: int, cap: int) -> int:
     return max(t, 8)
 
 
+def _feature_mode(metric, feat_bf16, feat_fp8, feat_packed) -> str:
+    """Resolve the precision knobs to a kernel feat_mode (validating)."""
+    if int(bool(feat_bf16)) + int(bool(feat_fp8)) + int(bool(feat_packed)) \
+            > 1:
+        raise ValueError(
+            "feat_bf16 / feat_fp8 / feat_packed are mutually exclusive")
+    if feat_packed:
+        if metric != "jaccard":
+            raise ValueError(
+                "feat_packed=1 requires the jaccard kernel body "
+                f"(got metric={metric!r})")
+        return "packed"
+    return "fp8" if feat_fp8 else "dense"
+
+
+def _quantize_slabs(x_rows, x, metric, mode, feat_bf16, feat_scale):
+    """Represent the prepared slabs at the requested precision.
+
+    Returns (xr, xc, scale (1,1) f32). packed -> uint32 presence words
+    (feature axis becomes words); fp8 -> float8_e4m3fn at the calibration
+    scale (computed from the FULL table when not supplied, so every row
+    slab of one study quantizes identically); dense -> f32/bf16."""
+    from repro.core import distance as _dist
+    if mode == "packed":
+        return (_dist.pack_presence_bits(x_rows),
+                _dist.pack_presence_bits(x),
+                jnp.ones((1, 1), jnp.float32))
+    if mode == "fp8":
+        s = (_dist.fp8_metric_scale(x, metric) if feat_scale is None
+             else jnp.asarray(feat_scale, jnp.float32))
+        s = jnp.reshape(s, ())
+        xr = (x_rows.astype(jnp.float32) / s).astype(jnp.float8_e4m3fn)
+        xc = (x.astype(jnp.float32) / s).astype(jnp.float8_e4m3fn)
+        return xr, xc, s.reshape(1, 1)
+    dt = jnp.bfloat16 if feat_bf16 else jnp.float32
+    return x_rows.astype(dt), x.astype(dt), jnp.ones((1, 1), jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "metric", "n_valid", "tile_r", "tile_c", "feat_block", "perm_block",
-    "feat_bf16", "interpret"))
+    "feat_bf16", "feat_fp8", "feat_packed", "interpret"))
 def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
                   metric="braycurtis", n_valid=None, tile_r=128, tile_c=128,
                   feat_block=128, perm_block=16, feat_bf16: int = 0,
+                  feat_fp8: int = 0, feat_packed: int = 0, feat_scale=None,
                   interpret: bool | None = None):
     """Fused s_W partial for one (row slab × permutation chunk) cell.
 
@@ -49,20 +88,36 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
     inv_gs:   (G,) f32 inverse group sizes.
     row_offset: scalar global index of x_rows[0] (python int or traced).
     n_valid:  global sample count n (pad masking); defaults to x.shape[0].
-    feat_bf16: 1 = feed the kernel bf16 feature slabs (halves HBM feature
-              traffic; fp32 accumulation throughout — expect ~1e-2 rel
-              drift on the finished distances, the planner/autotune knob).
+
+    Precision knobs (the planner/autotune family; mutually exclusive):
+    feat_bf16:   1 = bf16 feature slabs — halves HBM feature traffic,
+                 fp32 accumulation; ~1e-2 rel drift on distances.
+    feat_fp8:    1 = float8_e4m3fn slabs — quarters feature traffic.
+                 Slabs are scaled by one per-study calibration scalar
+                 (max|x|/448, computed once during prepare or passed as
+                 feat_scale) and dequantized in-register; fp32
+                 accumulation; ~1e-2 rel tolerance on F.
+    feat_packed: 1 = packed uint32 presence words (jaccard only) —
+                 32x feature-traffic cut, popcount tile bodies,
+                 bit-identical results to the f32 matmul form.
+    feat_scale:  optional traced f32 scalar pinning the fp8 calibration
+                 (drivers compute it once per study, not per chunk).
+
     Returns (s_W (P,) f32, row_sums (nr,) f32). Summing the partials over
     disjoint row slabs reconstructs the full-statistic / full row sums.
     """
     metric = KERNEL_METRIC.get(metric, metric)
+    mode = _feature_mode(metric, feat_bf16, feat_fp8, feat_packed)
     if interpret is None:
         interpret = not _on_tpu()
-    nr, d = x_rows.shape
+    nr = x_rows.shape[0]
     n = x.shape[0]
     p = g_cols.shape[0]
     if n_valid is None:
         n_valid = n
+    xr, xc, scale = _quantize_slabs(x_rows, x, metric, mode, feat_bf16,
+                                    feat_scale)
+    d = xr.shape[1]                      # words when packed, else features
     tile_r = _pick(nr, tile_r)
     tile_c = _pick(n, tile_c)
     feat_block = _pick(d, feat_block)
@@ -71,9 +126,8 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
     c_pad = (-n) % tile_c
     d_pad = (-d) % feat_block
     p_pad = (-p) % perm_block
-    feat_dtype = jnp.bfloat16 if feat_bf16 else jnp.float32
-    xr = jnp.pad(x_rows.astype(feat_dtype), ((0, r_pad), (0, d_pad)))
-    xc = jnp.pad(x.astype(feat_dtype), ((0, c_pad), (0, d_pad)))
+    xr = jnp.pad(xr, ((0, r_pad), (0, d_pad)))
+    xc = jnp.pad(xc, ((0, c_pad), (0, d_pad)))
     # pad labels with 0s (masked D² zeroes those tiles' contributions) and
     # perms edge-mode (excess results sliced off)
     gr = jnp.pad(g_rows, ((0, 0), (0, r_pad)))
@@ -86,17 +140,19 @@ def fused_sw_rows(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
     sw, rs = _k.fused_sw_pallas(
         off, xr, xc, gr, gc, sqrt_w, metric=metric, n_valid=int(n_valid),
         nr_valid=nr, tile_r=tile_r, tile_c=tile_c, feat_block=feat_block,
-        perm_block=perm_block, interpret=interpret)
+        perm_block=perm_block, feat_mode=mode, feat_scale=scale,
+        interpret=interpret)
     return sw[:p], rs[:nr]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "n_valid", "tile_r", "tile_c", "feat_block", "perm_block",
-    "feat_bf16", "interpret"))
+    "feat_bf16", "feat_fp8", "feat_packed", "interpret"))
 def fused_sw_rows_cols(x_rows, x, v_rows, v_cols, row_offset, *,
                        metric="braycurtis", n_valid=None, tile_r=128,
                        tile_c=128, feat_block=128, perm_block=16,
-                       feat_bf16: int = 0,
+                       feat_bf16: int = 0, feat_fp8: int = 0,
+                       feat_packed: int = 0, feat_scale=None,
                        interpret: bool | None = None):
     """Dense-design fused partial: per-COLUMN quadratic forms for one
     (row slab × permutation chunk) cell (core.design hat-matrix blocks
@@ -105,19 +161,25 @@ def fused_sw_rows_cols(x_rows, x, v_rows, v_cols, row_offset, *,
 
     v_rows: (P, nr, K) f32 permuted basis rows at the slab's GLOBAL rows.
     v_cols: (P, n, K) f32 permuted basis over all samples.
+    feat_bf16/feat_fp8/feat_packed/feat_scale: feature-slab precision
+    knobs, as documented on fused_sw_rows.
     Returns (s_cols (P, K) f32, row_sums (nr,) f32); summing partials
     over disjoint row slabs reconstructs the global per-column statistic.
     K is padded to a multiple of 8 lanes internally — zero basis columns
     contribute exactly zero and are sliced off.
     """
     metric = KERNEL_METRIC.get(metric, metric)
+    mode = _feature_mode(metric, feat_bf16, feat_fp8, feat_packed)
     if interpret is None:
         interpret = not _on_tpu()
-    nr, d = x_rows.shape
+    nr = x_rows.shape[0]
     n = x.shape[0]
     p, _, k = v_cols.shape
     if n_valid is None:
         n_valid = n
+    xr, xc, scale = _quantize_slabs(x_rows, x, metric, mode, feat_bf16,
+                                    feat_scale)
+    d = xr.shape[1]                      # words when packed, else features
     tile_r = _pick(nr, tile_r)
     tile_c = _pick(n, tile_c)
     feat_block = _pick(d, feat_block)
@@ -127,9 +189,8 @@ def fused_sw_rows_cols(x_rows, x, v_rows, v_cols, row_offset, *,
     d_pad = (-d) % feat_block
     p_pad = (-p) % perm_block
     k_pad = (-k) % 8
-    feat_dtype = jnp.bfloat16 if feat_bf16 else jnp.float32
-    xr = jnp.pad(x_rows.astype(feat_dtype), ((0, r_pad), (0, d_pad)))
-    xc = jnp.pad(x.astype(feat_dtype), ((0, c_pad), (0, d_pad)))
+    xr = jnp.pad(xr, ((0, r_pad), (0, d_pad)))
+    xc = jnp.pad(xc, ((0, c_pad), (0, d_pad)))
     vr = jnp.pad(v_rows.astype(jnp.float32),
                  ((0, 0), (0, r_pad), (0, k_pad)))
     vc = jnp.pad(v_cols.astype(jnp.float32),
@@ -141,5 +202,6 @@ def fused_sw_rows_cols(x_rows, x, v_rows, v_cols, row_offset, *,
     sc, rs = _k.fused_sw_cols_pallas(
         off, xr, xc, vr, vc, metric=metric, n_valid=int(n_valid),
         nr_valid=nr, tile_r=tile_r, tile_c=tile_c, feat_block=feat_block,
-        perm_block=perm_block, interpret=interpret)
+        perm_block=perm_block, feat_mode=mode, feat_scale=scale,
+        interpret=interpret)
     return sc[:p, :k], rs[:nr]

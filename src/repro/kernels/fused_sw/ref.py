@@ -19,15 +19,34 @@ ROWS_FNS = {"euclidean": _dist.euclidean_rows,
 
 
 def fused_sw_ref(x_rows, x, g_rows, g_cols, inv_gs, row_offset, *,
-                 metric="braycurtis", n_valid=None):
-    """(s_W (P,), row_sums (nr,)) for one row slab — the test oracle."""
+                 metric="braycurtis", n_valid=None, feat_bf16=0, feat_fp8=0,
+                 feat_packed=0, feat_scale=None):
+    """(s_W (P,), row_sums (nr,)) for one row slab — the test oracle.
+
+    The precision knobs mirror ops.fused_sw_rows by ROUND-TRIPPING the
+    prepared features through the kernel's representation before the
+    dense math: bf16/fp8 quantize-dequantize, packed is an exact no-op
+    on presence data (the float matmul over round-tripped presence
+    features IS the bit-exact packed oracle)."""
     metric = {"aitchison": "euclidean"}.get(metric, metric)
     nr = x_rows.shape[0]
     n = x.shape[0]
     if n_valid is None:
         n_valid = n
-    d = ROWS_FNS[metric](jnp.asarray(x_rows, jnp.float32),
-                         jnp.asarray(x, jnp.float32))
+    xr = jnp.asarray(x_rows, jnp.float32)
+    xc = jnp.asarray(x, jnp.float32)
+    if feat_bf16:
+        xr = xr.astype(jnp.bfloat16).astype(jnp.float32)
+        xc = xc.astype(jnp.bfloat16).astype(jnp.float32)
+    elif feat_fp8:
+        s = (_dist.fp8_metric_scale(xc, metric) if feat_scale is None
+             else feat_scale)
+        xr = _dist.fp8_roundtrip(xr, s)
+        xc = _dist.fp8_roundtrip(xc, s)
+    elif feat_packed:
+        xr = (xr > 0).astype(jnp.float32)
+        xc = (xc > 0).astype(jnp.float32)
+    d = ROWS_FNS[metric](xr, xc)
     rows_g = row_offset + jnp.arange(nr)[:, None]
     cols_g = jnp.arange(n)[None, :]
     valid = (rows_g < n_valid) & (cols_g < n_valid) & (rows_g != cols_g)

@@ -76,6 +76,14 @@ def main():
                     help="fused-kernel implementation: the Pallas "
                          "megakernel (TPU; interpret mode elsewhere) or "
                          "the one-jit XLA sweep")
+    ap.add_argument("--feat-precision", default="f32",
+                    choices=list(pipeline.registry.PRECISIONS),
+                    help="feature-slab storage for the fused-kernel "
+                         "sweep: f32, bf16, fp8 (e4m3 + per-metric scale, "
+                         "f32 accumulation), or packed (jaccard only: "
+                         "presence bits in uint32 words, popcount tiles — "
+                         "bit-identical F at 32x fewer feature bytes); "
+                         "implies --materialize fused-kernel when not f32")
     ap.add_argument("--shard-rows", type=int, default=None, metavar="N",
                     help="run the fused-kernel sweep over an N-way 'model' "
                          "mesh axis (row slabs sharded, partials psum-"
@@ -141,6 +149,16 @@ def main():
             args.samples, covariate_names=cov_names, n_strata=n_strata,
             weighted=args.weights, seed=args.seed)
 
+    fused_tuning = None
+    if args.feat_precision != "f32":
+        # the precision knobs live on the fused-kernel sweep; route there
+        if args.materialize not in ("auto", "fused-kernel"):
+            ap.error("--feat-precision applies to the fused-kernel sweep; "
+                     "drop --materialize or set it to fused-kernel")
+        args.materialize = "fused-kernel"
+        fused_tuning = pipeline.registry.precision_tuning(
+            args.feat_precision)
+
     if args.from_features or args.materialize != "auto" \
             or args.dist_impl != "auto" or args.shard_rows is not None \
             or args.pcoa is not None or design_path:
@@ -162,8 +180,8 @@ def main():
             n_perms=args.perms, key=jax.random.key(args.seed),
             dist_impl=args.dist_impl, sw_impl=impl,
             materialize=args.materialize, chunk=args.chunk,
-            fused_impl=args.fused_impl, mesh=mesh,
-            ordination=args.pcoa,
+            fused_impl=args.fused_impl, fused_tuning=fused_tuning,
+            mesh=mesh, ordination=args.pcoa,
             covariates=covariates, strata=strata, weights=weights,
             memory_budget_bytes=budget, autotune=args.autotune)
         jax.block_until_ready(res.f_perms)

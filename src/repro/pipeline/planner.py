@@ -70,6 +70,36 @@ class PipelinePlan:
     fused_impl: Optional[str] = None      # fused registry name when the
                                           # bridge is 'fused-kernel'
     fused_tuning: Dict[str, int] = dataclasses.field(default_factory=dict)
+    n: int = 0                            # problem shape (for explain())
+    d: int = 0
+    n_groups: int = 0
+
+    def explain(self) -> str:
+        """describe() plus the precision-aware memory-traffic model: the
+        predicted feature-slab HBM bytes and peak workset per precision
+        choice for the planned fused impl, with the planned one marked."""
+        lines = [self.describe()]
+        if self.materialize != "fused-kernel" or not self.fused_impl \
+                or not self.n:
+            return "\n".join(lines)
+        spec = _dreg.get_fused(self.fused_impl)
+        planned = _dreg.precision_tag(self.fused_tuning)
+        lines.append(
+            f"predicted feature-slab HBM traffic per permutation chunk "
+            f"(n={self.n}, d={self.d}, {spec.kind} kind):")
+        for tag in _dreg.PRECISIONS:
+            if tag == "packed" and spec.kernel_metric != "jaccard":
+                continue
+            t = {**self.fused_tuning, **_dreg.precision_tuning(tag)}
+            traffic = _dreg.fused_feat_traffic_bytes(
+                spec, self.n, self.d, t, self.row_block)
+            workset = _dreg.fused_workset_bytes(
+                spec, self.n, self.d, self.sw.chunk, self.n_groups,
+                self.row_block, t)
+            mark = "  <- planned" if tag == planned else ""
+            lines.append(f"  {tag:>6}: {traffic/2**20:9.2f} MiB feat "
+                         f"traffic, {workset/2**20:8.3f} MiB workset{mark}")
+        return "\n".join(lines)
 
     def describe_stage1(self) -> str:
         """Stage 1 + bridge only — what the pipeline itself executes. The
@@ -144,10 +174,13 @@ def _pick_materialize(n: int, matrix_budget: float, metric: str):
     return "fused", (f"{why}; fuse row slabs into the permutation sweep")
 
 
-def _pick_fused_impl(metric: str, backend: str, n: int) -> Tuple[str, str]:
-    """Fused-kernel impl: persisted shoot-out winner, else the Pallas
-    megakernel on TPU and the one-jit XLA sweep everywhere else."""
-    measured = measured_fused(backend, metric, n)
+def _pick_fused_impl(metric: str, backend: str, n: int,
+                     tuning: Optional[Dict[str, int]] = None
+                     ) -> Tuple[str, str]:
+    """Fused-kernel impl: persisted shoot-out winner (at the requested
+    precision), else the Pallas megakernel on TPU and the one-jit XLA
+    sweep everywhere else."""
+    measured = measured_fused(backend, metric, n, tuning)
     if measured is not None:
         return measured, "persisted fused-kernel autotune measurement"
     pallas = _dreg.fused_names(metric=metric, kind="pallas")
@@ -277,7 +310,8 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     f_tuning: Dict[str, int] = {}
     if mat == "fused-kernel":
         if fused_impl in (None, "auto"):
-            f_impl, freason = _pick_fused_impl(metric, backend, n)
+            f_impl, freason = _pick_fused_impl(metric, backend, n,
+                                               fused_tuning)
         else:
             f_impl = (fused_impl if "." in fused_impl
                       else f"{metric}.fusedk.{fused_impl}")
@@ -286,14 +320,19 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
         if fspec.metric != metric:
             raise ValueError(f"fused impl {f_impl!r} computes "
                              f"{fspec.metric!r}, not {metric!r}")
+        # Resolution order: registry defaults <- caller PRECISION knobs
+        # (they select which measured entry applies) <- persisted tile
+        # measurement at that precision <- caller tile overrides.
         f_tuning = dict(fspec.tuning)
-        entry = _eplanner.measured_entry(_fused_key(backend, metric, f_impl))
+        caller = ({k: v for k, v in fused_tuning.items() if k in f_tuning}
+                  if fused_tuning else {})
+        f_tuning.update(caller)
+        entry = _eplanner.measured_entry(
+            _fused_key(backend, metric, f_impl, f_tuning))
         if entry and isinstance(entry.get("tuning"), dict):
             f_tuning.update({k: int(v) for k, v in entry["tuning"].items()
                              if k in f_tuning})
-        if fused_tuning:
-            f_tuning.update({k: v for k, v in fused_tuning.items()
-                             if k in f_tuning})
+        f_tuning.update(caller)
         mreason += f"; {freason}"
 
     # The planned row block IS the blocked impls' working-set knob — thread
@@ -306,7 +345,7 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
         metric=metric, dist_impl=dname, dist_tuning=dist_tuning,
         materialize=mat, row_block=row_block, sw=sw, backend=backend,
         reason=f"{dreason}; {mreason}", fused_impl=f_impl,
-        fused_tuning=f_tuning)
+        fused_tuning=f_tuning, n=n, d=d, n_groups=n_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -320,8 +359,15 @@ def _stage1_key(backend: str, metric: str, impl: str) -> str:
     return f"dist|{backend}|{metric}|{impl}"
 
 
-def _fused_key(backend: str, metric: str, impl: str) -> str:
-    return f"fusedk|{backend}|{metric}|{impl}"
+def _fused_key(backend: str, metric: str, impl: str,
+               tuning: Optional[Dict[str, int]] = None) -> str:
+    """Fused-kernel cache key. The precision knobs are part of the key —
+    an fp8 timing must never feed an f32 plan — but the default (f32)
+    precision keeps the historical untagged format so same-schema entries
+    recorded before the precision knobs existed stay addressable."""
+    tag = _dreg.precision_tag(tuning)
+    base = f"fusedk|{backend}|{metric}|{impl}"
+    return base if tag == "f32" else f"{base}|{tag}"
 
 
 def _stage1_candidates(metric: str, backend: str):
@@ -354,12 +400,14 @@ def measured_stage1(backend: str, metric: str, n: int) -> Optional[str]:
         {c: _stage1_key(backend, metric, c) for c in cands}, n)
 
 
-def measured_fused(backend: str, metric: str, n: int) -> Optional[str]:
-    """Persisted fused-kernel winner for this (backend, metric, n-bucket)."""
+def measured_fused(backend: str, metric: str, n: int,
+                   tuning: Optional[Dict[str, int]] = None) -> Optional[str]:
+    """Persisted fused-kernel winner for this (backend, metric, n-bucket)
+    at the precision the tuning knobs select (default f32)."""
     cands = [c for c in _dreg.fused_names(metric=metric)
              if backend in _dreg.get_fused(c).backends]
     return _argmin_measured(
-        {c: _fused_key(backend, metric, c) for c in cands}, n)
+        {c: _fused_key(backend, metric, c, tuning) for c in cands}, n)
 
 
 def _time_call(fn, *args, **kw) -> float:
@@ -439,7 +487,7 @@ def autotune_fused(x, grouping, *, metric: str = "braycurtis",
             t = time.perf_counter() - t0
         except Exception:  # noqa: BLE001
             continue
-        _eplanner.record_entry(_fused_key(backend, metric, name), {
+        _eplanner.record_entry(_fused_key(backend, metric, name, tuning), {
             "impl": name, "us": round(t * 1e6, 1), "n": n, "d": d,
             "bucket": _eplanner._bucket(n), "tuning": tuning})
         if t < best_t:

@@ -243,6 +243,46 @@ _register_metric("braycurtis", rows_ws=_ws_rows_broadcast,
 _register_metric("jaccard", rows_ws=_ws_rows_gram, dense_ws=_ws_dense_gram,
                  pallas_ok=True, dense_backends=("cpu", "gpu", "tpu"),
                  blocked_backends=("cpu", "gpu", "tpu"))
+# packed=1 switches jaccard.pallas to uint32 presence words + popcount
+# tiles (bit-identical distances, 32x fewer feature bytes)
+_REGISTRY["jaccard.pallas"] = dataclasses.replace(
+    _REGISTRY["jaccard.pallas"],
+    tuning={**_REGISTRY["jaccard.pallas"].tuning, "packed": 0})
+
+
+# ---------------------------------------------------------------------------
+# Precision knobs shared by the fused megakernel and the traffic models.
+# ---------------------------------------------------------------------------
+
+PRECISIONS = ("f32", "bf16", "fp8", "packed")
+
+
+def precision_tag(tuning) -> str:
+    """Canonical precision tag of a fused tuning dict (cache-key /
+    reporting vocabulary; packed > fp8 > bf16 > f32)."""
+    t = tuning or {}
+    if t.get("feat_packed"):
+        return "packed"
+    if t.get("feat_fp8"):
+        return "fp8"
+    if t.get("feat_bf16"):
+        return "bf16"
+    return "f32"
+
+
+def precision_tuning(tag: str) -> dict:
+    """The fused tuning-knob dict selecting a precision tag."""
+    if tag not in PRECISIONS:
+        raise ValueError(f"unknown precision {tag!r}; one of {PRECISIONS}")
+    return {"feat_bf16": int(tag == "bf16"), "feat_fp8": int(tag == "fp8"),
+            "feat_packed": int(tag == "packed")}
+
+
+def feat_element_bytes(tuning) -> float:
+    """Bytes moved per FEATURE element at the tuning dict's precision
+    (packed: 32 presence bits per uint32 word = 1/8 byte each)."""
+    return {"f32": 4.0, "bf16": 2.0, "fp8": 1.0,
+            "packed": 0.125}[precision_tag(tuning)]
 
 
 # ---------------------------------------------------------------------------
@@ -319,26 +359,76 @@ def _ws_fused_xla(n, d, chunk, n_groups, row_block):
 
 for _metric in ("euclidean", "aitchison", "braycurtis", "jaccard"):
     _kmetric = "euclidean" if _metric == "aitchison" else _metric
+    # The precision-knob family (mutually exclusive; planner/autotune
+    # values land in the persisted cache entry's tuning dict alongside
+    # tile sizes): feat_bf16 halves HBM feature traffic, feat_fp8
+    # quarters it (per-study scale calibration, fp32 accumulation),
+    # feat_packed (jaccard only) cuts it 32x via uint32 presence words
+    # with bit-identical results.
+    _prec = {"feat_bf16": 0, "feat_fp8": 0}
+    if _kmetric == "jaccard":
+        _prec["feat_packed"] = 0
     register_fused(FusedImpl(
         name=f"{_metric}.fusedk.pallas", metric=_metric, kind="pallas",
         backends=("tpu",),
-        # feat_bf16=1 streams the feature slabs as bf16 (2x less HBM
-        # feature traffic; fp32 accumulation in-kernel) — a planner/
-        # autotune knob whose value lands in the persisted cache entry's
-        # tuning dict alongside the tile sizes
         tuning={"tile_r": 128, "tile_c": 128, "feat_block": 128,
-                "perm_block": 16, "feat_bf16": 0},
+                "perm_block": 16, **_prec},
         workset_bytes=_ws_fused_pallas, kernel_metric=_kmetric,
         description=f"Pallas megakernel: {_metric} D² tiles built and "
                     "contracted in VMEM; D² never touches HBM "
-                    "(feat_bf16=1 halves feature-slab traffic)",
+                    "(feat_bf16/feat_fp8/feat_packed shrink feature-slab "
+                    "traffic 2x/4x/32x)",
     ))
     register_fused(FusedImpl(
         name=f"{_metric}.fusedk.xla", metric=_metric, kind="xla",
         backends=("cpu", "gpu", "tpu"),
-        tuning={},
+        tuning=dict(_prec),
         workset_bytes=_ws_fused_xla, kernel_metric=_kmetric,
         description=f"one-jit {_metric} scan-of-scans: the megakernel "
                     "dataflow as a single XLA program (no per-cell host "
-                    "sync; the off-TPU fused-kernel form)",
+                    "sync; the off-TPU fused-kernel form; precision knobs "
+                    "round-trip the feature slabs)",
     ))
+
+
+def fused_feat_traffic_bytes(spec: FusedImpl, n: int, d: int, tuning=None,
+                             row_block: int = 256) -> float:
+    """Modelled HBM feature-slab bytes for ONE permutation chunk's sweep
+    at the tuning dict's precision.
+
+    Pallas megakernel: each (i, j) tile pair re-reads a (tile_r, d) and a
+    (tile_c, d) slab at the slab's element width, so traffic ≈
+    bpe*d*n*(n/tile_r + n/tile_c). XLA one-pass: each row block re-reads
+    the full table once ≈ 4*d*n*(n/row_block + 1) — its precision knobs
+    are value-parity round-trips (the slabs stream as f32), so no traffic
+    credit. This is the planner's per-precision reporting model
+    (plan.explain), not a hardware counter."""
+    t = {**dict(spec.tuning), **(tuning or {})}
+    if spec.kind == "pallas":
+        bpe = feat_element_bytes(t)
+        tr = int(t.get("tile_r", 128))
+        tc = int(t.get("tile_c", 128))
+        nti = -(-n // tr)
+        ntj = -(-n // tc)
+        return bpe * d * nti * ntj * (tr + tc)
+    return 4.0 * d * n * (-(-n // max(int(row_block), 1)) + 1)
+
+
+def fused_workset_bytes(spec: FusedImpl, n: int, d: int, chunk: int,
+                        n_groups: int, row_block: int,
+                        tuning=None) -> float:
+    """Precision-aware peak-residency model: the base workset_bytes plus
+    the resident feature tiles at the selected element width (the base
+    FusedImpl.workset_bytes signature is frozen; this module-level form
+    adds the precision term)."""
+    base = spec.workset_bytes(n, d, chunk, n_groups, row_block)
+    t = {**dict(spec.tuning), **(tuning or {})}
+    if spec.kind == "pallas":
+        bpe = feat_element_bytes(t)
+        tr = int(t.get("tile_r", 128))
+        tc = int(t.get("tile_c", 128))
+        fb = int(t.get("feat_block", 128))
+        return base + bpe * (tr + tc) * fb
+    # xla: an active precision knob materializes one round-tripped f32
+    # copy of the table during prepare
+    return base + (4.0 * n * d if precision_tag(t) != "f32" else 0.0)

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import distance as _dist
 from repro.core import fstat, permutations
 
 try:  # jax >= 0.5 exposes shard_map at top level
@@ -192,18 +193,23 @@ def _fused_sw_step(m2rows, grouping, strata, inv_gs, key, lo_r, lo_p, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk", "block", "n", "k_cols"))
+                   static_argnames=("chunk", "block", "n", "k_cols",
+                                    "groups"))
 def _fused_sw_step_cols(m2rows, basis, strata, key, lo_r, lo_p, *,
-                        chunk, block, n, k_cols):
+                        chunk, block, n, k_cols, groups=()):
     """Dense-design cousin of _fused_sw_step: strata-restricted index
     permutations gather basis rows; the per-column contraction returns a
-    (chunk, K) partial over this row slab."""
+    (chunk, K) partial over this row slab. `groups` (static, from
+    fstat.sparse_col_groups) switches to the block-sparse gather form —
+    exact, because dropped terms are structural zeros."""
     perms = permutations.strata_permutation_batch_dyn(key, strata, lo_p,
                                                       chunk)
     v = fstat.basis_perm_factors(basis, perms)               # (P, n, K)
     v_pad = jnp.pad(v, ((0, 0), (0, (-n) % block), (0, 0)))
     v_rows = jax.lax.dynamic_slice(v_pad, (0, lo_r, 0),
                                    (chunk, block, k_cols))
+    if groups:
+        return fstat.sw_cols_contract_sparse(m2rows, v, v_rows, groups)
     return fstat.sw_cols_contract(m2rows, v, v_rows)
 
 
@@ -248,9 +254,13 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
 
 def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
                     n_total: int, *, row_block: int, chunk: int,
+                    block_sparse: bool = True,
                     progress: Optional[Callable[[int, int], None]] = None):
     """The fused bridge for DENSE designs: per-column quadratic forms
     accumulated over mat2 row slabs, nothing (n, n)-shaped ever resident.
+    Strata-blocked bases (the common multi-study / repeated-measures
+    designs) contract block-sparsely: each column group only touches its
+    strata's sample columns — exact, since the skipped terms are zeros.
 
     Returns (s_cols float64 ndarray (n_total, K), s_t float, FusedStats).
     """
@@ -259,6 +269,11 @@ def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
     basis = design.basis
     strata = (design.strata if design.strata is not None
               else jnp.zeros((n,), jnp.int32))
+    groups = ()
+    if block_sparse and design.strata is not None:
+        groups = fstat.sparse_col_groups(basis, design.strata)
+        if len(groups) <= 1:   # dense support: gather buys nothing
+            groups = ()
     row_block = int(min(row_block, n))
     chunk = int(max(1, min(chunk, n_total)))
     out = np.zeros((n_total, k), np.float64)
@@ -270,7 +285,8 @@ def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
         for lo_p in range(0, n_total, chunk):
             sc = _fused_sw_step_cols(
                 slab, basis, strata, key, jnp.int32(lo_r), jnp.int32(lo_p),
-                chunk=chunk, block=slab.shape[0], n=n, k_cols=k)
+                chunk=chunk, block=slab.shape[0], n=n, k_cols=k,
+                groups=groups)
             hi = min(lo_p + chunk, n_total)
             out[lo_p:hi] += np.asarray(sc[: hi - lo_p], np.float64)
         if progress is not None:
@@ -470,6 +486,35 @@ def fused_sw_onepass_design(xprep: Array, rows_fn: Callable, design,
     return np.asarray(s_cols[:n_total], np.float64), s_t, stats
 
 
+def _precision_roundtrip(xprep: Array, metric: str,
+                         tuning: Optional[dict]) -> Array:
+    """Value parity for the XLA one-pass path: quantize the feature table
+    ONCE up front per the precision knobs, round-tripped back to f32 (XLA
+    streams f32 regardless — the knobs buy traffic only on the kernel
+    path), so both fused impls contract identical quantized features."""
+    t = dict(tuning or {})
+    if int(t.get("feat_packed", 0)):
+        if metric != "jaccard":
+            raise ValueError("feat_packed=1 requires the jaccard kernel "
+                             f"body (got metric={metric!r})")
+        return (jnp.asarray(xprep) > 0).astype(jnp.float32)
+    if int(t.get("feat_fp8", 0)):
+        return _dist.fp8_roundtrip(
+            xprep, _dist.fp8_metric_scale(xprep, metric))
+    if int(t.get("feat_bf16", 0)):
+        return jnp.asarray(xprep, jnp.float32).astype(
+            jnp.bfloat16).astype(jnp.float32)
+    return xprep
+
+
+def _fp8_scale_kwargs(xprep: Array, metric: str, tuning: dict) -> dict:
+    """Per-metric fp8 calibration, computed ONCE per study before the chunk
+    loop (re-deriving it per chunk would re-reduce the whole table)."""
+    if int(tuning.get("feat_fp8", 0)):
+        return {"feat_scale": _dist.fp8_metric_scale(xprep, metric)}
+    return {}
+
+
 _labels_step = jax.jit(permutations.permutation_batch_dyn,
                        static_argnames=("chunk", "identity_first"))
 _strata_labels_step = jax.jit(permutations.strata_label_batch_dyn,
@@ -498,6 +543,7 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
     n = int(xprep.shape[0])
     chunk = int(max(1, min(chunk, n_total)))
     tuning = dict(tuning or {})
+    scale_kwargs = _fp8_scale_kwargs(xprep, kernel_metric, tuning)
     grouping = jnp.asarray(grouping, jnp.int32)
     out = np.zeros((n_total,), np.float64)
     rowsums = None
@@ -510,7 +556,7 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
                                     chunk=chunk)
         sw, rs = _fops.fused_sw_rows(
             xprep, xprep, g, g, inv_gs, 0, metric=kernel_metric,
-            interpret=interpret, **tuning)
+            interpret=interpret, **scale_kwargs, **tuning)
         hi = min(lo + chunk, n_total)
         out[lo:hi] = np.asarray(sw[: hi - lo], np.float64)
         if rowsums is None:
@@ -546,6 +592,7 @@ def fused_sw_megakernel_design(xprep: Array, design, key: jax.Array,
               else jnp.zeros((n,), jnp.int32))
     chunk = int(max(1, min(chunk, n_total)))
     tuning = dict(tuning or {})
+    scale_kwargs = _fp8_scale_kwargs(xprep, kernel_metric, tuning)
     out = np.zeros((n_total, k), np.float64)
     rowsums = None
     n_chunks = 0
@@ -554,7 +601,7 @@ def fused_sw_megakernel_design(xprep: Array, design, key: jax.Array,
         v = fstat.basis_perm_factors(basis, perms)
         sc, rs = _fops.fused_sw_rows_cols(
             xprep, xprep, v, v, 0, metric=kernel_metric,
-            interpret=interpret, **tuning)
+            interpret=interpret, **scale_kwargs, **tuning)
         hi = min(lo + chunk, n_total)
         out[lo:hi] = np.asarray(sc[: hi - lo], np.float64)
         if rowsums is None:
@@ -592,7 +639,8 @@ def fused_kernel_sw(xprep: Array, rows_fn: Callable, grouping: Array,
             interpret=interpret, strata=strata, progress=progress)
     if impl == "xla":
         return fused_sw_onepass(
-            xprep, rows_fn, grouping, inv_gs, key, n_total,
+            _precision_roundtrip(xprep, kernel_metric, tuning), rows_fn,
+            grouping, inv_gs, key, n_total,
             row_block=row_block, chunk=chunk, strata=strata)
     raise ValueError(f"unknown fused-kernel impl {impl!r}; "
                      "expected 'pallas' or 'xla'")
@@ -611,8 +659,8 @@ def fused_kernel_sw_design(xprep: Array, rows_fn: Callable, design,
             chunk=chunk, tuning=tuning, interpret=interpret)
     if impl == "xla":
         return fused_sw_onepass_design(
-            xprep, rows_fn, design, key, n_total, row_block=row_block,
-            chunk=chunk)
+            _precision_roundtrip(xprep, kernel_metric, tuning), rows_fn,
+            design, key, n_total, row_block=row_block, chunk=chunk)
     raise ValueError(f"unknown fused-kernel impl {impl!r}; "
                      "expected 'pallas' or 'xla'")
 

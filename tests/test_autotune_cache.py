@@ -87,6 +87,58 @@ def test_two_writers_never_corrupt_cache(tmp_path):
     assert not leftovers, leftovers
 
 
+def test_schema_migrate_or_drop(tmp_path, monkeypatch):
+    """Schema bump regression: pre-precision dist|/fusedk| entries (no
+    schema field, or a stale one) must be dropped on load — their tuning
+    payloads predate the precision knobs and would pin fp32 tile shapes
+    onto fp8/packed runs — while the s_W shoot-out keys, which the schema
+    does not govern, survive untouched. record_entry stamps the current
+    schema so fresh entries round-trip."""
+    import repro.engine.planner as planner
+    cache = tmp_path / "autotune.json"
+    cache.write_text(json.dumps({
+        # pre-schema entries: dropped
+        "fusedk|cpu|jaccard|jaccard.fusedk.pallas": {
+            "impl": "jaccard.fusedk.pallas", "us": 1.0, "bucket": 64,
+            "tuning": {"tile_r": 128}},
+        "dist|cpu|jaccard|jaccard.blocked": {
+            "impl": "jaccard.blocked", "us": 2.0, "bucket": 64},
+        # stale schema: dropped
+        "fusedk|cpu|euclidean|euclidean.fusedk.xla": {
+            "impl": "euclidean.fusedk.xla", "us": 3.0, "bucket": 64,
+            "schema": 1},
+        # current schema: kept
+        "fusedk|cpu|braycurtis|braycurtis.fusedk.xla|fp8": {
+            "impl": "braycurtis.fusedk.xla", "us": 4.0, "bucket": 64,
+            "schema": planner.CACHE_SCHEMA},
+        # s_W shoot-out key: schema-exempt, kept
+        "cpu|n64|g8": {"impl": "matmul", "us": 5.0},
+    }))
+    monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, str(cache))
+    try:
+        data = planner.load_autotune_cache(reload=True)
+        assert "fusedk|cpu|jaccard|jaccard.fusedk.pallas" not in data
+        assert "dist|cpu|jaccard|jaccard.blocked" not in data
+        assert "fusedk|cpu|euclidean|euclidean.fusedk.xla" not in data
+        assert "fusedk|cpu|braycurtis|braycurtis.fusedk.xla|fp8" in data
+        assert "cpu|n64|g8" in data
+
+        # fresh entries are stamped and survive a reload from disk
+        planner.record_entry("fusedk|cpu|jaccard|jaccard.fusedk.pallas", {
+            "impl": "jaccard.fusedk.pallas", "us": 6.0, "bucket": 64,
+            "tuning": {"tile_r": 64, "feat_packed": 1}})
+        data = planner.load_autotune_cache(reload=True)
+        entry = data["fusedk|cpu|jaccard|jaccard.fusedk.pallas"]
+        assert entry["schema"] == planner.CACHE_SCHEMA
+        assert entry["tuning"]["feat_packed"] == 1
+        # the dropped pre-schema keys were not resurrected by the save
+        on_disk = json.loads(cache.read_text())
+        assert "dist|cpu|jaccard|jaccard.blocked" not in on_disk
+    finally:
+        monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, "off")
+        planner.load_autotune_cache(reload=True)
+
+
 def test_failed_write_leaves_no_temp(tmp_path, monkeypatch):
     """A writer that dies mid-serialization must not leave a partial temp
     file (the unlink-on-failure path in _save_autotune_cache)."""

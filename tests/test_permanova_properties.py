@@ -180,6 +180,74 @@ def test_sw_impls_agree_on_ragged_prime(inst):
         np.testing.assert_allclose(got, oracle, rtol=5e-4, atol=1e-5)
 
 
+@st.composite
+def feature_instances(draw):
+    """(n, d) abundance tables + ragged groupings for the fp8 slab
+    properties (features, not distance matrices)."""
+    n = draw(st.integers(min_value=6, max_value=20))
+    d = draw(st.integers(min_value=3, max_value=12))
+    g = draw(st.integers(min_value=2, max_value=3))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x *= rng.random(size=(n, d)) < 0.6
+    x[:, 0] = np.maximum(x[:, 0], 1e-3)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    return x, grouping, g, rng
+
+
+@settings(max_examples=15, deadline=None)
+@given(feature_instances())
+def test_fp8_contract_invariant_under_column_reorder(inst):
+    """quantize -> contract -> F: reordering feature COLUMNS must not
+    change the statistic. The fp8 calibration is a global max-reduce, so
+    the quantized values are bit-identical under reordering; only f32
+    accumulation order can move, bounded well below quantization noise."""
+    from repro.core import distance as dist_mod
+    from repro.kernels.fused_sw import ref as fref
+    x, grouping, g, rng = inst
+    inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), g)
+    gperms = jnp.asarray(np.stack([rng.permutation(grouping)
+                                   for _ in range(3)]))
+    col_perm = rng.permutation(x.shape[1])
+    sws = []
+    for table in (x, x[:, col_perm]):
+        xp = dist_mod.ROW_METRICS["braycurtis"].prepare(jnp.asarray(table))
+        sw, _ = fref.fused_sw_ref(xp, xp, gperms, gperms, inv_gs, 0,
+                                  metric="braycurtis", feat_fp8=1)
+        sws.append(np.asarray(sw))
+    np.testing.assert_allclose(sws[1], sws[0], rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(feature_instances())
+def test_fp8_scale_roundtrip_idempotent(inst):
+    """Re-quantizing an fp8-round-tripped table under the SAME pinned
+    scale is the identity (every value is already e4m3-representable),
+    so the contracted statistic is bit-identical — the scale-calibration
+    round-trip property the megakernel driver relies on when it computes
+    the per-study scale once and reuses it across permutation chunks."""
+    from repro.core import distance as dist_mod
+    from repro.kernels.fused_sw import ref as fref
+    x, grouping, g, rng = inst
+    xp = dist_mod.ROW_METRICS["euclidean"].prepare(jnp.asarray(x))
+    s = dist_mod.fp8_scale(xp)
+    v1 = dist_mod.fp8_roundtrip(xp, s)
+    v2 = dist_mod.fp8_roundtrip(v1, s)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    inv_gs = permutations.inv_group_sizes(jnp.asarray(grouping), g)
+    gperms = jnp.asarray(np.stack([rng.permutation(grouping)
+                                   for _ in range(2)]))
+    sw1, _ = fref.fused_sw_ref(xp, xp, gperms, gperms, inv_gs, 0,
+                               metric="euclidean", feat_fp8=1,
+                               feat_scale=s)
+    sw2, _ = fref.fused_sw_ref(v1, v1, gperms, gperms, inv_gs, 0,
+                               metric="euclidean", feat_fp8=1,
+                               feat_scale=s)
+    np.testing.assert_array_equal(np.asarray(sw1), np.asarray(sw2))
+
+
 # The tier-2 statistical-validation suite (null p-value uniformity over
 # many synthetic studies, slow-marked) lives in
 # tests/test_statistical_validation.py — it needs no hypothesis, so it
