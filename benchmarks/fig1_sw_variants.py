@@ -57,7 +57,7 @@ def run(emit):
     results = {}
     for name in engine.names(kind="jnp"):
         fn = jax.jit(engine.get(name).bound(**JNP_TUNING.get(name, {})))
-        t = time_fn(fn, mat2, gperms, inv_gs, iters=3, warmup=1)
+        t = time_fn(fn, mat2, gperms, inv_gs, iters=3, warmup=1).median
         results[name] = t
         gbps = stream_bytes / t / 1e9
         scale = (hw.PAPER_N_DIMS / n) ** 2 * (hw.PAPER_N_PERMS / p)
@@ -81,6 +81,6 @@ def run(emit):
     m2s, gps, igs = _instance(n=256, p=8)
     for name in engine.names(kind="pallas"):
         fn = engine.get(name).bound(tile_r=128, tile_c=128, perm_block=4)
-        t = time_fn(fn, m2s, gps, igs, iters=2, warmup=1)
+        t = time_fn(fn, m2s, gps, igs, iters=2, warmup=1).median
         emit(f"fig1/{name}_interpret", t * 1e6,
              "correctness-path timing (CPU interpreter, not TPU)")

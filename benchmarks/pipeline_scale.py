@@ -40,7 +40,7 @@ def run(emit):
         spec = pipeline.get(name)
         _, _, dense_fn = spec.bound()
         fn = jax.jit(dense_fn)
-        t = time_fn(fn, x, iters=3, warmup=1)
+        t = time_fn(fn, x, iters=3, warmup=1).median
         emit(f"pipeline/dist_{name}", t * 1e6,
              f"n={n} d={d} gb_s={(4*n*n)/t/1e9:.2f}")
 

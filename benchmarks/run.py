@@ -30,6 +30,7 @@ import jax
 from benchmarks import (fig1_sw_variants, permanova_roofline,
                         pipeline_scale, roofline_report, stream_triad,
                         sweep_scale)
+from repro import obs
 
 SUITES = {
     "fig1": fig1_sw_variants.run,
@@ -45,6 +46,7 @@ def _host_meta() -> dict:
     return {
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
         "jax_version": jax.__version__,
         "platform": platform.platform(),
         "python": platform.python_version(),
@@ -63,6 +65,10 @@ def main() -> None:
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
 
+    # counters only (no spans): retraces/compiles and traffic counters per
+    # suite get stamped into BENCH_*.json without perturbing the timings
+    obs.enable(trace=False, metrics=True)
+
     print("name,us_per_call,derived")
     failed = []
     for name in names:
@@ -78,6 +84,7 @@ def main() -> None:
             _rows.append(row)
 
         t0 = time.time()
+        before = obs.metrics.snapshot()
         ok = True
         try:
             SUITES[name](emit)
@@ -85,6 +92,7 @@ def main() -> None:
             ok = False
             failed.append(name)
             traceback.print_exc()
+        obs.record_device_memory()
         if args.json:
             os.makedirs(args.json_dir, exist_ok=True)
             payload = {
@@ -92,6 +100,7 @@ def main() -> None:
                 "ok": ok,
                 "wall_s": round(time.time() - t0, 2),
                 "host": _host_meta(),
+                "obs": obs.metrics.counter_delta(before),
                 "rows": rows,
             }
             path = os.path.join(args.json_dir, f"BENCH_{name}.json")

@@ -32,7 +32,10 @@ def run(emit):
         "triad": jax.jit(lambda a, b: a + s * b),
     }
     for name, fn in ops.items():
-        t = time_fn(fn, a, b, iters=5, warmup=2)
+        # trim=1 drops the slowest/fastest repeat: STREAM-style numbers on
+        # a shared host are scheduler-noise-sensitive
+        stats = time_fn(fn, a, b, iters=5, warmup=2, trim=1)
+        t = stats.median
         bytes_moved = BYTES_PER_ELEM[name] * 4 * N
         gbps = bytes_moved / t / 1e9
         emit(f"stream/{name}", t * 1e6,

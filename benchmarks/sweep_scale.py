@@ -38,12 +38,12 @@ def run(emit):
     fn = jax.jit(engine.get("matmul").bound(perm_block=32))
     for n in (256, 512, 1024):
         m2, gp, ig, _ = _instance(n, 32)
-        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
+        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1).median
         emit(f"sweep/n{n}_perms32", t * 1e6,
              f"per_perm_us={t/32*1e6:.1f}")
     for p in (16, 64, 256):
         m2, gp, ig, _ = _instance(512, p)
-        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1)
+        t = time_fn(fn, m2, gp, ig, iters=3, warmup=1).median
         emit(f"sweep/n512_perms{p}", t * 1e6,
              f"per_perm_us={t/p*1e6:.1f}")
 

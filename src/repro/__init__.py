@@ -9,6 +9,9 @@ Layers:
               registry, joint two-stage planner, dense/stream/fused
               materialization bridges, batched pipeline_many
   kernels/    Pallas TPU kernels for the hot loops (+ jnp oracles)
+  obs/        zero-dependency telemetry: trace spans (Chrome/Perfetto
+              export), compile/traffic counters, predicted-vs-measured
+              bandwidth reconciliation (obs.report)
   models/     assigned LM-architecture zoo (dense / MoE / SSM / hybrid / enc-dec)
   sharding/   logical-axis -> mesh partition rules
   train/      training step, microbatching, remat

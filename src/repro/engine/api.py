@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import design as design_mod
 from repro.core import fstat, permutations
 # NOTE: `from repro.core import permanova` would resolve to the *function*
@@ -29,6 +30,31 @@ from repro.core.permanova import (PermanovaResult, TermResult, f_from_sw,
 from repro.engine import planner, registry, scheduler
 
 Array = jax.Array
+
+
+def _sw_traffic_bytes(impl: str, n: int, n_total: int, chunk: int,
+                      n_cols: int = 0) -> float:
+    """Predicted stage-2 traffic for the s_W sweep, per the paper's
+    dataflow distinction: 'brute' re-streams the full f32 mat2 once PER
+    PERMUTATION (the GPU-style massive-bandwidth layout), everything else
+    (tiled/matmul/pallas) reads mat2 once per CHUNK and amortizes it over
+    the chunk's permutations. Plus the regenerated (chunk, n) int32 labels
+    per chunk — (k+1)-wide on the dense-design per-column path."""
+    n_chunks = -(-n_total // max(chunk, 1))
+    mat2_passes = n_total if impl == "brute" else n_chunks
+    label_bytes = 4 * chunk * n * (n_cols + 1)
+    return float(mat2_passes) * 4.0 * n * n + float(n_chunks) * label_bytes
+
+
+def _sw_span_attrs(impl: str, n: int, n_total: int, chunk: int,
+                   n_cols: int = 0):
+    """Span attrs for the s_W stage (None while tracing is off, so the
+    disabled path allocates nothing)."""
+    if not _obs.trace_enabled():
+        return None
+    return {"impl": impl, "chunk": chunk,
+            "predicted_bytes": _sw_traffic_bytes(impl, n, n_total, chunk,
+                                                 n_cols)}
 
 
 def run(dm: Array, grouping: Array, *, n_perms: int = 999,
@@ -115,13 +141,16 @@ def run(dm: Array, grouping: Array, *, n_perms: int = 999,
                 pl, reason="empirical autotune winner (measured on operands)")
         fn = registry.get(pl.impl).bound(**pl.tuning)
 
-    if pl.streaming:
-        s_w_np, stats = scheduler.sw_streaming(
-            mat2, grouping, inv_gs, key, n_total, fn, chunk=pl.chunk)
-        s_w_all = jnp.asarray(s_w_np)
-    else:
-        s_w_all, stats = scheduler.sw_batch(
-            mat2, grouping, inv_gs, key, n_total, fn)
+    ch = pl.chunk if pl.streaming else n_total
+    with _obs.span("engine.sw", _sw_span_attrs(pl.impl, n, n_total, ch)):
+        if pl.streaming:
+            s_w_np, stats = scheduler.sw_streaming(
+                mat2, grouping, inv_gs, key, n_total, fn, chunk=pl.chunk)
+            s_w_all = jnp.asarray(s_w_np)
+        else:
+            s_w_all, stats = scheduler.sw_batch(
+                mat2, grouping, inv_gs, key, n_total, fn)
+    _obs.record_device_memory()
 
     s_t = s_total(mat2) if s_t is None else jnp.float32(s_t)
     f_all = f_from_sw(s_w_all, s_t, n, n_groups)
@@ -253,15 +282,19 @@ def run_design(dm: Array, design: "design_mod.Design", *,
                           memory_budget_bytes=memory_budget_bytes,
                           chunk=chunk, tuning=tuning)
         fn = registry.get(pl.impl).bound(**pl.tuning)
-        if pl.streaming:
-            s_w_np, stats = scheduler.sw_streaming(
-                mat2, grouping, inv_gs, key, n_total, fn, chunk=pl.chunk,
-                strata=design.strata)
-            s_w_all = jnp.asarray(s_w_np)
-        else:
-            s_w_all, stats = scheduler.sw_batch(
-                mat2, grouping, inv_gs, key, n_total, fn,
-                strata=design.strata)
+        ch = pl.chunk if pl.streaming else n_total
+        with _obs.span("engine.sw",
+                       _sw_span_attrs(pl.impl, n, n_total, ch)):
+            if pl.streaming:
+                s_w_np, stats = scheduler.sw_streaming(
+                    mat2, grouping, inv_gs, key, n_total, fn, chunk=pl.chunk,
+                    strata=design.strata)
+                s_w_all = jnp.asarray(s_w_np)
+            else:
+                s_w_all, stats = scheduler.sw_batch(
+                    mat2, grouping, inv_gs, key, n_total, fn,
+                    strata=design.strata)
+        _obs.record_device_memory()
         s_t = s_total(mat2) if s_t is None else jnp.float32(s_t)
         return label_design_result(
             s_w_all, s_t, design, n_objects=n, n_perms=n_perms,
@@ -282,8 +315,13 @@ def run_design(dm: Array, design: "design_mod.Design", *,
     cols_fn = registry.bound_cols(pl.impl, **pl.tuning)
     strata = (design.strata if design.strata is not None
               else jnp.zeros((n,), jnp.int32))
-    s_cols, stats = scheduler.sw_cols_streaming(
-        mat2, design.basis, strata, key, n_total, cols_fn, chunk=pl.chunk)
+    with _obs.span("engine.sw",
+                   _sw_span_attrs(pl.impl, n, n_total, pl.chunk,
+                                  n_cols=k)):
+        s_cols, stats = scheduler.sw_cols_streaming(
+            mat2, design.basis, strata, key, n_total, cols_fn,
+            chunk=pl.chunk)
+    _obs.record_device_memory()
     return design_result(
         s_cols, design, n_objects=n, n_perms=n_perms,
         method=f"permanova-design[{pl.impl}]",
@@ -545,7 +583,15 @@ def _permanova_many_design(dms, groupings, *, covariates, strata, weights,
         where = (f"vmap@data[{data_ways}]"
                  + (f"+pad{s_pad}" if s_pad else ""))
 
-    s_cols = run_many(*args)[:s_count]            # (S, n_total, K)
+    attrs = None
+    if _obs.trace_enabled():
+        attrs = {"studies": s_count, "impl": pl.impl, "where": where,
+                 "predicted_bytes": s_count * _sw_traffic_bytes(
+                     pl.impl, n, n_total, ch, n_cols=k)}
+    with _obs.span("engine.studies", attrs):
+        s_cols = _obs.maybe_block(run_many(*args))[:s_count]  # (S, nt, K)
+    _obs.metrics.inc("engine.studies", s_count)
+    _obs.record_device_memory()
 
     dof_resid = ((nv_i if n_valid is None else n_valid).astype(jnp.float32)
                  - jnp.float32(d0.rank))
@@ -695,7 +741,15 @@ def permanova_many(dms: Union[Array, Sequence[Array]],
         where = (f"vmap@data[{data_ways}]"
                  + (f"+pad{s_pad}" if s_pad else ""))
 
-    f_perms, s_t, s_w = run_many(*args)
+    attrs = None
+    if _obs.trace_enabled():
+        attrs = {"studies": s_count, "impl": pl.impl, "where": where,
+                 "predicted_bytes": s_count * _sw_traffic_bytes(
+                     pl.impl, n, n_total, ch)}
+    with _obs.span("engine.studies", attrs):
+        f_perms, s_t, s_w = _obs.maybe_block(run_many(*args))
+    _obs.metrics.inc("engine.studies", s_count)
+    _obs.record_device_memory()
     f_perms, s_t, s_w = (a[:s_count] for a in (f_perms, s_t, s_w))
     p_vals = jax.vmap(p_value_from_null)(f_perms)
 

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 import warnings
@@ -37,6 +38,20 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 
 from repro.engine import registry
+from repro.obs import metrics as _metrics
+
+_log = logging.getLogger(__name__)
+_WARNED: set = set()
+
+
+def _warn_once(tag: str, msg: str) -> None:
+    """Log a cache-health warning once per process (not once per plan():
+    a 1000-study serving sweep hitting a disabled cache must not emit
+    1000 lines). logging, not warnings — tier-1 runs warning-free."""
+    if tag in _WARNED:
+        return
+    _WARNED.add(tag)
+    _log.warning(msg)
 
 # Model constants (bytes). LLC: an MI300A CCD carries 32 MiB L3; once mat2
 # spills it the paper's tiled dataflow wins on CPU.
@@ -270,6 +285,14 @@ def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
             if isinstance(data, dict):
                 _PERSIST = {k: v for k, v in data.items()
                             if _valid_entry(k, v)}
+                dropped = len(data) - len(_PERSIST)
+                if dropped:
+                    _metrics.inc("autotune.cache.stale_dropped", dropped)
+                    _warn_once(
+                        "stale", f"autotune cache {path}: dropped {dropped} "
+                        f"entr{'y' if dropped == 1 else 'ies'} with a stale "
+                        f"schema (current schema {CACHE_SCHEMA}); they will "
+                        "be re-measured")
         except (OSError, ValueError):  # corrupt/unreadable: measure afresh
             pass
     return _PERSIST
@@ -278,7 +301,12 @@ def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
 def _save_autotune_cache() -> None:
     global _PERSIST
     path = autotune_cache_path()
-    if not path or _PERSIST is None:
+    if not path:
+        _warn_once(
+            "disabled", f"autotune cache disabled (${AUTOTUNE_CACHE_ENV}); "
+            "measurements will not persist across processes")
+        return
+    if _PERSIST is None:
         return
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -337,16 +365,20 @@ def measured_impl(backend: str, n: int, n_groups: int,
     short-circuit a broader one — and when the impl is still registered."""
     entry = load_autotune_cache().get(_persist_key(backend, n, n_groups))
     if not entry:
+        _metrics.inc("autotune.cache.miss")
         return None
     wanted = set(candidates if candidates is not None
                  else _default_candidates(backend))
     if not wanted <= set(entry.get("candidates", ())):
+        _metrics.inc("autotune.cache.miss")
         return None
     name = entry.get("impl")
     try:
         registry.get(name)
     except KeyError:
+        _metrics.inc("autotune.cache.miss")
         return None
+    _metrics.inc("autotune.cache.hit")
     return name
 
 
@@ -369,6 +401,7 @@ def autotune(mat2, grouping, inv_gs, *,
     cache_key = (backend, _bucket(n), n_groups, tuple(sorted(candidates)))
     if use_cache:
         if cache_key in _AUTOTUNE_CACHE:
+            _metrics.inc("autotune.cache.hit")
             return _AUTOTUNE_CACHE[cache_key]
         persisted = measured_impl(backend, n, n_groups, candidates)
         if persisted in candidates:
@@ -394,6 +427,7 @@ def autotune(mat2, grouping, inv_gs, *,
             best_name, best_t = name, t
     if best_name is None:
         raise RuntimeError("autotune: no candidate impl ran successfully")
+    _metrics.inc("autotune.measured")
     if use_cache:
         _AUTOTUNE_CACHE[cache_key] = best_name
         pkey = _persist_key(backend, n, n_groups)

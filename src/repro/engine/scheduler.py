@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import permutations
 
 Array = jax.Array
@@ -87,38 +88,71 @@ def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
     out = np.empty((n_total,), np.float32)
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        if strata is None:
-            s = _step(mat2, grouping, inv_gs, key, jnp.int32(lo),
-                      fn=fn, chunk=chunk, identity_first=identity_first)
-        else:
-            s = _step_strata(mat2, grouping, strata, inv_gs, key,
-                             jnp.int32(lo), fn=fn, chunk=chunk,
-                             identity_first=identity_first)
-        hi = min(lo + chunk, n_total)
-        out[lo:hi] = np.asarray(s[: hi - lo])
+        with _obs.span("engine.sw_chunk", {"lo": lo}):
+            if strata is None:
+                s = _step(mat2, grouping, inv_gs, key, jnp.int32(lo),
+                          fn=fn, chunk=chunk, identity_first=identity_first)
+            else:
+                s = _step_strata(mat2, grouping, strata, inv_gs, key,
+                                 jnp.int32(lo), fn=fn, chunk=chunk,
+                                 identity_first=identity_first)
+            hi = min(lo + chunk, n_total)
+            # np.asarray is the device sync for this chunk — keep it inside
+            # the span so chunk wall-time covers completed device work
+            out[lo:hi] = np.asarray(s[: hi - lo])
         n_chunks += 1
         if progress is not None:
             progress(hi, n_total)
     stats = StreamStats(n_total=n_total, chunk=chunk, n_chunks=n_chunks,
                         peak_label_bytes=4 * chunk * n)
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
+    _obs.metrics.gauge_set("engine.peak_label_bytes",
+                           stats.peak_label_bytes)
     return out, stats
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "n_total",
+                                             "identity_first"))
+def _batch_step(mat2, grouping, inv_gs, key, *, fn, n_total, identity_first):
+    gperms = permutations.permutation_batch(
+        key, grouping, 0, n_total, identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "n_total",
+                                             "identity_first"))
+def _batch_step_strata(mat2, grouping, strata, inv_gs, key, *, fn, n_total,
+                       identity_first):
+    gperms = permutations.strata_label_batch_dyn(
+        key, grouping, strata, jnp.int32(0), n_total,
+        identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
 
 
 def sw_batch(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
              n_total: int, fn: Callable, *, identity_first: bool = True,
              strata: Optional[Array] = None):
     """One-shot path for small sweeps: materialize all labels, single
-    dispatch. Same key semantics as the streaming path."""
-    if strata is None:
-        gperms = permutations.permutation_batch(
-            key, grouping, 0, n_total, identity_first=identity_first)
-    else:
-        gperms = permutations.strata_label_batch_dyn(
-            key, grouping, strata, jnp.int32(0), n_total,
-            identity_first=identity_first)
-    s_w = fn(mat2, gperms, inv_gs)
+    dispatch. Same key semantics as the streaming path.
+
+    The step is one jitted program keyed on the (memoized) impl callable,
+    like the streaming `_step`. The previous eager form re-traced any
+    scan inside the impl on EVERY call, so a warm serving process paid a
+    fresh jaxpr trace per request — the obs retrace counter caught it."""
+    with _obs.span("engine.sw_chunk", {"lo": 0}):
+        if strata is None:
+            s_w = _batch_step(mat2, grouping, inv_gs, key, fn=fn,
+                              n_total=n_total, identity_first=identity_first)
+        else:
+            s_w = _batch_step_strata(
+                mat2, grouping, strata, inv_gs, key, fn=fn, n_total=n_total,
+                identity_first=identity_first)
+        s_w = _obs.maybe_block(s_w)
     stats = StreamStats(n_total=n_total, chunk=n_total, n_chunks=1,
                         peak_label_bytes=4 * n_total * int(mat2.shape[0]))
+    _obs.metrics.inc("engine.perm_chunks", 1)
+    _obs.metrics.gauge_set("engine.peak_label_bytes",
+                           stats.peak_label_bytes)
     return s_w, stats
 
 
@@ -145,13 +179,17 @@ def sw_cols_streaming(mat2: Array, basis: Array, strata: Array,
     out = np.empty((n_total, k), np.float32)
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        s = _step_cols(mat2, basis, strata, key, jnp.int32(lo),
-                       fn=fn, chunk=chunk, identity_first=identity_first)
-        hi = min(lo + chunk, n_total)
-        out[lo:hi] = np.asarray(s[: hi - lo])
+        with _obs.span("engine.sw_chunk", {"lo": lo, "cols": k}):
+            s = _step_cols(mat2, basis, strata, key, jnp.int32(lo),
+                           fn=fn, chunk=chunk, identity_first=identity_first)
+            hi = min(lo + chunk, n_total)
+            out[lo:hi] = np.asarray(s[: hi - lo])
         n_chunks += 1
         if progress is not None:
             progress(hi, n_total)
     stats = StreamStats(n_total=n_total, chunk=chunk, n_chunks=n_chunks,
                         peak_label_bytes=4 * chunk * n * (k + 1))
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
+    _obs.metrics.gauge_set("engine.peak_label_bytes",
+                           stats.peak_label_bytes)
     return out, stats

@@ -31,12 +31,22 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import engine, pipeline
+from repro import engine, obs, pipeline
 from repro.core.distance import distance_matrix, validate_distance_matrix
 from repro.data.microbiome import synthetic_study
 
 IMPL_CHOICES = ["auto", "brute", "tiled", "matmul",
                 "pallas_brute", "pallas_permblock", "pallas_matmul"]
+
+
+def _emit_obs(args):
+    """Export the trace and/or print the telemetry report, if requested."""
+    if args.trace:
+        obs.trace.export(args.trace)
+        print(f"[permanova] trace written to {args.trace} "
+              f"({len(obs.events())} events)")
+    if args.metrics:
+        obs.report()
 
 
 def main():
@@ -120,8 +130,20 @@ def main():
                          "kernel variant (interpret mode off TPU)")
     ap.add_argument("--distributed", action="store_true",
                     help="shard over all local devices")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record trace spans across every execution layer "
+                         "and write Chrome/Perfetto trace_event JSON to "
+                         "PATH (open in chrome://tracing or ui.perfetto."
+                         "dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry report after the run: "
+                         "per-stage predicted-vs-measured bandwidth table "
+                         "plus compile/traffic counters")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.trace or args.metrics:
+        obs.enable(trace=bool(args.trace) or args.metrics, metrics=True)
 
     impl = args.impl
     if args.kernel and not impl.startswith("pallas_"):
@@ -205,6 +227,7 @@ def main():
             expl = ", ".join(f"{float(v):.3f}" for v in o.explained)
             print(f"[permanova] pcoa[{o.method}] k={o.k} "
                   f"explained=[{expl}] coords={tuple(o.coords.shape)}")
+        _emit_obs(args)
         return 0
 
     t0 = time.time()
@@ -239,6 +262,7 @@ def main():
           f"({res.n_perms / t_pa:.1f} perms/s)")
     print(f"[permanova] F={float(res.f_stat):.6g} "
           f"p={float(res.p_value):.6g}")
+    _emit_obs(args)
     return 0
 
 

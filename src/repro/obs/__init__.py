@@ -1,0 +1,38 @@
+"""obs/ — zero-dependency tracing + metrics for the execution layers.
+
+- `span("stage1.braycurtis")` — contextvar-stacked wall-time spans,
+  exported as Chrome/Perfetto trace_event JSON (`obs.trace.export`).
+- `metrics` — process-wide counters/gauges/histograms: jit retraces
+  (via jax.monitoring), autotune cache hits, predicted traffic bytes,
+  permutation chunks, device peak memory.
+- `report()` — predicted-vs-measured reconciliation table pairing the
+  registry traffic models with measured span times.
+
+Everything is OFF by default; the disabled hot path is one bool check
+returning a shared no-op span.
+"""
+
+from repro.obs import core, jaxhooks, metrics, trace
+from repro.obs.core import (
+    clear,
+    device_sync,
+    disable,
+    enable,
+    enabled,
+    events,
+    maybe_block,
+    metrics_enabled,
+    session,
+    span,
+    trace_enabled,
+)
+from repro.obs.jaxhooks import record_device_memory
+from repro.obs.report import report, stage_rows
+
+__all__ = [
+    "core", "jaxhooks", "metrics", "trace",
+    "span", "enable", "disable", "enabled", "session",
+    "trace_enabled", "metrics_enabled", "events", "clear",
+    "maybe_block", "device_sync", "record_device_memory",
+    "report", "stage_rows",
+]

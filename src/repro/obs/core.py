@@ -1,0 +1,206 @@
+"""Span core: context-var span stack → Chrome trace_event buffer.
+
+Zero-dependency tracing for the execution layers. OFF by default with
+near-zero overhead: while disabled, `span()` returns one shared no-op
+context manager — no dict, no object, no event is allocated on the hot
+path (the scheduler's chunk loop runs through here).
+
+When enabled, every completed span is buffered as a Chrome/Perfetto
+`trace_event` dict (`ph: "X"`, microsecond ts/dur) with its nesting depth
+and parent recorded from a contextvar span stack, so `obs.trace.export`
+writes a file chrome://tracing and Perfetto load directly. When
+`jax.profiler.TraceAnnotation` is importable, each span also enters an
+annotation of the same name so spans line up with XLA profiler traces.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+import threading
+import time
+from typing import Optional
+
+# Module-level fast flags: checked on every span()/inc() call, so they are
+# plain bools rather than attribute lookups through a config object.
+_trace_on = False
+_metrics_on = False
+
+_events: list = []                 # completed spans (trace_event dicts)
+_events_lock = threading.Lock()
+_t0_ns = time.perf_counter_ns()    # trace epoch (ts are relative to this)
+
+_stack: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_obs_span_stack", default=())
+
+_TraceAnnotation = None            # resolved lazily at first enable()
+
+
+class _NoopSpan:
+    """Shared do-nothing span for disabled mode (allocation-free)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NOOP = _NoopSpan()
+
+
+class _Span:
+    __slots__ = ("name", "attrs", "_start_ns", "_token", "_ann")
+
+    def __init__(self, name: str, attrs: Optional[dict]):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        self._token = _stack.set(_stack.get() + (self.name,))
+        self._ann = None
+        if _TraceAnnotation is not None:
+            try:
+                self._ann = _TraceAnnotation(self.name)
+                self._ann.__enter__()
+            except Exception:       # annotation is best-effort decoration
+                self._ann = None
+        self._start_ns = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc):
+        end_ns = time.perf_counter_ns()
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        stack = _stack.get()
+        _stack.reset(self._token)
+        args = {"depth": len(stack) - 1}
+        if len(stack) > 1:
+            args["parent"] = stack[-2]
+        if self.attrs:
+            args.update(self.attrs)
+        ev = {
+            "name": self.name,
+            "cat": "repro",
+            "ph": "X",
+            "ts": (self._start_ns - _t0_ns) / 1e3,   # microseconds
+            "dur": (end_ns - self._start_ns) / 1e3,
+            "pid": os.getpid(),
+            "tid": threading.get_ident(),
+            "args": args,
+        }
+        with _events_lock:
+            _events.append(ev)
+        return False
+
+
+def span(name: str, attrs: Optional[dict] = None):
+    """Context manager timing one stage.
+
+    attrs: optional dict recorded into the trace event's `args` (e.g.
+    `{"predicted_bytes": ...}` feeds the predicted-vs-measured report).
+    While tracing is disabled this returns a shared no-op object — hot
+    call sites (per-chunk loops) pay one bool check and nothing else.
+    """
+    if not _trace_on:
+        return _NOOP
+    return _Span(name, attrs)
+
+
+def enable(*, trace: bool = True, metrics: bool = True) -> None:
+    """Turn telemetry on (idempotent). Installs the jax.monitoring
+    compile-event listener the first time metrics are enabled."""
+    global _trace_on, _metrics_on, _TraceAnnotation
+    _trace_on = bool(trace)
+    _metrics_on = bool(metrics)
+    if _trace_on and _TraceAnnotation is None:
+        try:
+            from jax.profiler import TraceAnnotation as _TA
+            _TraceAnnotation = _TA
+        except Exception:           # jax without profiler: spans still work
+            pass
+    if _metrics_on:
+        from repro.obs import jaxhooks, metrics as _metrics
+        _metrics.set_active(True)
+        jaxhooks.install()
+    _sync_metrics_flag()
+
+
+def disable() -> None:
+    """Turn telemetry off (buffers/counters are kept; see trace.clear /
+    metrics.reset)."""
+    global _trace_on, _metrics_on
+    _trace_on = False
+    _metrics_on = False
+    _sync_metrics_flag()
+
+
+def _sync_metrics_flag() -> None:
+    from repro.obs import metrics as _metrics
+    _metrics.set_active(_metrics_on)
+
+
+def trace_enabled() -> bool:
+    return _trace_on
+
+
+def metrics_enabled() -> bool:
+    return _metrics_on
+
+
+def enabled() -> bool:
+    return _trace_on or _metrics_on
+
+
+@contextlib.contextmanager
+def session(export_path: Optional[str] = None, *, metrics: bool = True):
+    """Scoped telemetry: enable for the body, restore the previous state
+    after, exporting the trace buffer to `export_path` when given
+    (`pipeline(..., trace="out.json")` routes through here)."""
+    prev = (_trace_on, _metrics_on)
+    enable(trace=True, metrics=metrics)
+    try:
+        yield
+    finally:
+        if export_path:
+            from repro.obs import trace as _trace
+            _trace.export(export_path)
+        if prev == (False, False):
+            disable()
+        else:
+            enable(trace=prev[0], metrics=prev[1])
+
+
+def maybe_block(x):
+    """Device sync point: block_until_ready(x) only while tracing, so
+    span wall-times measure completed device work without perturbing the
+    untraced async dispatch pipeline. Returns x."""
+    if _trace_on and x is not None:
+        import jax
+        jax.block_until_ready(x)
+    return x
+
+
+def device_sync(x, name: str = "sync"):
+    """Explicit named sync point: while tracing, a `sync.<name>` span
+    records how long the host waited for the device. No-op (and no
+    blocking) when disabled."""
+    if not _trace_on:
+        return x
+    import jax
+    with span(f"sync.{name}"):
+        jax.block_until_ready(x)
+    return x
+
+
+def events() -> list:
+    """Snapshot of the completed-span buffer (trace_event dicts)."""
+    with _events_lock:
+        return list(_events)
+
+
+def clear() -> None:
+    with _events_lock:
+        _events.clear()

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import engine
+from repro import obs as _obs
 from repro.core import design as _design
 from repro.core import permutations
 from repro.core.permanova import (PermanovaResult, f_from_sw,
@@ -32,6 +33,63 @@ from repro.pipeline import registry as _registry
 from repro.pipeline import streaming as _streaming
 
 Array = jax.Array
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_dense(fn):
+    """jit the registry's (memoized, so hashable-stable) dense distance
+    callable. Eager execution re-traces any lax.map/scan inside it on
+    EVERY call — the obs retrace counter flagged exactly that on warm
+    dense-bridge runs."""
+    return jax.jit(fn)
+
+
+def _stage1_attrs(pl, dspec, n: int, d: int, bridge: str):
+    """Span attrs for the distance stage: predicted traffic from the
+    registry's workset model (the dense form builds one full matrix; the
+    streaming form re-runs its per-slab workset once per row block), plus
+    the 4n² mat2 write. None while tracing is off — the disabled path
+    allocates nothing."""
+    if not _obs.trace_enabled():
+        return None
+    block = n if bridge == "dense" else int(min(pl.row_block, n))
+    n_blocks = -(-n // block)
+    predicted = (float(dspec.workset_bytes(n, d, block)) * n_blocks
+                 + 4.0 * n * n)
+    _obs.metrics.inc("pipeline.predicted_bytes", predicted)
+    return {"bridge": bridge, "impl": pl.dist_impl,
+            "predicted_bytes": predicted}
+
+
+def _fused_attrs(pl, n: int, d: int, n_groups: int, n_total: int, *,
+                 fspec=None, studies: int = 1):
+    """Span attrs for the fused bridges. The fused (two-stage) sweep
+    rebuilds every D² row slab once per permutation chunk and streams the
+    (chunk, n, G+1)-equivalent label state per (slab, chunk) pair; the
+    fused-kernel sweep's feature traffic comes from the registry's
+    precision-aware model (fp8/packed slabs shrink it)."""
+    if not _obs.trace_enabled():
+        return None
+    block = int(min(pl.row_block, n))
+    n_blocks = -(-n // block)
+    ch = int(max(1, min(pl.sw.chunk, n_total)))
+    n_chunks = -(-n_total // ch)
+    if fspec is not None:
+        predicted = (
+            _registry.fused_feat_traffic_bytes(
+                fspec, n, d, pl.fused_tuning, block) * n_chunks
+            + 4.0 * ch * n * (n_groups + 1) * n_chunks)
+        bridge, impl = "fused-kernel", fspec.name
+    else:
+        predicted = (4.0 * n * n
+                     + n_blocks * n_chunks * 4.0 * ch * n * (n_groups + 1))
+        bridge, impl = "fused", pl.sw.impl
+    predicted *= studies
+    _obs.metrics.inc("pipeline.predicted_bytes", predicted)
+    attrs = {"bridge": bridge, "impl": impl, "predicted_bytes": predicted}
+    if studies > 1:
+        attrs["studies"] = studies
+    return attrs
 
 
 def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
@@ -51,7 +109,8 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
              mesh=None,
              ordination: Optional[int] = None,
              covariates=None, strata=None, weights=None,
-             autotune: bool = False) -> PermanovaResult:
+             autotune: bool = False,
+             trace=None) -> PermanovaResult:
     """Full features→p-value PERMANOVA under one joint plan.
 
     x:           (n, d) abundance table (raw features, NOT distances).
@@ -82,11 +141,32 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
     restricted labels, and per-term statistics in `result.terms`.
     `grouping` may also be a prebuilt core.design.Design.
 
+    trace:       telemetry for this call — True enables scoped span
+                 tracing + metrics (obs.session), a string additionally
+                 exports the Chrome trace_event JSON to that path on
+                 return; None/False (default) leaves telemetry exactly as
+                 the process had it (zero overhead when off). Inspect with
+                 obs.report() / obs.trace.stage_table() afterwards.
+
     Remaining knobs mirror engine.run(); budgets split per stage
     (matrix/slab for distances, memory_budget_bytes for s_W labels).
     For a fixed key every materialization produces the same F and p-value
     (to fp32 accumulation order).
     """
+    if trace:
+        with _obs.session(trace if isinstance(trace, str) else None):
+            return pipeline(
+                x, grouping, metric=metric, n_perms=n_perms, key=key,
+                n_groups=n_groups, dist_impl=dist_impl, sw_impl=sw_impl,
+                materialize=materialize, row_block=row_block, chunk=chunk,
+                memory_budget_bytes=memory_budget_bytes,
+                matrix_budget_bytes=matrix_budget_bytes,
+                slab_budget_bytes=slab_budget_bytes,
+                dist_tuning=dist_tuning, sw_tuning=sw_tuning,
+                fused_impl=fused_impl, fused_tuning=fused_tuning,
+                backend=backend, mesh=mesh, ordination=ordination,
+                covariates=covariates, strata=strata, weights=weights,
+                autotune=autotune, trace=None)
     if key is None:
         key = jax.random.key(0)
     x = jnp.asarray(x)
@@ -164,7 +244,9 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
 
     ordn = None
     if pl.materialize == "dense":
-        dm = dense_fn(x)
+        with _obs.span(f"stage1.{metric}",
+                       _stage1_attrs(pl, dspec, n, d, "dense")):
+            dm = _obs.maybe_block(_jit_dense(dense_fn)(x))
         res = engine.run(dm, grouping, n_perms=n_perms, key=key,
                          n_groups=n_groups, impl=sw_impl,
                          memory_budget_bytes=memory_budget_bytes,
@@ -173,11 +255,14 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         if ordination is not None:
             # the dense bridge already budgets (n, n) transients; the
             # centered matrix + eigh is the exact path
-            ordn = _ordination.pcoa_eigh(dm * dm, ordination)
+            with _obs.span("pipeline.pcoa"):
+                ordn = _ordination.pcoa_eigh(dm * dm, ordination)
     elif pl.materialize == "stream":
-        mat2, gower = _streaming.build_mat2_streaming(
-            prepare(x), rows_fn, block=pl.row_block)
-        mat2_dev = jnp.asarray(mat2)
+        with _obs.span(f"stage1.{metric}",
+                       _stage1_attrs(pl, dspec, n, d, "stream")):
+            mat2, gower = _streaming.build_mat2_streaming(
+                prepare(x), rows_fn, block=pl.row_block)
+            mat2_dev = jnp.asarray(mat2)
         del mat2   # free the host buffer: ONE sustained (n, n) resident
                    # (the handoff copy itself is transiently 2x; the fused
                    # bridge is the option that never holds (n, n) at all)
@@ -191,8 +276,9 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
             # the marginals the streaming pass already accumulated — the
             # Gower matrix itself is never materialized (one (n, n) array
             # stays the bridge's contract)
-            ordn = _ordination.pcoa_subspace(mat2_dev, ordination,
-                                             stats=gower)
+            with _obs.span("pipeline.pcoa"):
+                ordn = _ordination.pcoa_subspace(mat2_dev, ordination,
+                                                 stats=gower)
     elif pl.materialize == "fused":
         if autotune:
             warnings.warn(
@@ -203,9 +289,12 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                 "candidates)", stacklevel=2)
         inv_gs = permutations.inv_group_sizes(grouping, n_groups)
         xprep = prepare(x)
-        s_w, s_t, stats = _streaming.fused_sw(
-            xprep, rows_fn, grouping, inv_gs, key, n_total,
-            row_block=pl.row_block, chunk=pl.sw.chunk)
+        with _obs.span("bridge.fused",
+                       _fused_attrs(pl, n, d, n_groups, n_total)):
+            s_w, s_t, stats = _streaming.fused_sw(
+                xprep, rows_fn, grouping, inv_gs, key, n_total,
+                row_block=pl.row_block, chunk=pl.sw.chunk)
+            s_w = _obs.maybe_block(s_w)
         f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
                           jnp.float32(s_t), n, n_groups)
         res = PermanovaResult(
@@ -220,20 +309,26 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         inv_gs = permutations.inv_group_sizes(grouping, n_groups)
         fspec = _registry.get_fused(pl.fused_impl)
         xprep = prepare(x)
-        if mesh is not None:
-            if fspec.kind != "xla" and fused_impl not in (None, "auto"):
-                warnings.warn(
-                    f"mesh execution runs the XLA fused sweep; pinned "
-                    f"fused_impl={fused_impl!r} is not used", stacklevel=2)
-            s_w, s_t, stats = _streaming.fused_sw_sharded(
-                mesh, xprep, rows_fn, grouping, inv_gs, key, n_total,
-                row_block=pl.row_block, chunk=pl.sw.chunk)
-        else:
-            s_w, s_t, stats = _streaming.fused_kernel_sw(
-                xprep, rows_fn, grouping, inv_gs, key, n_total,
-                impl=fspec.kind, kernel_metric=fspec.kernel_metric,
-                row_block=pl.row_block, chunk=pl.sw.chunk,
-                tuning=pl.fused_tuning)
+        with _obs.span("bridge.fused-kernel",
+                       _fused_attrs(pl, n, d, n_groups, n_total,
+                                    fspec=fspec)):
+            if mesh is not None:
+                if fspec.kind != "xla" and fused_impl not in (None, "auto"):
+                    warnings.warn(
+                        f"mesh execution runs the XLA fused sweep; pinned "
+                        f"fused_impl={fused_impl!r} is not used",
+                        stacklevel=2)
+                s_w, s_t, stats = _streaming.fused_sw_sharded(
+                    mesh, xprep, rows_fn, grouping, inv_gs, key, n_total,
+                    row_block=pl.row_block, chunk=pl.sw.chunk)
+            else:
+                s_w, s_t, stats = _streaming.fused_kernel_sw(
+                    xprep, rows_fn, grouping, inv_gs, key, n_total,
+                    impl=fspec.kind, kernel_metric=fspec.kernel_metric,
+                    row_block=pl.row_block, chunk=pl.sw.chunk,
+                    tuning=pl.fused_tuning)
+            s_w = _obs.maybe_block(s_w)
+        _obs.record_device_memory()
         f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
                           jnp.float32(s_t), n, n_groups)
         res = PermanovaResult(
@@ -253,8 +348,9 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         # squared-distance row slabs from the feature table — ordination
         # inherits the fused contract (nothing (n, n)-shaped ever exists);
         # xprep was bound by the fused branch above
-        ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
-                                         row_block=pl.row_block)
+        with _obs.span("pipeline.pcoa"):
+            ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
+                                             row_block=pl.row_block)
 
     if pl.materialize in ("fused", "fused-kernel"):
         # the fused bridge IS stage 2; the joint plan string is authoritative
@@ -326,17 +422,22 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
     ordn = None
     xprep = None
     if pl.materialize == "dense":
-        dm = dense_fn(x)
+        with _obs.span(f"stage1.{metric}",
+                       _stage1_attrs(pl, dspec, n, d, "dense")):
+            dm = _obs.maybe_block(_jit_dense(dense_fn)(x))
         res = engine.run_design(
             dm, design, n_perms=n_perms, key=key, impl=sw_impl,
             memory_budget_bytes=memory_budget_bytes, chunk=chunk,
             backend=backend, tuning=sw_tuning)
         if ordination is not None:
-            ordn = _ordination.pcoa_eigh(dm * dm, ordination)
+            with _obs.span("pipeline.pcoa"):
+                ordn = _ordination.pcoa_eigh(dm * dm, ordination)
     elif pl.materialize == "stream":
-        mat2, gower = _streaming.build_mat2_streaming(
-            prepare(x), rows_fn, block=pl.row_block)
-        mat2_dev = jnp.asarray(mat2)
+        with _obs.span(f"stage1.{metric}",
+                       _stage1_attrs(pl, dspec, n, d, "stream")):
+            mat2, gower = _streaming.build_mat2_streaming(
+                prepare(x), rows_fn, block=pl.row_block)
+            mat2_dev = jnp.asarray(mat2)
         del mat2
         res = engine.run_design(
             mat2_dev, design, n_perms=n_perms, key=key, impl=sw_impl,
@@ -349,9 +450,11 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
     elif pl.materialize == "fused":
         xprep = prepare(x)
         if dense_mode:
-            s_cols, _, stats = _streaming.fused_sw_design(
-                xprep, rows_fn, design, key, n_total,
-                row_block=pl.row_block, chunk=pl.sw.chunk)
+            with _obs.span("bridge.fused",
+                           _fused_attrs(pl, n, d, n_groups_plan, n_total)):
+                s_cols, _, stats = _streaming.fused_sw_design(
+                    xprep, rows_fn, design, key, n_total,
+                    row_block=pl.row_block, chunk=pl.sw.chunk)
             res = engine.design_result(
                 jnp.asarray(s_cols, jnp.float32), design, n_objects=n,
                 n_perms=n_perms, method="pipeline-design[fused]",
@@ -360,10 +463,12 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
         else:
             inv_gs = permutations.inv_group_sizes(design.grouping,
                                                   design.n_groups)
-            s_w, s_t, stats = _streaming.fused_sw(
-                xprep, rows_fn, design.grouping, inv_gs, key, n_total,
-                row_block=pl.row_block, chunk=pl.sw.chunk,
-                strata=design.strata)
+            with _obs.span("bridge.fused",
+                           _fused_attrs(pl, n, d, n_groups_plan, n_total)):
+                s_w, s_t, stats = _streaming.fused_sw(
+                    xprep, rows_fn, design.grouping, inv_gs, key, n_total,
+                    row_block=pl.row_block, chunk=pl.sw.chunk,
+                    strata=design.strata)
             res = engine.api.label_design_result(
                 jnp.asarray(s_w, jnp.float32), jnp.float32(s_t), design,
                 n_objects=n, n_perms=n_perms,
@@ -374,10 +479,14 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
         fspec = _registry.get_fused(pl.fused_impl)
         xprep = prepare(x)
         if dense_mode:
-            s_cols, _, stats = _streaming.fused_kernel_sw_design(
-                xprep, rows_fn, design, key, n_total, impl=fspec.kind,
-                kernel_metric=fspec.kernel_metric, row_block=pl.row_block,
-                chunk=pl.sw.chunk, tuning=pl.fused_tuning)
+            with _obs.span("bridge.fused-kernel",
+                           _fused_attrs(pl, n, d, n_groups_plan, n_total,
+                                        fspec=fspec)):
+                s_cols, _, stats = _streaming.fused_kernel_sw_design(
+                    xprep, rows_fn, design, key, n_total, impl=fspec.kind,
+                    kernel_metric=fspec.kernel_metric,
+                    row_block=pl.row_block, chunk=pl.sw.chunk,
+                    tuning=pl.fused_tuning)
             res = engine.design_result(
                 jnp.asarray(s_cols, jnp.float32), design, n_objects=n,
                 n_perms=n_perms,
@@ -387,11 +496,14 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
         else:
             inv_gs = permutations.inv_group_sizes(design.grouping,
                                                   design.n_groups)
-            s_w, s_t, stats = _streaming.fused_kernel_sw(
-                xprep, rows_fn, design.grouping, inv_gs, key, n_total,
-                impl=fspec.kind, kernel_metric=fspec.kernel_metric,
-                row_block=pl.row_block, chunk=pl.sw.chunk,
-                tuning=pl.fused_tuning, strata=design.strata)
+            with _obs.span("bridge.fused-kernel",
+                           _fused_attrs(pl, n, d, n_groups_plan, n_total,
+                                        fspec=fspec)):
+                s_w, s_t, stats = _streaming.fused_kernel_sw(
+                    xprep, rows_fn, design.grouping, inv_gs, key, n_total,
+                    impl=fspec.kind, kernel_metric=fspec.kernel_metric,
+                    row_block=pl.row_block, chunk=pl.sw.chunk,
+                    tuning=pl.fused_tuning, strata=design.strata)
             res = engine.api.label_design_result(
                 jnp.asarray(s_w, jnp.float32), jnp.float32(s_t), design,
                 n_objects=n, n_perms=n_perms,
@@ -402,8 +514,9 @@ def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,
         raise ValueError(pl.materialize)
 
     if ordination is not None and ordn is None:
-        ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
-                                         row_block=pl.row_block)
+        with _obs.span("pipeline.pcoa"):
+            ordn = _ordination.pcoa_features(xprep, rows_fn, ordination,
+                                             row_block=pl.row_block)
     return dataclasses.replace(
         res,
         plan=f"{pl.describe_stage1()} | {pl.reason} :: {res.plan} "
@@ -628,7 +741,13 @@ def _pipeline_many_fused(xs: Array, groupings: Array, *, n_groups: int,
         args = engine.api.put_study_sharded(mesh, args)
         where = (f"vmap@data[{data_ways}]"
                  + (f"+pad{s_pad}" if s_pad else ""))
-    s_w_all, rs = run(*args)               # (S', n_chunks*ch), (S', n+pad)
+    with _obs.span("bridge.fused-kernel",
+                   _fused_attrs(pl, n, d, n_groups, n_total,
+                                fspec=_registry.get_fused(pl.fused_impl),
+                                studies=s_count)):
+        s_w_all, rs = _obs.maybe_block(run(*args))  # (S', n_chunks*ch)
+    _obs.metrics.inc("engine.studies", s_count)
+    _obs.record_device_memory()
     s_w_all = s_w_all[:s_count, :n_total]
     s_t = jnp.sum(rs[:s_count, :n], axis=1) / 2.0 / n
     f_perms = jax.vmap(f_from_sw, in_axes=(0, 0, None, None))(
@@ -743,7 +862,13 @@ def _pipeline_many_fused_design(xs: Array, groupings: Array, *,
         args = engine.api.put_study_sharded(mesh, args)
         where = (f"vmap@data[{data_ways}]"
                  + (f"+pad{s_pad}" if s_pad else ""))
-    s_cols_all, rs = run(*args)        # (S', n_chunks*ch, K), (S', n+pad)
+    with _obs.span("bridge.fused-kernel",
+                   _fused_attrs(pl, n, d, n_groups, n_total,
+                                fspec=_registry.get_fused(pl.fused_impl),
+                                studies=s_count)):
+        s_cols_all, rs = _obs.maybe_block(run(*args))  # (S', nc*ch, K)
+    _obs.metrics.inc("engine.studies", s_count)
+    _obs.record_device_memory()
     s_cols = s_cols_all[:s_count, :n_total]
 
     ord_res = None

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs as _obs
 from repro.core import distance as _dist
 from repro.core import fstat, permutations
 
@@ -142,10 +143,13 @@ def build_mat2_streaming(xprep: Array, rows_fn: Callable, *, block: int):
     mat2 = np.empty((n, n), np.float32)
     row_sums = np.zeros((n,), np.float64)
     for lo, slab in mat2_row_blocks(xprep, rows_fn, block=block):
-        hi = min(lo + slab.shape[0], n)
-        rows = np.asarray(slab[: hi - lo])
-        mat2[lo:hi] = rows
-        row_sums[lo:hi] = rows.sum(axis=1, dtype=np.float64)
+        with _obs.span("stream.mat2_block", {"lo": lo}):
+            hi = min(lo + slab.shape[0], n)
+            # np.asarray is the device sync for this slab — inside the span
+            rows = np.asarray(slab[: hi - lo])
+            mat2[lo:hi] = rows
+            row_sums[lo:hi] = rows.sum(axis=1, dtype=np.float64)
+    _obs.metrics.inc("pipeline.mat2_bytes_built", 4.0 * n * n)
     return mat2, GowerStats(row_sums=row_sums, total=float(row_sums.sum()),
                             n=n)
 
@@ -233,15 +237,16 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
     s_t_sum = 0.0
     n_row_blocks = 0
     for lo_r, slab in mat2_row_blocks(xprep, rows_fn, block=row_block):
-        n_row_blocks += 1
-        s_t_sum += float(jnp.sum(slab))      # s_T marginal, once per slab
-        for lo_p in range(0, n_total, chunk):
-            sw = _fused_sw_step(
-                slab, grouping, strata, inv_gs, key, jnp.int32(lo_r),
-                jnp.int32(lo_p), chunk=chunk, block=slab.shape[0], n=n,
-                n_groups=n_groups)
-            hi = min(lo_p + chunk, n_total)
-            out[lo_p:hi] += np.asarray(sw[: hi - lo_p], np.float64)
+        with _obs.span("fused.row_slab", {"lo": lo_r}):
+            n_row_blocks += 1
+            s_t_sum += float(jnp.sum(slab))  # s_T marginal, once per slab
+            for lo_p in range(0, n_total, chunk):
+                sw = _fused_sw_step(
+                    slab, grouping, strata, inv_gs, key, jnp.int32(lo_r),
+                    jnp.int32(lo_p), chunk=chunk, block=slab.shape[0], n=n,
+                    n_groups=n_groups)
+                hi = min(lo_p + chunk, n_total)
+                out[lo_p:hi] += np.asarray(sw[: hi - lo_p], np.float64)
         if progress is not None:
             progress(min(lo_r + row_block, n), n)
     stats = FusedStats(
@@ -249,6 +254,8 @@ def fused_sw(xprep: Array, rows_fn: Callable, grouping: Array,
         row_block=row_block, n_row_blocks=n_row_blocks,
         peak_slab_bytes=4 * row_block * n,
         peak_label_bytes=4 * chunk * n)
+    _obs.metrics.inc("fused.row_slabs", n_row_blocks)
+    _obs.metrics.inc("fused.chunk_steps", n_row_blocks * stats.n_chunks)
     return out, s_t_sum / 2.0 / n, stats
 
 
@@ -280,15 +287,16 @@ def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
     s_t_sum = 0.0
     n_row_blocks = 0
     for lo_r, slab in mat2_row_blocks(xprep, rows_fn, block=row_block):
-        n_row_blocks += 1
-        s_t_sum += float(jnp.sum(slab))
-        for lo_p in range(0, n_total, chunk):
-            sc = _fused_sw_step_cols(
-                slab, basis, strata, key, jnp.int32(lo_r), jnp.int32(lo_p),
-                chunk=chunk, block=slab.shape[0], n=n, k_cols=k,
-                groups=groups)
-            hi = min(lo_p + chunk, n_total)
-            out[lo_p:hi] += np.asarray(sc[: hi - lo_p], np.float64)
+        with _obs.span("fused.row_slab", {"lo": lo_r, "cols": k}):
+            n_row_blocks += 1
+            s_t_sum += float(jnp.sum(slab))
+            for lo_p in range(0, n_total, chunk):
+                sc = _fused_sw_step_cols(
+                    slab, basis, strata, key, jnp.int32(lo_r),
+                    jnp.int32(lo_p), chunk=chunk, block=slab.shape[0], n=n,
+                    k_cols=k, groups=groups)
+                hi = min(lo_p + chunk, n_total)
+                out[lo_p:hi] += np.asarray(sc[: hi - lo_p], np.float64)
         if progress is not None:
             progress(min(lo_r + row_block, n), n)
     stats = FusedStats(
@@ -296,6 +304,8 @@ def fused_sw_design(xprep: Array, rows_fn: Callable, design, key: jax.Array,
         row_block=row_block, n_row_blocks=n_row_blocks,
         peak_slab_bytes=4 * row_block * n,
         peak_label_bytes=4 * chunk * n * (k + 1))
+    _obs.metrics.inc("fused.row_slabs", n_row_blocks)
+    _obs.metrics.inc("fused.chunk_steps", n_row_blocks * stats.n_chunks)
     return out, s_t_sum / 2.0 / n, stats
 
 
@@ -453,6 +463,7 @@ def fused_sw_onepass(xprep: Array, rows_fn: Callable, grouping: Array,
         rows_fn=rows_fn, block=block, chunk=chunk, n_chunks=n_chunks, n=n,
         n_rows_pad=n_pad, n_groups=n_groups)
     s_t = float(jnp.sum(rs)) / 2.0 / n
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
     stats = FusedKernelStats(
         impl="xla", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
         row_block=block, peak_slab_bytes=4 * block * n,
@@ -479,6 +490,7 @@ def fused_sw_onepass_design(xprep: Array, rows_fn: Callable, design,
         block=block, chunk=chunk, n_chunks=n_chunks, n=n, n_rows_pad=n_pad,
         k_cols=k)
     s_t = float(jnp.sum(rs)) / 2.0 / n
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
     stats = FusedKernelStats(
         impl="xla", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
         row_block=block, peak_slab_bytes=4 * block * n,
@@ -549,16 +561,17 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
     rowsums = None
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        if strata is None:
-            g = _labels_step(key, grouping, jnp.int32(lo), chunk=chunk)
-        else:
-            g = _strata_labels_step(key, grouping, strata, jnp.int32(lo),
-                                    chunk=chunk)
-        sw, rs = _fops.fused_sw_rows(
-            xprep, xprep, g, g, inv_gs, 0, metric=kernel_metric,
-            interpret=interpret, **scale_kwargs, **tuning)
-        hi = min(lo + chunk, n_total)
-        out[lo:hi] = np.asarray(sw[: hi - lo], np.float64)
+        with _obs.span("fusedk.chunk", {"lo": lo}):
+            if strata is None:
+                g = _labels_step(key, grouping, jnp.int32(lo), chunk=chunk)
+            else:
+                g = _strata_labels_step(key, grouping, strata, jnp.int32(lo),
+                                        chunk=chunk)
+            sw, rs = _fops.fused_sw_rows(
+                xprep, xprep, g, g, inv_gs, 0, metric=kernel_metric,
+                interpret=interpret, **scale_kwargs, **tuning)
+            hi = min(lo + chunk, n_total)
+            out[lo:hi] = np.asarray(sw[: hi - lo], np.float64)
         if rowsums is None:
             rowsums = np.asarray(rs, np.float64)
         n_chunks += 1
@@ -571,6 +584,7 @@ def fused_sw_megakernel(xprep: Array, grouping: Array, inv_gs: Array,
         impl="pallas", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
         row_block=tr, peak_slab_bytes=16 * tr * tc,  # 4 VMEM scratch tiles
         peak_label_bytes=4 * chunk * n)
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
     return out, s_t, stats
 
 
@@ -597,13 +611,15 @@ def fused_sw_megakernel_design(xprep: Array, design, key: jax.Array,
     rowsums = None
     n_chunks = 0
     for lo in range(0, n_total, chunk):
-        perms = _strata_perms_step(key, strata, jnp.int32(lo), chunk=chunk)
-        v = fstat.basis_perm_factors(basis, perms)
-        sc, rs = _fops.fused_sw_rows_cols(
-            xprep, xprep, v, v, 0, metric=kernel_metric,
-            interpret=interpret, **scale_kwargs, **tuning)
-        hi = min(lo + chunk, n_total)
-        out[lo:hi] = np.asarray(sc[: hi - lo], np.float64)
+        with _obs.span("fusedk.chunk", {"lo": lo, "cols": k}):
+            perms = _strata_perms_step(key, strata, jnp.int32(lo),
+                                       chunk=chunk)
+            v = fstat.basis_perm_factors(basis, perms)
+            sc, rs = _fops.fused_sw_rows_cols(
+                xprep, xprep, v, v, 0, metric=kernel_metric,
+                interpret=interpret, **scale_kwargs, **tuning)
+            hi = min(lo + chunk, n_total)
+            out[lo:hi] = np.asarray(sc[: hi - lo], np.float64)
         if rowsums is None:
             rowsums = np.asarray(rs, np.float64)
         n_chunks += 1
@@ -616,6 +632,7 @@ def fused_sw_megakernel_design(xprep: Array, design, key: jax.Array,
         impl="pallas", n_total=n_total, chunk=chunk, n_chunks=n_chunks,
         row_block=tr, peak_slab_bytes=16 * tr * tc,
         peak_label_bytes=4 * chunk * n * (k + 1))
+    _obs.metrics.inc("engine.perm_chunks", n_chunks)
     return out, s_t, stats
 
 
@@ -750,10 +767,11 @@ def fused_sw_sharded(mesh, xprep: Array, rows_fn: Callable, grouping: Array,
     rowsums = None
     n_windows = 0
     for wlo in range(0, n_total, window):
-        s_w, rs = fn(xpad, xprep, grouping, inv_gs, key,
-                     jnp.full((1,), wlo, jnp.int32))
-        hi = min(wlo + window, n_total)
-        out[wlo:hi] = np.asarray(s_w[: hi - wlo], np.float64)
+        with _obs.span("fusedk.window", {"lo": wlo}):
+            s_w, rs = fn(xpad, xprep, grouping, inv_gs, key,
+                         jnp.full((1,), wlo, jnp.int32))
+            hi = min(wlo + window, n_total)
+            out[wlo:hi] = np.asarray(s_w[: hi - wlo], np.float64)
         if rowsums is None:
             rowsums = np.asarray(rs, np.float64)
         n_windows += 1
@@ -763,4 +781,5 @@ def fused_sw_sharded(mesh, xprep: Array, rows_fn: Callable, grouping: Array,
         n_chunks=n_windows * perm_ways, row_block=block,
         peak_slab_bytes=4 * block * n,
         peak_label_bytes=4 * chunk_local * n * (n_groups + 1))
+    _obs.metrics.inc("engine.perm_chunks", stats.n_chunks)
     return out, s_t, stats

@@ -27,6 +27,18 @@ FIX_NOTES = {
 }
 
 
+def render_table(headers, rows):
+    """Generic column-aligned markdown table (shared with obs.report)."""
+    cells = [list(map(str, headers))] + [list(map(str, r)) for r in rows]
+    widths = [max(len(row[i]) for row in cells)
+              for i in range(len(headers))]
+    def fmt(row):
+        return "| " + " | ".join(c.ljust(w)
+                                 for c, w in zip(row, widths)) + " |"
+    sep = "|" + "|".join("-" * (w + 2) for w in widths) + "|"
+    return "\n".join([fmt(cells[0]), sep] + [fmt(r) for r in cells[1:]])
+
+
 def load(results: pathlib.Path, mesh: str):
     out = {}
     for f in results.glob(f"*__{mesh}.json"):

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
+
 Array = jax.Array
 
 
@@ -81,6 +83,7 @@ class ServeLoop:
             if self.slots[i] is None and queue:
                 req = queue.pop(0)
                 self.slots[i] = req
+                _obs.metrics.inc("serve.requests_admitted")
                 # feed the prompt one token at a time (simple; a production
                 # engine would run prefill into this slot instead)
                 self.slot_len[i] = 0
@@ -95,13 +98,16 @@ class ServeLoop:
         steps = 0
         while steps < max_steps and (queue or any(
                 s is not None for s in self.slots)):
-            key, sub = jax.random.split(key)
-            active_len = int(self.slot_len.max()) if len(
-                self.slot_len) else 0
-            nxt, logits, self.caches = self.step_fn(
-                self.params, jnp.asarray(self.tokens), self.caches,
-                jnp.asarray(active_len, jnp.int32), jax.random.key_data(sub))
-            nxt = np.asarray(nxt)
+            with _obs.span("serve.step", {"step": steps}):
+                key, sub = jax.random.split(key)
+                active_len = int(self.slot_len.max()) if len(
+                    self.slot_len) else 0
+                nxt, logits, self.caches = self.step_fn(
+                    self.params, jnp.asarray(self.tokens), self.caches,
+                    jnp.asarray(active_len, jnp.int32),
+                    jax.random.key_data(sub))
+                # np.asarray syncs the decode step — keep it inside the span
+                nxt = np.asarray(nxt)
             for i, req in enumerate(self.slots):
                 if req is None:
                     continue
@@ -120,6 +126,8 @@ class ServeLoop:
                         req.done = True
                         self.slots[i] = None
                         self.slot_len[i] = 0
+                        _obs.metrics.inc("serve.requests_completed")
             self._admit(queue)
             steps += 1
+        _obs.metrics.inc("serve.steps", steps)
         return requests

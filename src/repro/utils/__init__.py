@@ -5,4 +5,4 @@ from repro.utils.tree import (  # noqa: F401
     tree_zeros_like,
     tree_cast,
 )
-from repro.utils.timing import Timer, time_fn  # noqa: F401
+from repro.utils.timing import Timer, TimingStats, time_fn  # noqa: F401

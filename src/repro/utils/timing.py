@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import dataclasses
+import statistics
 import time
 
 import jax
@@ -18,8 +20,37 @@ class Timer:
         self.elapsed = time.perf_counter() - self.start
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kwargs) -> float:
-    """Median wall-time (seconds) of fn(*args), block_until_ready'd."""
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Repeat-measurement summary from `time_fn`.
+
+    Floats coerce to the median, so legacy `float(time_fn(...))` call
+    sites (and arithmetic via .median) keep their old meaning.
+    """
+    median: float
+    min: float
+    mean: float
+    std: float
+    n: int
+    trimmed: int = 0
+
+    def __float__(self) -> float:
+        return self.median
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, trim: int = 0,
+            **kwargs) -> TimingStats:
+    """Time fn(*args), block_until_ready'd, over `iters` repeats.
+
+    trim: drop the `trim` slowest AND `trim` fastest measurements before
+    summarizing (symmetric trim — robust to scheduler noise on shared
+    hosts). Requires iters > 2*trim.
+
+    Returns TimingStats; use `.median` (or float()) where a scalar is
+    needed.
+    """
+    if iters <= 2 * trim:
+        raise ValueError(f"iters={iters} must exceed 2*trim={2 * trim}")
     for _ in range(warmup):
         out = fn(*args, **kwargs)
         jax.block_until_ready(out)
@@ -30,4 +61,12 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kwargs) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    kept = times[trim: len(times) - trim] if trim else times
+    return TimingStats(
+        median=statistics.median(kept),
+        min=kept[0],
+        mean=statistics.fmean(kept),
+        std=statistics.pstdev(kept) if len(kept) > 1 else 0.0,
+        n=len(kept),
+        trimmed=trim,
+    )

@@ -1,0 +1,268 @@
+"""Observability subsystem: span nesting + Chrome export, counter
+byte-accuracy against the streaming bridge, the retrace counter (catches
+shape-polymorphic re-jits; warm calls report zero), allocation-free
+disabled mode, predicted-vs-measured report content, psum-free snapshot
+merging, and the autotune cache counters + warn-once."""
+
+import json
+import tracemalloc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, pipeline
+from repro.engine import planner as eplanner
+from repro.obs import jaxhooks
+
+N, D, G = 53, 24, 4
+
+
+def _study(seed=0, n=N, d=D, g=G):
+    rng = np.random.default_rng(seed)
+    x = rng.gamma(1.0, 1.0, size=(n, d)).astype(np.float32)
+    x[:, 0] = np.maximum(x[:, 0], 1e-3)
+    grouping = rng.integers(0, g, size=n).astype(np.int32)
+    grouping[:g] = np.arange(g)
+    return x, grouping
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with telemetry off and buffers empty."""
+    obs.disable()
+    obs.clear()
+    obs.metrics.reset()
+    yield
+    obs.disable()
+    obs.clear()
+    obs.metrics.reset()
+
+
+class TestSpans:
+    def test_nesting_depth_and_parent(self):
+        obs.enable(trace=True, metrics=False)
+        with obs.span("outer"):
+            with obs.span("inner", {"k": 1}):
+                pass
+        evs = {e["name"]: e for e in obs.events()}
+        assert evs["outer"]["args"]["depth"] == 0
+        assert "parent" not in evs["outer"]["args"]
+        assert evs["inner"]["args"]["depth"] == 1
+        assert evs["inner"]["args"]["parent"] == "outer"
+        assert evs["inner"]["args"]["k"] == 1
+        # inner completes first and nests inside outer's window
+        assert evs["inner"]["ts"] >= evs["outer"]["ts"]
+        assert (evs["inner"]["ts"] + evs["inner"]["dur"]
+                <= evs["outer"]["ts"] + evs["outer"]["dur"] + 1e-3)
+
+    def test_export_chrome_trace_shape(self, tmp_path):
+        obs.enable(trace=True, metrics=False)
+        with obs.span("stage1.test", {"predicted_bytes": 64.0}):
+            pass
+        path = str(tmp_path / "trace.json")
+        obs.trace.export(path, extra_metadata={"run": "t"})
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["displayTimeUnit"] == "ms"
+        assert doc["otherData"]["source"] == "repro.obs"
+        assert doc["otherData"]["run"] == "t"
+        (ev,) = doc["traceEvents"]
+        # the golden trace_event fields chrome://tracing requires
+        assert ev["ph"] == "X" and ev["cat"] == "repro"
+        assert {"name", "ts", "dur", "pid", "tid", "args"} <= set(ev)
+        assert ev["args"]["predicted_bytes"] == 64.0
+
+    def test_stage_table_aggregates(self):
+        obs.enable(trace=True, metrics=False)
+        for _ in range(3):
+            with obs.span("s", {"predicted_bytes": 10.0}):
+                pass
+        row = obs.trace.stage_table()["s"]
+        assert row["calls"] == 3
+        assert row["predicted_bytes"] == 30.0
+        assert row["total_s"] >= 0.0 and row["mean_s"] >= 0.0
+
+    def test_session_restores_prior_state(self, tmp_path):
+        assert not obs.enabled()
+        path = str(tmp_path / "t.json")
+        with obs.session(path):
+            assert obs.trace_enabled()
+            with obs.span("inside"):
+                pass
+        assert not obs.enabled()
+        assert json.load(open(path))["traceEvents"]
+
+
+class TestDisabledMode:
+    def test_span_is_shared_noop_singleton(self):
+        assert obs.span("a") is obs.span("b", {"x": 1})
+
+    def test_no_events_no_counters(self):
+        with obs.span("ghost"):
+            pass
+        obs.metrics.inc("ghost.counter")
+        assert obs.events() == []
+        assert obs.metrics.value("ghost.counter") == 0.0
+
+    def test_hot_path_allocation_free(self):
+        # warm every lazy path, then assert the steady state allocates
+        # nothing: this is the per-chunk cost the scheduler loop pays
+        for _ in range(4):
+            with obs.span("warm"):
+                pass
+            obs.metrics.inc("warm")
+        tracemalloc.start()
+        try:
+            before = tracemalloc.take_snapshot()
+            for _ in range(100):
+                with obs.span("hot", {"lo": 0}):
+                    pass
+                obs.metrics.inc("hot", 1.0)
+            after = tracemalloc.take_snapshot()
+        finally:
+            tracemalloc.stop()
+        grown = sum(s.size_diff for s in after.compare_to(before, "lineno")
+                    if s.size_diff > 0 and any(
+                        "obs" in (fr.filename or "")
+                        for fr in s.traceback))
+        assert grown == 0, f"disabled obs hot path allocated {grown} bytes"
+
+
+class TestCounters:
+    def test_mat2_bytes_built_exact(self):
+        from repro.pipeline.streaming import build_mat2_streaming
+        n, d = 96, 16
+        x = jnp.asarray(np.random.default_rng(0).random((n, d)), jnp.float32)
+        prepare, rows_fn, _ = pipeline.get("braycurtis.blocked").bound(
+            block=32)
+        obs.enable(trace=True, metrics=True)
+        mat2, stats = build_mat2_streaming(prepare(x), rows_fn, block=32)
+        assert obs.metrics.value("pipeline.mat2_bytes_built") == 4.0 * n * n
+        assert mat2.shape == (n, n)
+        # one span per 32-row block
+        tbl = obs.trace.stage_table()
+        assert tbl["stream.mat2_block"]["calls"] == n // 32
+
+    def test_retrace_counter_catches_shape_polymorphic_rejit(self):
+        obs.enable(trace=False, metrics=True)
+
+        @jax.jit
+        def f(v):
+            return jnp.sum(v * 2.0)
+
+        f(jnp.ones((8,))).block_until_ready()
+        before = obs.metrics.value(jaxhooks.RETRACES)
+        f(jnp.ones((8,))).block_until_ready()      # warm: same shape
+        assert obs.metrics.value(jaxhooks.RETRACES) == before
+        f(jnp.ones((9,))).block_until_ready()      # new shape: re-jit
+        assert obs.metrics.value(jaxhooks.RETRACES) >= before + 1
+
+    def test_merge_snapshots_psum_free(self):
+        hosts = [
+            {"counters": {"engine.perm_chunks": 3.0},
+             "gauges": {"device0.peak_bytes_in_use": 100.0},
+             "histograms": {"t": {"count": 2, "total": 4.0,
+                                  "min": 1.0, "max": 3.0}}},
+            {"counters": {"engine.perm_chunks": 5.0},
+             "gauges": {"device0.peak_bytes_in_use": 250.0},
+             "histograms": {"t": {"count": 1, "total": 9.0,
+                                  "min": 9.0, "max": 9.0}}},
+        ]
+        m = obs.metrics.merge_snapshots(hosts)
+        assert m["counters"]["engine.perm_chunks"] == 8.0        # sum
+        assert m["gauges"]["device0.peak_bytes_in_use"] == 250.0  # peak
+        h = m["histograms"]["t"]
+        assert (h["count"], h["total"], h["min"], h["max"]) == (3, 13.0,
+                                                                1.0, 9.0)
+
+    def test_counter_delta(self):
+        obs.enable(trace=False, metrics=True)
+        obs.metrics.inc("a", 2.0)
+        before = obs.metrics.snapshot()
+        obs.metrics.inc("a", 3.0)
+        obs.metrics.inc("b", 1.0)
+        assert obs.metrics.counter_delta(before) == {"a": 3.0, "b": 1.0}
+
+
+class TestWarmPipeline:
+    @pytest.mark.parametrize("mat", ["dense", "stream", "fused-kernel"])
+    def test_second_call_zero_retraces_and_report(self, mat, capsys):
+        x, grouping = _study()
+        xj, gj = jnp.asarray(x), jnp.asarray(grouping)
+        kw = dict(metric="braycurtis", n_perms=39, key=jax.random.key(0),
+                  materialize=mat)
+        obs.enable(trace=True, metrics=True)
+        r1 = pipeline.pipeline(xj, gj, **kw)
+        jax.block_until_ready(r1.f_perms)
+        before = obs.metrics.value(jaxhooks.RETRACES)
+        r2 = pipeline.pipeline(xj, gj, **kw)
+        jax.block_until_ready(r2.f_perms)
+        delta = obs.metrics.value(jaxhooks.RETRACES) - before
+        assert delta == 0, (f"warm {mat} pipeline re-traced {delta} "
+                            "jaxprs on an identical second call")
+        assert float(r1.f_stat) == pytest.approx(float(r2.f_stat))
+        # the reconciliation table names the stage and a bandwidth column
+        text = obs.report(file=None)
+        assert "GB/s" in text
+        expect = {"dense": "stage1.braycurtis",
+                  "stream": "stage1.braycurtis",
+                  "fused-kernel": "bridge.fused-kernel"}[mat]
+        assert expect in text
+
+    def test_trace_kwarg_exports_without_global_enable(self, tmp_path):
+        x, grouping = _study()
+        path = str(tmp_path / "pipe.json")
+        res = pipeline.pipeline(jnp.asarray(x), jnp.asarray(grouping),
+                                metric="braycurtis", n_perms=19,
+                                key=jax.random.key(0), materialize="stream",
+                                trace=path)
+        assert 0.0 <= float(res.p_value) <= 1.0
+        names = {e["name"] for e in json.load(open(path))["traceEvents"]}
+        assert "stage1.braycurtis" in names
+        assert "engine.sw" in names
+        assert not obs.enabled()   # session restored the disabled state
+
+
+class TestAutotuneCacheCounters:
+    def test_hit_miss_and_disabled_warn_once(self, tmp_path, monkeypatch,
+                                             caplog):
+        path = str(tmp_path / "tune.json")
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, path)
+        eplanner.load_autotune_cache(reload=True)
+        obs.enable(trace=False, metrics=True)
+        assert eplanner.measured_impl("cpu", 64, 4) is None
+        assert obs.metrics.value("autotune.cache.miss") == 1.0
+        cands = list(eplanner._default_candidates("cpu"))
+        eplanner.record_entry(eplanner._persist_key("cpu", 64, 4),
+                              {"impl": "matmul", "candidates": cands})
+        assert eplanner.measured_impl("cpu", 64, 4) == "matmul"
+        assert obs.metrics.value("autotune.cache.hit") == 1.0
+
+        # disabled path warns exactly once (logging, not warnings: tier-1
+        # runs with -W error semantics on the library surface)
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, "off")
+        eplanner.load_autotune_cache(reload=True)
+        eplanner._WARNED.discard("disabled")
+        import logging
+        with caplog.at_level(logging.WARNING, logger=eplanner.__name__):
+            eplanner._save_autotune_cache()
+            eplanner._save_autotune_cache()
+        msgs = [r for r in caplog.records
+                if "autotune cache disabled" in r.message]
+        assert len(msgs) == 1
+
+    def test_stale_schema_dropped_counter(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "tune.json")
+        # dist| keys require the current schema stamp; a schema-less one
+        # (pre-PR6 format) must be dropped on load, not silently trusted
+        stale = {"dist|cpu|braycurtis|blocked": {"impl": "blocked"}}
+        with open(path, "w") as f:
+            json.dump(stale, f)
+        monkeypatch.setenv(eplanner.AUTOTUNE_CACHE_ENV, path)
+        obs.enable(trace=False, metrics=True)
+        eplanner._WARNED.discard("stale")
+        cache = eplanner.load_autotune_cache(reload=True)
+        assert cache == {}
+        assert obs.metrics.value("autotune.cache.stale_dropped") == 1.0
