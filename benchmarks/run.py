@@ -9,6 +9,8 @@ Suites:
   sweep        paper section 2 workload envelope (n, n_perms scaling)
   pa_roofline  PERMANOVA arithmetic-intensity roofline on TPU v5e
   roofline     LM-zoo roofline table from dry-run artifacts (deliverable g)
+  serve        always-on PERMANOVA serving: studies/sec vs latency SLO,
+               p99 from serve.step spans, worker-death recovery overhead
 
 --json writes one BENCH_<suite>.json per suite (rows + host metadata) into
 --json-dir (default: cwd) — the machine-readable perf trajectory consumed
@@ -28,8 +30,8 @@ import traceback
 import jax
 
 from benchmarks import (fig1_sw_variants, permanova_roofline,
-                        pipeline_scale, roofline_report, stream_triad,
-                        sweep_scale)
+                        pipeline_scale, roofline_report, serve_bench,
+                        stream_triad, sweep_scale)
 from repro import obs
 
 SUITES = {
@@ -39,6 +41,7 @@ SUITES = {
     "pipeline": pipeline_scale.run,
     "pa_roofline": permanova_roofline.run,
     "roofline": roofline_report.run,
+    "serve": serve_bench.run,
 }
 
 

@@ -1,0 +1,99 @@
+"""Always-on PERMANOVA serving throughput (robustness PR deliverable).
+
+Drives `repro.serve.permanova.PermanovaServer` with a mixed-shape study
+stream and reports studies/sec against a fixed per-request latency SLO,
+with p50/p99 derived from the `serve.step` trace spans — the same
+telemetry a production deployment would alarm on. Buckets are warmed
+before the measured stream so rows time steady-state serving (the warm
+path re-traces zero jaxprs); a separate row measures the cold first
+request to show what the bucket cache saves. A chaos row replays the
+stream with one injected worker death and reports the recovery overhead
+relative to the clean run (results are bit-identical by construction —
+the chaos suite asserts it; here we only price it).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.distance import distance_matrix
+from repro.runtime.faultinject import FaultInjector
+from repro.serve.permanova import (PermanovaServer, StudyRequest,
+                                   serve_stats_from_events)
+
+SLO_S = 0.25          # per-request latency objective for the throughput row
+N_PERMS = 199
+STREAM = 24           # measured requests per row
+
+
+def _stream(seed=0, n_studies=STREAM):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_studies):
+        n = int(rng.integers(18, 41))
+        x = rng.normal(size=(n, 5)).astype(np.float32)
+        g = rng.integers(0, 3, size=n).astype(np.int32)
+        reqs.append(StudyRequest(
+            grouping=g, dm=np.asarray(distance_matrix(x, "euclidean")),
+            n_perms=N_PERMS, seed=i, request_id=f"bench{i}"))
+    return reqs
+
+
+def _measure(srv, reqs):
+    obs.clear()
+    t0 = time.perf_counter()
+    out = srv.serve(reqs)
+    wall = time.perf_counter() - t0
+    stats = serve_stats_from_events(obs.events())
+    assert all(r.ok for r in out), [r.error for r in out if not r.ok]
+    lat = sorted(r.wall_s for r in out)
+    in_slo = sum(1 for s in lat if s <= SLO_S)
+    return out, wall, stats, in_slo
+
+
+def run(emit):
+    with obs.session():
+        reqs = _stream()
+
+        # cold: first-ever request pays bucket compile + plan measurement
+        srv = PermanovaServer(workers=3, block=64)
+        t0 = time.perf_counter()
+        r0 = srv.process(reqs[0])
+        cold = time.perf_counter() - t0
+        assert r0.ok
+        emit("serve/cold_first_request", cold * 1e6,
+             f"bucket={r0.bucket}")
+
+        # warm the remaining shape buckets out-of-band, then measure
+        for r in srv.serve(reqs):
+            assert r.ok
+        out, wall, stats, in_slo = _measure(srv, reqs)
+        emit("serve/warm_stream", wall / len(out) * 1e6,
+             f"studies_per_s={len(out)/wall:.2f} "
+             f"slo_{int(SLO_S*1e3)}ms={in_slo}/{len(out)} "
+             f"p50_ms={stats['p50_s']*1e3:.1f} "
+             f"p99_ms={stats['p99_s']*1e3:.1f}",
+             extra={"studies_per_s": round(len(out) / wall, 2),
+                    "slo_s": SLO_S, "in_slo": in_slo,
+                    "requests": len(out),
+                    "p50_s": round(stats["p50_s"], 5),
+                    "p99_s": round(stats["p99_s"], 5)})
+
+        # chaos: same stream, one worker killed mid-bag on a warm server;
+        # the delta over warm_stream is the price of re-dispatching the
+        # dead worker's blocks
+        inj = FaultInjector(seed=0).kill_worker_after_blocks(0, 1)
+        srv_f = PermanovaServer(workers=3, block=64, injector=inj)
+        for r in srv_f.serve(reqs):        # warm the faulty server too
+            assert r.ok
+        inj.kill_worker_after_blocks(0, 1)
+        out_f, wall_f, stats_f, _ = _measure(srv_f, reqs)
+        emit("serve/worker_death_stream", wall_f / len(out_f) * 1e6,
+             f"studies_per_s={len(out_f)/wall_f:.2f} "
+             f"p99_ms={stats_f['p99_s']*1e3:.1f} "
+             f"overhead_pct={(wall_f/wall-1)*100:.1f}",
+             extra={"studies_per_s": round(len(out_f) / wall_f, 2),
+                    "p99_s": round(stats_f["p99_s"], 5)})

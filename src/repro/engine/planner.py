@@ -282,20 +282,40 @@ def load_autotune_cache(*, reload: bool = False) -> Dict[str, dict]:
         try:
             with open(path) as f:
                 data = json.load(f)
-            if isinstance(data, dict):
-                _PERSIST = {k: v for k, v in data.items()
-                            if _valid_entry(k, v)}
-                dropped = len(data) - len(_PERSIST)
-                if dropped:
-                    _metrics.inc("autotune.cache.stale_dropped", dropped)
-                    _warn_once(
-                        "stale", f"autotune cache {path}: dropped {dropped} "
-                        f"entr{'y' if dropped == 1 else 'ies'} with a stale "
-                        f"schema (current schema {CACHE_SCHEMA}); they will "
-                        "be re-measured")
-        except (OSError, ValueError):  # corrupt/unreadable: measure afresh
-            pass
+            if not isinstance(data, dict):
+                raise ValueError(f"expected a JSON object, got "
+                                 f"{type(data).__name__}")
+            _PERSIST = {k: v for k, v in data.items()
+                        if _valid_entry(k, v)}
+            dropped = len(data) - len(_PERSIST)
+            if dropped:
+                _metrics.inc("autotune.cache.stale_dropped", dropped)
+                _warn_once(
+                    "stale", f"autotune cache {path}: dropped {dropped} "
+                    f"entr{'y' if dropped == 1 else 'ies'} with a stale "
+                    f"schema (current schema {CACHE_SCHEMA}); they will "
+                    "be re-measured")
+        except (OSError, ValueError) as e:
+            # Corrupt or unreadable (typically a crash mid-write truncated
+            # the document): QUARANTINE the file so the next writer starts
+            # clean and the evidence survives for debugging, then proceed
+            # with an empty cache — a serving process must never die over
+            # a cache. Warn once per process.
+            _quarantine_corrupt_cache(path, e)
     return _PERSIST
+
+
+def _quarantine_corrupt_cache(path: str, err: Exception) -> None:
+    quarantined = f"{path}.corrupt"
+    try:
+        os.replace(path, quarantined)
+        where = f"; quarantined to {quarantined}"
+    except OSError:
+        where = " (quarantine rename failed; leaving in place)"
+    _metrics.inc("autotune.cache.corrupt_quarantined")
+    _warn_once("corrupt",
+               f"autotune cache {path} is corrupt ({err}); continuing "
+               f"with an empty cache{where}. Entries will be re-measured.")
 
 
 def _save_autotune_cache() -> None:

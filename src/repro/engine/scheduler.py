@@ -65,6 +65,72 @@ def _step_cols(mat2, basis, strata, key, lo, *, fn, chunk, identity_first):
     return fn(mat2, fstat.basis_perm_factors(basis, perms))
 
 
+# ---------------------------------------------------------------------------
+# Serving block programs: masked variants of the chunk steps above.
+#
+# The always-on server (serve/permanova.py) pads every study up to a SHAPE
+# BUCKET so one compiled program serves all requests of that bucket; the
+# true sample count rides along as a traced `n_valid` scalar and the
+# masked/strata permutation generators keep pad rows inert (PR 4's ragged
+# contract). Each step computes s_W (or the per-column statistic) for ONE
+# BLOCK of global permutation indices [lo, lo+chunk) — the idempotent unit
+# of work the elastic executor dispatches, re-dispatches, and speculates:
+# key folding by global index makes a block a pure function of (key, lo),
+# so recomputation anywhere is bit-identical.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked(mat2, grouping, n_valid, inv_gs, key, lo, *, fn, chunk,
+                 identity_first):
+    gperms = permutations.masked_permutation_batch_dyn(
+        key, grouping, n_valid, lo, chunk, identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked_strata(mat2, grouping, strata, n_valid, inv_gs, key, lo, *,
+                        fn, chunk, identity_first):
+    st = permutations.masked_strata(strata, n_valid)
+    gperms = permutations.strata_label_batch_dyn(
+        key, grouping, st, lo, chunk, identity_first=identity_first)
+    return fn(mat2, gperms, inv_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked_cols(mat2, basis, strata, n_valid, key, lo, *, fn, chunk,
+                      identity_first):
+    from repro.core import fstat
+    st = permutations.masked_strata(strata, n_valid)
+    perms = permutations.strata_permutation_batch_dyn(
+        key, st, lo, chunk, identity_first=identity_first)
+    return fn(mat2, fstat.basis_perm_factors(basis, perms))
+
+
+def sw_block(mat2, grouping, n_valid, inv_gs, key, lo: int, *, fn,
+             block: int, strata=None):
+    """One label-mode serving block: s_W for global permutation indices
+    [lo, lo+block) on a (possibly padded) study. Returns a device array
+    of length `block`; callers slice the final ragged block themselves.
+    Plain requests pass strata=None; the strata-restricted program is a
+    separate jitted step so the free path's draws never change."""
+    if strata is None:
+        return _step_masked(mat2, grouping, n_valid, inv_gs, key,
+                            jnp.int32(lo), fn=fn, chunk=block,
+                            identity_first=True)
+    return _step_masked_strata(mat2, grouping, strata, n_valid, inv_gs, key,
+                               jnp.int32(lo), fn=fn, chunk=block,
+                               identity_first=True)
+
+
+def sw_cols_block(mat2, basis, strata, n_valid, key, lo: int, *, fn,
+                  block: int):
+    """One dense-design serving block: (block, K) per-column statistics
+    for global permutation indices [lo, lo+block)."""
+    return _step_masked_cols(mat2, basis, strata, n_valid, key,
+                             jnp.int32(lo), fn=fn, chunk=block,
+                             identity_first=True)
+
+
 def sw_streaming(mat2: Array, grouping: Array, inv_gs: Array, key: jax.Array,
                  n_total: int, fn: Callable, *, chunk: int,
                  identity_first: bool = True,

@@ -14,15 +14,18 @@ returning a shared no-op span.
 
 from repro.obs import core, jaxhooks, metrics, trace
 from repro.obs.core import (
+    buffer_cap,
     clear,
     device_sync,
     disable,
+    dropped_events,
     enable,
     enabled,
     events,
     maybe_block,
     metrics_enabled,
     session,
+    set_buffer_cap,
     span,
     trace_enabled,
 )
@@ -33,6 +36,7 @@ __all__ = [
     "core", "jaxhooks", "metrics", "trace",
     "span", "enable", "disable", "enabled", "session",
     "trace_enabled", "metrics_enabled", "events", "clear",
+    "set_buffer_cap", "buffer_cap", "dropped_events",
     "maybe_block", "device_sync", "record_device_memory",
     "report", "stage_rows",
 ]

@@ -31,6 +31,41 @@ _events: list = []                 # completed spans (trace_event dicts)
 _events_lock = threading.Lock()
 _t0_ns = time.perf_counter_ns()    # trace epoch (ts are relative to this)
 
+# Span-buffer ring cap: a long-running server traces indefinitely, so the
+# buffer keeps only the most recent `_max_events` COMPLETE spans (oldest
+# dropped first; drops are counted). $REPRO_OBS_MAX_EVENTS overrides the
+# default; set_buffer_cap() adjusts at runtime (0/None = unbounded).
+_max_events: Optional[int] = int(
+    os.environ.get("REPRO_OBS_MAX_EVENTS", "100000")) or None
+_dropped_events = 0
+
+
+def set_buffer_cap(n: Optional[int]) -> None:
+    """Cap the completed-span ring buffer at `n` events (None or 0 =
+    unbounded). Shrinking below the current buffer length drops the
+    oldest spans immediately."""
+    global _max_events
+    with _events_lock:
+        _max_events = int(n) if n else None
+        _trim_events_locked()
+
+
+def buffer_cap() -> Optional[int]:
+    return _max_events
+
+
+def dropped_events() -> int:
+    """Spans dropped by the ring cap since the last clear()."""
+    return _dropped_events
+
+
+def _trim_events_locked() -> None:
+    global _dropped_events
+    if _max_events is not None and len(_events) > _max_events:
+        overflow = len(_events) - _max_events
+        del _events[:overflow]
+        _dropped_events += overflow
+
 _stack: contextvars.ContextVar = contextvars.ContextVar(
     "repro_obs_span_stack", default=())
 
@@ -93,6 +128,7 @@ class _Span:
         }
         with _events_lock:
             _events.append(ev)
+            _trim_events_locked()
         return False
 
 
@@ -202,5 +238,7 @@ def events() -> list:
 
 
 def clear() -> None:
+    global _dropped_events
     with _events_lock:
         _events.clear()
+        _dropped_events = 0

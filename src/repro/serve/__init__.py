@@ -5,3 +5,12 @@ from repro.serve.engine import (  # noqa: F401
     greedy_sample,
     temperature_sample,
 )
+from repro.serve.permanova import (  # noqa: F401
+    PermanovaServer,
+    RetryPolicy,
+    ServeResult,
+    ServerOverloaded,
+    StudyRequest,
+    mc_pvalue_ci,
+    serve_stats_from_events,
+)

@@ -1,0 +1,698 @@
+"""Always-on multi-tenant PERMANOVA serving with fault tolerance.
+
+A persistent service admitting a stream of studies (arbitrary n, metric,
+design) and returning full PERMANOVA results under production failure
+modes. The design rests on one property: the permutation dimension is a
+bag of idempotent BLOCKS — labels are regenerated on device from
+fold_in(key, global_index), so any worker, any retry, any speculative
+duplicate, and any post-restart recomputation of a block is bit-identical
+by construction. Recovery is therefore exact recomputation, never
+approximate reconciliation.
+
+Layers:
+
+  * SHAPE BUCKETS — each request is padded up to a bucket size (next
+    power of two by default) and executed by a program compiled once per
+    (bucket, n_groups, mode) via the masked block steps in
+    engine/scheduler.py; the true sample count is a traced scalar, so a
+    warm server re-traces ZERO jaxprs for any request hitting an
+    existing bucket (asserted by the obs retrace counter). The planned
+    impl per bucket is persisted in the autotune cache under
+    `serveplan|...` keys, so plan decisions also survive restarts.
+  * ELASTIC EXECUTION — blocks run through
+    runtime.elastic.ElasticBlockExecutor, wired to the
+    runtime.heartbeat.HeartbeatMonitor failure detector: dead workers'
+    blocks are re-dispatched, stragglers are speculatively re-executed,
+    zombie completions are fenced off by heartbeat incarnations. All
+    chaos comes from the seeded runtime.faultinject.FaultInjector
+    against an injected clock.
+  * ROBUSTNESS POLICY — bounded admission queue with load shedding and a
+    backpressure signal; per-request deadlines with graceful degradation
+    (a reduced-n_perms result carrying a Monte-Carlo confidence interval
+    for the p-value, flagged `degraded=True`); jittered-backoff retries
+    for transient failures (simulated device OOM, full fleet loss);
+    checkpoint/resume of partial s_W accumulators through
+    checkpoint/manager.py so a restarted server finishes in-flight work
+    instead of replaying it.
+
+Determinism note: serving uses the MASKED permutation generators for
+every request (pad rows stay inert), so a request's null draws are a
+deterministic function of (seed, global index, bucket mask) — identical
+across failure modes, fleet sizes, and restarts, but a distinct stream
+from the unpadded engine.run() draws (PR 4's ragged contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import shutil
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import obs as _obs
+from repro.checkpoint import manager as ckpt_mod
+from repro.core import design as design_mod
+from repro.core import distance as distance_mod
+from repro.core import permutations
+from repro.core.permanova import (PermanovaResult, TermResult, f_from_sw)
+from repro.engine import planner, registry, scheduler
+from repro.runtime.elastic import AllWorkersDead, ElasticBlockExecutor
+from repro.runtime.faultinject import FaultInjector, SimulatedOOM
+
+
+# ---------------------------------------------------------------------------
+# Request / result contracts.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StudyRequest:
+    """One tenant study. Provide a distance matrix (`dm`) or raw features
+    (`x` + `metric`); `seed` fixes the permutation stream end to end."""
+    grouping: np.ndarray
+    dm: Optional[np.ndarray] = None
+    x: Optional[np.ndarray] = None
+    metric: str = "braycurtis"
+    n_groups: Optional[int] = None
+    n_perms: int = 999
+    seed: int = 0
+    strata: Optional[np.ndarray] = None
+    covariates: Optional[np.ndarray] = None
+    weights: Optional[np.ndarray] = None
+    deadline_s: Optional[float] = None
+    request_id: str = ""
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Serving envelope around the statistical result.
+
+    status: 'ok' | 'degraded' | 'shed' | 'failed'.
+    degraded=True means the deadline cut the sweep short: `result` holds
+    statistics over `n_perms_done` permutations and `p_ci` is a
+    Monte-Carlo confidence interval for the p-value the full-n_perms run
+    would report (the result contract's graceful-degradation flag).
+    """
+    request_id: str
+    status: str
+    result: Optional[PermanovaResult] = None
+    degraded: bool = False
+    n_perms_done: int = 0
+    p_ci: Optional[Tuple[float, float]] = None
+    error: str = ""
+    retries: int = 0
+    wall_s: float = 0.0
+    bucket: str = ""
+    report: object = None      # runtime.elastic.ExecReport of the last try
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("ok", "degraded")
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Jittered exponential backoff for TRANSIENT failures (simulated
+    device OOM escaping block-level retry, or losing the whole fleet)."""
+    max_retries: int = 3
+    base_backoff_s: float = 0.05
+    max_backoff_s: float = 2.0
+    jitter: float = 0.5
+
+
+def mc_pvalue_ci(n_ge: int, m: int, n_perms_full: int,
+                 conf: float = 0.95) -> Tuple[float, float]:
+    """Predictive CI for the p-value the FULL-n_perms run would report.
+
+    A degraded response completed m of n_perms_full permutations with
+    `n_ge` null exceedances. The full run's count is n_ge + B, where B is
+    the hits among the permutations the deadline cut off; under a
+    Jeffreys Beta(1/2, 1/2) prior on the exceedance probability, B | data
+    is beta-binomial. Mapping its conf-level predictive quantiles through
+    p = (n_ge + B + 1) / (n_perms_full + 1) yields an interval that
+    covers the full run's actual p-value — not merely the limiting
+    exceedance probability, which the full run's own Monte-Carlo noise
+    can escape.
+    """
+    m, k, n_full = int(m), int(n_ge), int(n_perms_full)
+    rest = max(n_full - m, 0)
+    if rest == 0:
+        p = (k + 1.0) / (n_full + 1.0)
+        return (p, p)
+    a, b = k + 0.5, m - k + 0.5
+    alpha = 1.0 - conf
+    try:
+        from scipy.stats import betabinom
+        b_lo = int(betabinom.ppf(alpha / 2, rest, a, b))
+        b_hi = int(betabinom.ppf(1 - alpha / 2, rest, a, b))
+    except Exception:       # no scipy: normal approx to the predictive
+        mean = rest * a / (a + b)
+        var = (rest * a * b * (a + b + rest)) / ((a + b) ** 2
+                                                 * (a + b + 1.0))
+        z = 1.959963984540054 if conf >= 0.95 else 1.6448536269514722
+        b_lo = max(0, int(math.floor(mean - z * math.sqrt(var))))
+        b_hi = min(rest, int(math.ceil(mean + z * math.sqrt(var))))
+    return ((k + b_lo + 1.0) / (n_full + 1.0),
+            (k + b_hi + 1.0) / (n_full + 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Internal prepared request + shape buckets.
+# ---------------------------------------------------------------------------
+
+_MODE_LABELS = "labels"
+_MODE_STRATA = "labels_strata"
+_MODE_COLS = "cols"
+
+
+@dataclasses.dataclass
+class _Prepared:
+    req: StudyRequest
+    mode: str
+    n: int                      # true sample count
+    n_pad: int
+    n_groups: int
+    k_cols: int                 # 0 on label modes
+    n_total: int                # n_perms + 1
+    mat2: "jax.Array"           # (n_pad, n_pad) f32, pad rows zero
+    grouping: "jax.Array"       # (n_pad,) i32, sentinel-padded
+    strata: Optional["jax.Array"]
+    basis: Optional["jax.Array"]
+    inv_gs: Optional["jax.Array"]
+    design: Optional[design_mod.Design]
+    s_t: float
+    key: "jax.Array"
+    n_valid: "jax.Array"
+
+
+@dataclasses.dataclass
+class _Bucket:
+    key: tuple
+    impl: str
+    tuning: dict
+    fn: Callable
+    hits: int = 0
+
+    def describe(self) -> str:
+        n_pad, n_groups, mode, k = self.key
+        return (f"bucket(n={n_pad},g={n_groups},{mode}"
+                + (f",k={k}" if k else "") + f")->{self.impl}")
+
+
+def _next_bucket(n: int, sizes: Optional[List[int]]) -> int:
+    if sizes:
+        for s in sorted(sizes):
+            if s >= n:
+                return int(s)
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServerOverloaded(RuntimeError):
+    """Raised by submit(..., shed='raise') when the admission queue is
+    full — the hard-backpressure signal."""
+
+
+class PermanovaServer:
+    """Always-on multi-tenant PERMANOVA service (see module docstring).
+
+    workers / block: the elastic fleet size and the permutation-block
+    granularity (the unit of re-dispatch, speculation, and checkpoint).
+    queue_limit: bounded admission queue; submissions past it are SHED.
+    clock / injector: injectable time and faults — production uses the
+    real monotonic clock and no faults; chaos tests drive both.
+    ckpt_dir: enables checkpoint/resume of in-flight partial s_W.
+    """
+
+    def __init__(self, *, workers: int = 4, block: int = 128,
+                 queue_limit: int = 64,
+                 bucket_sizes: Optional[List[int]] = None,
+                 backend: Optional[str] = None,
+                 heartbeat_timeout: float = 5.0,
+                 straggler_factor: float = 4.0,
+                 clock: Optional[Callable[[], float]] = None,
+                 injector: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 max_transient_retries: int = 8,
+                 ckpt_dir=None, checkpoint_every: int = 8,
+                 latency_window: int = 512):
+        self.workers = int(workers)
+        self.block = int(block)
+        self.queue_limit = int(queue_limit)
+        self.bucket_sizes = bucket_sizes
+        self.backend = backend or planner.default_backend()
+        self.heartbeat_timeout = float(heartbeat_timeout)
+        self.straggler_factor = float(straggler_factor)
+        self.clock = clock or time.monotonic
+        self.injector = injector
+        self.retry = retry or RetryPolicy()
+        self.max_transient_retries = int(max_transient_retries)
+        self.ckpt_dir = ckpt_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self._rng = np.random.default_rng(0)     # retry jitter (seeded)
+        self._queue: deque = deque()
+        self._buckets: Dict[tuple, _Bucket] = {}
+        self._lat = deque(maxlen=int(latency_window))  # (t_end, dur_s, ok)
+        self._seq = 0
+
+    # -- admission --------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def backpressure(self) -> bool:
+        """Soft signal: queue at >= 80% of the admission bound — callers
+        should slow down before submissions start shedding."""
+        return len(self._queue) >= max(1, int(0.8 * self.queue_limit))
+
+    def submit(self, req: StudyRequest, *, shed: str = "result"):
+        """Admit one request. When the bounded queue is full the request
+        is SHED: with shed='result' (default) a ServeResult(status='shed')
+        is returned immediately; with shed='raise' ServerOverloaded is
+        raised (hard backpressure for synchronous callers)."""
+        if not req.request_id:
+            req.request_id = f"req{self._seq}"
+        self._seq += 1
+        if len(self._queue) >= self.queue_limit:
+            _obs.metrics.inc("serve.requests_shed")
+            if shed == "raise":
+                raise ServerOverloaded(
+                    f"admission queue full ({self.queue_limit})")
+            return ServeResult(request_id=req.request_id, status="shed",
+                               error="admission queue full")
+        self._queue.append(req)
+        _obs.metrics.inc("serve.requests_admitted")
+        _obs.metrics.gauge_set("serve.queue_depth", len(self._queue))
+        return None
+
+    def pump(self, max_requests: Optional[int] = None) -> List[ServeResult]:
+        """Process queued requests FIFO; returns their results."""
+        out = []
+        while self._queue and (max_requests is None
+                               or len(out) < max_requests):
+            req = self._queue.popleft()
+            _obs.metrics.gauge_set("serve.queue_depth", len(self._queue))
+            out.append(self.process(req))
+        return out
+
+    def serve(self, reqs: List[StudyRequest]) -> List[ServeResult]:
+        """Convenience: submit everything (shed results inline), pump."""
+        shed = {}
+        for i, r in enumerate(reqs):
+            res = self.submit(r)
+            if res is not None:
+                shed[i] = res
+        done = self.pump()
+        out, it = [], iter(done)
+        for i in range(len(reqs)):
+            out.append(shed[i] if i in shed else next(it))
+        return out
+
+    # -- per-request processing ------------------------------------------
+    def process(self, req: StudyRequest) -> ServeResult:
+        t0 = self.clock()
+        with _obs.span("serve.step", {"request": req.request_id}):
+            res = self._process_with_retries(req, t0)
+        dur = self.clock() - t0
+        res.wall_s = dur
+        self._lat.append((self.clock(), dur, res.ok))
+        _obs.metrics.inc("serve.steps")
+        if res.status in ("ok", "degraded"):
+            _obs.metrics.inc("serve.requests_completed")
+            if res.degraded:
+                _obs.metrics.inc("serve.requests_degraded")
+        elif res.status == "failed":
+            _obs.metrics.inc("serve.requests_failed")
+        return res
+
+    def _process_with_retries(self, req: StudyRequest,
+                              t0: float) -> ServeResult:
+        policy = self.retry
+        last_err = ""
+        for attempt in range(policy.max_retries + 1):
+            try:
+                res = self._execute(req, t0)
+                res.retries = attempt
+                return res
+            except (SimulatedOOM, AllWorkersDead) as e:
+                last_err = f"{type(e).__name__}: {e}"
+                _obs.metrics.inc("serve.request_retries")
+                if attempt >= policy.max_retries:
+                    break
+                backoff = min(policy.base_backoff_s * (2 ** attempt),
+                              policy.max_backoff_s)
+                backoff *= 1.0 + policy.jitter * float(self._rng.uniform())
+                self._sleep(backoff)
+            except Exception as e:          # non-transient: fail fast
+                return ServeResult(request_id=req.request_id,
+                                   status="failed",
+                                   error=f"{type(e).__name__}: {e}",
+                                   retries=attempt)
+        return ServeResult(request_id=req.request_id, status="failed",
+                           error=last_err, retries=policy.max_retries)
+
+    def _sleep(self, dt: float) -> None:
+        sleep = getattr(self.clock, "sleep", None)
+        (sleep or time.sleep)(dt)
+
+    # -- preparation ------------------------------------------------------
+    def _prepare(self, req: StudyRequest) -> _Prepared:
+        import jax.numpy as jnp
+
+        if (req.dm is None) == (req.x is None):
+            raise ValueError("provide exactly one of dm= or x=")
+        grouping = np.asarray(req.grouping, np.int32)
+        n = int(grouping.shape[0])
+        if req.dm is not None:
+            dm = np.asarray(req.dm, np.float32)
+        else:
+            with _obs.span("serve.stage1", {"metric": req.metric}):
+                dm = np.asarray(distance_mod.distance_matrix(
+                    jnp.asarray(req.x), req.metric), np.float32)
+        if dm.shape != (n, n):
+            raise ValueError(f"dm is {dm.shape}, grouping has n={n}")
+        n_groups = (int(req.n_groups) if req.n_groups is not None
+                    else int(grouping.max()) + 1)
+
+        dense = req.covariates is not None or req.weights is not None
+        design = None
+        if dense:
+            design = design_mod.build(
+                grouping=grouping, covariates=req.covariates,
+                strata=req.strata, weights=req.weights,
+                n_groups=n_groups, force_dense=True)
+            mode = _MODE_COLS
+        elif req.strata is not None:
+            design = design_mod.build(grouping=grouping, strata=req.strata,
+                                      n_groups=n_groups)
+            mode = (_MODE_STRATA if design.mode == design_mod.MODE_LABELS
+                    else _MODE_COLS)
+            dense = mode == _MODE_COLS
+        else:
+            mode = _MODE_LABELS
+
+        n_pad = _next_bucket(n, self.bucket_sizes)
+        mat2 = np.zeros((n_pad, n_pad), np.float32)
+        mat2[:n, :n] = dm * dm
+        g_pad = np.full((n_pad,), n_groups, np.int32)    # sentinel pad
+        g_pad[:n] = grouping
+        strata_pad = basis = inv_gs = None
+        k_cols = 0
+        if dense:
+            dpad = design_mod.pad_design(design, n_pad)
+            basis = jnp.asarray(dpad.basis)
+            k_cols = dpad.k_cols
+            st = (dpad.strata if dpad.strata is not None
+                  else jnp.zeros((n_pad,), jnp.int32))
+            strata_pad = jnp.asarray(st, jnp.int32)
+            design = dpad
+        else:
+            inv_gs = permutations.inv_group_sizes(jnp.asarray(g_pad),
+                                                  n_groups)
+            if mode == _MODE_STRATA:
+                st = np.zeros((n_pad,), np.int32)
+                st[:n] = np.asarray(design.strata, np.int32)[:n]
+                strata_pad = jnp.asarray(st)
+        s_t = float(mat2.sum()) / 2.0 / n    # pad rows are zero
+        return _Prepared(
+            req=req, mode=mode, n=n, n_pad=n_pad, n_groups=n_groups,
+            k_cols=k_cols, n_total=int(req.n_perms) + 1,
+            mat2=jnp.asarray(mat2), grouping=jnp.asarray(g_pad),
+            strata=strata_pad, basis=basis, inv_gs=inv_gs, design=design,
+            s_t=s_t, key=jax.random.key(int(req.seed)),
+            n_valid=jnp.int32(n))
+
+    # -- bucket / compiled-program cache ---------------------------------
+    def _bucket_for(self, p: _Prepared) -> _Bucket:
+        key = (p.n_pad, p.n_groups, p.mode, p.k_cols)
+        b = self._buckets.get(key)
+        if b is not None:
+            b.hits += 1
+            _obs.metrics.inc("serve.bucket_hits")
+            return b
+        _obs.metrics.inc("serve.bucket_misses")
+        cache_key = (f"serveplan|{self.backend}|n{p.n_pad}|g{p.n_groups}"
+                     f"|{p.mode}|k{p.k_cols}")
+        impl = tuning = None
+        entry = planner.measured_entry(cache_key)
+        if entry:
+            try:
+                spec = registry.get(entry["impl"])
+                impl = entry["impl"]
+                tuning = {k: v for k, v in (entry.get("tuning") or {})
+                          .items() if k in spec.tuning}
+            except KeyError:
+                impl = None
+        if impl is None:
+            pl = planner.plan(
+                p.n_pad, max(p.n_total, self.block),
+                p.n_groups if p.n_groups else max(p.k_cols, 2),
+                backend=self.backend, chunk=self.block,
+                n_cols=p.k_cols if p.mode == _MODE_COLS else None)
+            impl, tuning = pl.impl, dict(pl.tuning)
+            planner.record_entry(cache_key, {
+                "impl": impl, "tuning": tuning, "block": self.block,
+                "reason": pl.reason})
+        if p.mode == _MODE_COLS:
+            fn = registry.bound_cols(impl, **tuning)
+        else:
+            fn = registry.get(impl).bound(**tuning)
+        b = _Bucket(key=key, impl=impl, tuning=tuning, fn=fn, hits=1)
+        self._buckets[key] = b
+        return b
+
+    # -- execution --------------------------------------------------------
+    def _spans(self, p: _Prepared) -> List[Tuple[int, int]]:
+        block = min(self.block, p.n_total)
+        return [(lo, min(lo + block, p.n_total))
+                for lo in range(0, p.n_total, block)]
+
+    def _compute_block_fn(self, p: _Prepared, b: _Bucket):
+        block = min(self.block, p.n_total)
+        if p.mode == _MODE_COLS:
+            def compute(lo, hi):
+                with _obs.span("serve.block", {"lo": lo}):
+                    s = scheduler.sw_cols_block(
+                        p.mat2, p.basis, p.strata, p.n_valid, p.key, lo,
+                        fn=b.fn, block=block)
+                    return np.asarray(s)[: hi - lo]
+        else:
+            def compute(lo, hi):
+                with _obs.span("serve.block", {"lo": lo}):
+                    s = scheduler.sw_block(
+                        p.mat2, p.grouping, p.n_valid, p.inv_gs, p.key, lo,
+                        fn=b.fn, block=block, strata=p.strata)
+                    return np.asarray(s)[: hi - lo]
+        return compute
+
+    def _ckpt_mgr(self, req: StudyRequest):
+        if self.ckpt_dir is None:
+            return None
+        import pathlib
+        return ckpt_mod.CheckpointManager(
+            pathlib.Path(self.ckpt_dir) / req.request_id, keep=2)
+
+    def _execute(self, req: StudyRequest, t0: float) -> ServeResult:
+        p = self._prepare(req)
+        b = self._bucket_for(p)
+        spans = self._spans(p)
+        n_blocks = len(spans)
+        out = np.zeros((p.n_total, p.k_cols), np.float32) \
+            if p.mode == _MODE_COLS else np.zeros((p.n_total,), np.float32)
+        done = np.zeros((n_blocks,), bool)
+
+        mgr = self._ckpt_mgr(req)
+        if mgr is not None:
+            done, out = self._maybe_resume(mgr, req, done, out, n_blocks)
+
+        deadline = req.deadline_s
+
+        def should_stop() -> bool:
+            return (deadline is not None
+                    and self.clock() - t0 >= deadline)
+
+        commits_since_ckpt = [0]
+
+        def on_commit(bid: int) -> None:
+            # Mirror the commit into the caller-side mask: the executor
+            # runs on its own copy of `done` (resume isolation), but it
+            # writes `out` in place, so out[spans[bid]] is current here.
+            done[bid] = True
+            commits_since_ckpt[0] += 1
+            if (mgr is not None
+                    and commits_since_ckpt[0] % self.checkpoint_every == 0):
+                self._checkpoint(mgr, req, out, done)
+
+        exe = ElasticBlockExecutor(
+            n_blocks, workers=self.workers, clock=self.clock,
+            heartbeat_timeout=self.heartbeat_timeout,
+            straggler_factor=self.straggler_factor,
+            injector=self.injector or FaultInjector(),
+            max_transient_retries=self.max_transient_retries)
+        out, done, rep = exe.run(self._compute_block_fn(p, b), spans,
+                                 out=out, done=done,
+                                 should_stop=should_stop,
+                                 on_commit=on_commit)
+        if rep.stale_beats_rejected:
+            _obs.metrics.inc("serve.zombies_fenced",
+                             rep.stale_beats_rejected)
+        if not done.all():
+            if mgr is not None:
+                self._checkpoint(mgr, req, out, done)
+            if not done[0]:
+                return ServeResult(
+                    request_id=req.request_id, status="failed",
+                    error="deadline expired before the observed statistic",
+                    bucket=b.describe(), report=rep)
+            return self._assemble(p, b, out, done, spans, rep,
+                                  degraded=True)
+        if mgr is not None:
+            shutil.rmtree(mgr.directory, ignore_errors=True)   # finished
+        return self._assemble(p, b, out, done, spans, rep, degraded=False)
+
+    # -- checkpoint/resume ------------------------------------------------
+    def _checkpoint(self, mgr, req: StudyRequest, out: np.ndarray,
+                    done: np.ndarray) -> None:
+        step = int(done.sum())
+        mgr.save({"s_w": out, "done": done.astype(np.uint8)}, step=step,
+                 extras={"request_id": req.request_id,
+                         "n_perms": int(req.n_perms),
+                         "block": self.block, "seed": int(req.seed)},
+                 blocking=True)
+        _obs.metrics.inc("serve.checkpoints")
+
+    def _maybe_resume(self, mgr, req: StudyRequest, done, out, n_blocks):
+        step = mgr.latest_step()
+        if step is None:
+            return done, out
+        try:
+            tree, manifest = mgr.restore(
+                {"s_w": out, "done": done.astype(np.uint8)})
+        except Exception:
+            return done, out      # unreadable partial state: recompute
+        ex = manifest.get("extras", {})
+        if (ex.get("block") != self.block
+                or ex.get("n_perms") != int(req.n_perms)
+                or ex.get("seed") != int(req.seed)):
+            return done, out      # different request config: ignore
+        done_l = np.asarray(tree["done"], bool)
+        out_l = np.asarray(tree["s_w"], out.dtype)
+        if done_l.shape != (n_blocks,) or out_l.shape != out.shape:
+            return done, out
+        _obs.metrics.inc("serve.resumed_requests")
+        _obs.metrics.inc("serve.resumed_blocks", float(done_l.sum()))
+        return done_l.copy(), out_l.copy()
+
+    # -- result assembly --------------------------------------------------
+    def _assemble(self, p: _Prepared, b: _Bucket, out, done, spans, rep,
+                  *, degraded: bool) -> ServeResult:
+        idx = np.concatenate([np.arange(lo, hi)
+                              for bid, (lo, hi) in enumerate(spans)
+                              if done[bid]]) if not done.all() \
+            else np.arange(p.n_total)
+        m = int(idx.size) - 1                   # completed permutations
+        sub = out[idx]
+        method_suffix = "+degraded" if degraded else ""
+        plan_str = (f"{b.describe()} block={self.block} "
+                    f"blocks={len(spans)} workers={self.workers}")
+        if p.mode == _MODE_COLS:
+            result = self._design_result(p, sub, m, method_suffix, plan_str)
+            f_sub = np.asarray(result.f_perms, np.float64)
+        else:
+            s_w = np.asarray(sub, np.float64)
+            f_sub = np.asarray(f_from_sw(
+                s_w, p.s_t, p.n, p.n_groups), np.float64)
+            n_ge = int(np.sum(f_sub[1:] >= f_sub[0]))
+            p_val = (n_ge + 1.0) / (m + 1.0)
+            result = PermanovaResult(
+                f_stat=f_sub[0], p_value=p_val, s_t=p.s_t, s_w=s_w[0],
+                f_perms=f_sub, n_objects=p.n, n_groups=p.n_groups,
+                n_perms=m,
+                method=f"permanova-serve[{b.impl}]{method_suffix}",
+                plan=plan_str)
+        ci = None
+        if degraded:
+            n_ge = int(np.sum(f_sub[1:] >= f_sub[0]))
+            ci = mc_pvalue_ci(n_ge, m, int(p.req.n_perms))
+        return ServeResult(
+            request_id=p.req.request_id,
+            status="degraded" if degraded else "ok",
+            result=result, degraded=degraded, n_perms_done=m,
+            p_ci=ci, bucket=b.describe(), report=rep)
+
+    def _design_result(self, p: _Prepared, s_cols, m: int,
+                       method_suffix: str, plan_str: str) -> PermanovaResult:
+        design = p.design
+        dof_resid = float(p.n - design.rank)
+        ts = design_mod.term_stats(s_cols, design, dof_resid=dof_resid)
+        terms = []
+        f_terms = np.asarray(ts.f_terms, np.float64)
+        ss_terms = np.asarray(ts.ss_terms, np.float64)
+        s_t = float(np.asarray(ts.s_t))
+        for i, t in enumerate(design.terms[1:]):
+            f_p = f_terms[:, i]
+            n_ge = int(np.sum(f_p[1:] >= f_p[0]))
+            terms.append(TermResult(
+                name=t.name, kind=t.kind, df=t.df, ss=ss_terms[0, i],
+                f_stat=f_p[0], p_value=(n_ge + 1.0) / (m + 1.0),
+                r2=ss_terms[0, i] / s_t, f_perms=f_p))
+        last = terms[-1]
+        return PermanovaResult(
+            f_stat=last.f_stat, p_value=last.p_value, s_t=s_t,
+            s_w=float(np.asarray(ts.ss_resid)[0]), f_perms=last.f_perms,
+            n_objects=p.n,
+            n_groups=(design.n_groups if design.n_groups else design.rank),
+            n_perms=m,
+            method=f"permanova-serve-design[{p.mode}]{method_suffix}",
+            plan=plan_str, terms=tuple(terms))
+
+    # -- telemetry --------------------------------------------------------
+    def stats(self) -> dict:
+        """Rolling serving stats from the internal latency ring: requests
+        per second over the window, p50/p99 step latency, queue depth,
+        bucket inventory. (serve_stats_from_events computes the same view
+        from exported `serve.step` trace spans.)"""
+        if not self._lat:
+            return {"requests": 0, "requests_per_s": 0.0,
+                    "p50_s": 0.0, "p99_s": 0.0,
+                    "queue_depth": len(self._queue),
+                    "buckets": len(self._buckets)}
+        ts = [t for t, _, _ in self._lat]
+        durs = sorted(d for _, d, _ in self._lat)
+        span_s = max(ts) - min(ts) + durs[-1]
+        n = len(durs)
+        return {
+            "requests": n,
+            "requests_per_s": n / span_s if span_s > 0 else float("inf"),
+            "p50_s": durs[int(0.50 * (n - 1))],
+            "p99_s": durs[int(0.99 * (n - 1))],
+            "queue_depth": len(self._queue),
+            "buckets": len(self._buckets),
+        }
+
+
+def serve_stats_from_events(events: Optional[list] = None) -> dict:
+    """Requests/sec and p50/p99 step latency from `serve.step` trace
+    spans (the ROADMAP observability follow-on): pass a trace_event list
+    or default to the live obs buffer."""
+    evs = _obs.events() if events is None else events
+    steps = [e for e in evs
+             if e.get("name") == "serve.step" and e.get("ph") == "X"]
+    if not steps:
+        return {"requests": 0, "requests_per_s": 0.0, "p50_s": 0.0,
+                "p99_s": 0.0}
+    durs = sorted(e["dur"] / 1e6 for e in steps)
+    t_lo = min(e["ts"] for e in steps) / 1e6
+    t_hi = max((e["ts"] + e["dur"]) for e in steps) / 1e6
+    n = len(durs)
+    span_s = max(t_hi - t_lo, 1e-9)
+    return {"requests": n, "requests_per_s": n / span_s,
+            "p50_s": durs[int(0.50 * (n - 1))],
+            "p99_s": durs[int(0.99 * (n - 1))]}

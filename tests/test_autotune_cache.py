@@ -165,3 +165,55 @@ def test_failed_write_leaves_no_temp(tmp_path, monkeypatch):
     finally:
         monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, "off")
         planner.load_autotune_cache(reload=True)
+
+
+def test_truncated_cache_quarantined_and_served_empty(tmp_path,
+                                                      monkeypatch, caplog):
+    """Regression (fault-tolerant serving PR): a crash mid-write leaves a
+    truncated JSON document. The loader must warn ONCE, quarantine the
+    file under `.corrupt` (evidence survives, next writer starts clean),
+    and continue with an empty cache — a serving process never dies over
+    a cache. New measurements then persist normally."""
+    import logging
+
+    import pytest
+
+    import repro.engine.planner as planner
+    from repro import obs
+    from repro.runtime.faultinject import FaultInjector
+
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, str(cache))
+    planner.load_autotune_cache(reload=True)
+    try:
+        planner.record_entry("dist|cpu|x|ok", {
+            "impl": "ok", "us": 1.0, "bucket": 32})
+        assert cache.exists()
+        FaultInjector.corrupt_cache_file(str(cache))
+        with open(cache) as f:
+            with pytest.raises(json.JSONDecodeError):
+                json.load(f)     # the fault really is a truncated doc
+
+        obs.enable(trace=False, metrics=True)
+        planner._WARNED.discard("corrupt")
+        with caplog.at_level(logging.WARNING, logger=planner.__name__):
+            assert planner.load_autotune_cache(reload=True) == {}
+            planner.load_autotune_cache(reload=True)  # no second warning
+        msgs = [r for r in caplog.records if "corrupt" in r.message]
+        assert len(msgs) == 1
+        assert obs.metrics.value(
+            "autotune.cache.corrupt_quarantined") >= 1.0
+        obs.disable()
+
+        quarantined = tmp_path / "autotune.json.corrupt"
+        assert quarantined.exists()
+        assert not cache.exists()
+
+        # the cache keeps working: a fresh entry persists and reloads
+        planner.record_entry("dist|cpu|x|fresh", {
+            "impl": "fresh", "us": 2.0, "bucket": 32})
+        assert planner.load_autotune_cache(
+            reload=True)["dist|cpu|x|fresh"]["impl"] == "fresh"
+    finally:
+        monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV, "off")
+        planner.load_autotune_cache(reload=True)

@@ -266,3 +266,57 @@ class TestAutotuneCacheCounters:
         cache = eplanner.load_autotune_cache(reload=True)
         assert cache == {}
         assert obs.metrics.value("autotune.cache.stale_dropped") == 1.0
+
+
+class TestSpanRingBuffer:
+    """An always-on server traces indefinitely: the completed-span buffer
+    is a ring capped at `set_buffer_cap(n)` — oldest spans drop first,
+    drops are counted, and export keeps the most recent COMPLETE spans."""
+
+    def test_cap_keeps_most_recent_spans(self, tmp_path):
+        prev = obs.buffer_cap()
+        obs.clear()
+        obs.enable(trace=True, metrics=False)
+        try:
+            obs.set_buffer_cap(10)
+            for i in range(25):
+                with obs.span(f"serve.step{i}"):
+                    pass
+            evs = obs.events()
+            assert len(evs) == 10
+            # the survivors are exactly the 10 most recent, in order
+            assert [e["name"] for e in evs] == [
+                f"serve.step{i}" for i in range(15, 25)]
+            assert obs.dropped_events() == 15
+            # export under cap writes the surviving spans
+            out = tmp_path / "ring.json"
+            obs.trace.export(str(out))
+            data = json.loads(out.read_text())
+            names = [e["name"] for e in data["traceEvents"]
+                     if e.get("name", "").startswith("serve.step")]
+            assert names == [f"serve.step{i}" for i in range(15, 25)]
+        finally:
+            obs.disable()
+            obs.clear()
+            obs.set_buffer_cap(prev)
+
+    def test_shrinking_cap_trims_immediately(self):
+        prev = obs.buffer_cap()
+        obs.clear()
+        obs.enable(trace=True, metrics=False)
+        try:
+            obs.set_buffer_cap(None)          # unbounded
+            for i in range(8):
+                with obs.span(f"s{i}"):
+                    pass
+            assert len(obs.events()) == 8
+            obs.set_buffer_cap(3)
+            assert [e["name"] for e in obs.events()] == ["s5", "s6", "s7"]
+            assert obs.dropped_events() == 5
+            # clear() resets the drop counter with the buffer
+            obs.clear()
+            assert obs.dropped_events() == 0
+        finally:
+            obs.disable()
+            obs.clear()
+            obs.set_buffer_cap(prev)

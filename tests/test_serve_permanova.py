@@ -1,0 +1,196 @@
+"""Multi-tenant PERMANOVA serving: shape buckets + compiled-program
+reuse (zero warm retraces), admission control/backpressure, deadline
+policy, plan persistence, and serving telemetry."""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.distance import distance_matrix
+from repro.core.permanova import permanova
+from repro.obs import jaxhooks
+from repro.serve.permanova import (PermanovaServer, ServerOverloaded,
+                                   StudyRequest, serve_stats_from_events)
+
+
+@pytest.fixture(scope="module")
+def studies():
+    rng = np.random.default_rng(7)
+    out = []
+    for n in (23, 19, 30):
+        x = rng.normal(size=(n, 5)).astype(np.float32)
+        g = rng.integers(0, 3, size=n).astype(np.int32)
+        out.append((np.asarray(distance_matrix(x, "euclidean")), g))
+    return out
+
+
+class TestStatistics:
+    def test_observed_matches_reference_labels(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=2, block=64)
+        res = srv.process(StudyRequest(grouping=g, dm=dm, n_perms=99))
+        ref = permanova(dm, g, n_perms=9)
+        # padded matmul reduction order differs from the unpadded
+        # reference in the last bits; the statistic itself must agree
+        assert float(res.result.f_stat) == pytest.approx(
+            float(ref.f_stat), rel=1e-5)
+        assert res.result.n_objects == dm.shape[0]
+
+    def test_observed_matches_reference_dense(self, studies):
+        dm, g = studies[0]
+        rng = np.random.default_rng(0)
+        cov = rng.normal(size=dm.shape[0])
+        srv = PermanovaServer(workers=2, block=64)
+        res = srv.process(StudyRequest(grouping=g, dm=dm, covariates=cov,
+                                       n_perms=99))
+        ref = permanova(dm, g, covariates=cov, n_perms=9)
+        # dense-mode pads are exactly-zero basis rows, but the padded
+        # reduction tree differs from the unpadded reference by ULPs;
+        # bit-identity is the serve-vs-serve contract (chaos suite)
+        assert float(res.result.f_stat) == pytest.approx(
+            float(ref.f_stat), rel=1e-5)
+        assert [t.name for t in res.result.terms] == ["cov0", "grouping"]
+
+    def test_strata_and_weights_modes(self, studies):
+        dm, g = studies[0]
+        n = dm.shape[0]
+        srv = PermanovaServer(workers=2, block=32)
+        strata = (np.arange(n) % 2).astype(np.int32)
+        r1 = srv.process(StudyRequest(grouping=g, dm=dm, strata=strata,
+                                      n_perms=63))
+        assert r1.status == "ok" and "labels_strata" in r1.bucket
+        w = np.linspace(0.5, 1.5, n)
+        r2 = srv.process(StudyRequest(grouping=g, dm=dm, weights=w,
+                                      n_perms=63))
+        assert r2.status == "ok" and "cols" in r2.bucket
+
+    def test_features_path(self, studies):
+        rng = np.random.default_rng(1)
+        x = np.abs(rng.normal(size=(23, 6))).astype(np.float32)
+        g = rng.integers(0, 2, size=23).astype(np.int32)
+        srv = PermanovaServer(workers=2, block=64)
+        res = srv.process(StudyRequest(grouping=g, x=x,
+                                       metric="braycurtis", n_perms=49))
+        assert res.status == "ok"
+        ref = permanova(np.asarray(distance_matrix(x, "braycurtis")), g,
+                        n_perms=9)
+        assert float(res.result.f_stat) == pytest.approx(
+            float(ref.f_stat), rel=1e-5)
+
+    def test_bad_request_fails_not_raises(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer()
+        res = srv.process(StudyRequest(grouping=g))          # no dm, no x
+        assert res.status == "failed" and "dm" in res.error
+
+
+class TestBuckets:
+    def test_warm_bucket_retraces_zero_jaxprs(self, studies):
+        # different n, different n_perms, different seed — same bucket:
+        # a warm server must not trace a single new jaxpr (the PR 7
+        # retrace counter is the witness).
+        (dm1, g1), (dm2, g2), _ = studies
+        obs.enable(trace=False, metrics=True)
+        try:
+            srv = PermanovaServer(workers=2, block=32)
+            srv.process(StudyRequest(grouping=g1, dm=dm1, n_perms=31,
+                                     seed=1))
+            before = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+            r = srv.process(StudyRequest(grouping=g2, dm=dm2, n_perms=63,
+                                         seed=2))
+            after = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+        finally:
+            obs.disable()
+        assert r.status == "ok"
+        assert after - before == 0.0
+        assert srv._buckets[(32, 3, "labels", 0)].hits == 2
+
+    def test_bucket_sizing(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=1, block=32,
+                              bucket_sizes=[24, 64])
+        res = srv.process(StudyRequest(grouping=g, dm=dm, n_perms=15))
+        assert "n=24" in res.bucket
+        ref = permanova(dm, g, n_perms=9)
+        assert float(res.result.f_stat) == pytest.approx(
+            float(ref.f_stat), rel=1e-5)
+
+    def test_plan_persisted_and_reused(self, studies, tmp_path,
+                                       monkeypatch):
+        from repro.engine import planner
+        dm, g = studies[0]
+        monkeypatch.setenv(planner.AUTOTUNE_CACHE_ENV,
+                           str(tmp_path / "tune.json"))
+        planner.load_autotune_cache(reload=True)
+        srv1 = PermanovaServer(workers=1, block=32, backend="cpu")
+        srv1.process(StudyRequest(grouping=g, dm=dm, n_perms=15))
+        key = "serveplan|cpu|n32|g3|labels|k0"
+        entry = planner.measured_entry(key)
+        assert entry is not None and "impl" in entry
+        # a fresh server (warm restart) pins the persisted plan
+        srv2 = PermanovaServer(workers=1, block=32, backend="cpu")
+        res = srv2.process(StudyRequest(grouping=g, dm=dm, n_perms=15))
+        assert f"->{entry['impl']}" in res.bucket
+        planner.load_autotune_cache(reload=True)
+
+
+class TestAdmission:
+    def test_bounded_queue_sheds(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=1, queue_limit=2)
+        reqs = [StudyRequest(grouping=g, dm=dm, n_perms=9, seed=i)
+                for i in range(4)]
+        out = srv.serve(reqs)
+        assert [r.status for r in out] == ["ok", "ok", "shed", "shed"]
+        assert all(r.request_id for r in out)
+
+    def test_backpressure_signal_and_raise(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=1, queue_limit=2)
+        assert not srv.backpressure
+        srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        assert srv.backpressure
+        with pytest.raises(ServerOverloaded):
+            srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9),
+                       shed="raise")
+        assert len(srv.pump()) == 2
+        assert not srv.backpressure
+
+
+class TestTelemetry:
+    def test_serve_step_spans_and_stats(self, studies, tmp_path):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=2, block=32)
+        obs.clear()
+        with obs.session(str(tmp_path / "serve_trace.json")):
+            for i in range(4):
+                srv.process(StudyRequest(grouping=g, dm=dm, n_perms=15,
+                                         seed=i))
+            evs = obs.events()
+            stats = serve_stats_from_events(evs)
+        assert stats["requests"] == 4
+        assert stats["requests_per_s"] > 0
+        assert stats["p99_s"] >= stats["p50_s"] > 0
+        # block spans nest under the request step spans
+        assert any(e["name"] == "serve.block" for e in evs)
+        s = srv.stats()
+        assert s["requests"] == 4 and s["p99_s"] >= s["p50_s"]
+        assert s["buckets"] == 1
+        assert (tmp_path / "serve_trace.json").exists()
+
+    def test_serving_counters(self, studies):
+        dm, g = studies[0]
+        obs.enable(trace=False, metrics=True)
+        try:
+            snap0 = obs.metrics.snapshot()
+            srv = PermanovaServer(workers=1, queue_limit=1)
+            srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9))
+            srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9))  # shed
+            srv.pump()
+            d = obs.metrics.counter_delta(snap0)
+        finally:
+            obs.disable()
+        assert d.get("serve.requests_admitted") == 1.0
+        assert d.get("serve.requests_shed") == 1.0
+        assert d.get("serve.requests_completed") == 1.0
