@@ -27,6 +27,8 @@ from repro.serve.permanova import (PermanovaServer, StudyRequest,
 SLO_S = 0.25          # per-request latency objective for the throughput row
 N_PERMS = 199
 STREAM = 24           # measured requests per row
+BATCH = 8             # max_batch for the same-bucket coalescing row
+SAME_BUCKET = 16      # same-bucket requests per batched row
 
 
 def _stream(seed=0, n_studies=STREAM):
@@ -42,10 +44,24 @@ def _stream(seed=0, n_studies=STREAM):
     return reqs
 
 
-def _measure(srv, reqs):
+def _bucket_stream(seed=1, n_studies=SAME_BUCKET):
+    """Mixed-n studies that all land in the same shape bucket (n_pad=32)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_studies):
+        n = int(rng.integers(20, 31))
+        x = rng.normal(size=(n, 5)).astype(np.float32)
+        g = rng.integers(0, 3, size=n).astype(np.int32)
+        reqs.append(StudyRequest(
+            grouping=g, dm=np.asarray(distance_matrix(x, "euclidean")),
+            n_perms=N_PERMS, seed=100 + i, request_id=f"bucket{i}"))
+    return reqs
+
+
+def _measure(srv, reqs, **kw):
     obs.clear()
     t0 = time.perf_counter()
-    out = srv.serve(reqs)
+    out = srv.serve(reqs, **kw)
     wall = time.perf_counter() - t0
     stats = serve_stats_from_events(obs.events())
     assert all(r.ok for r in out), [r.error for r in out if not r.ok]
@@ -81,6 +97,32 @@ def run(emit):
                     "requests": len(out),
                     "p50_s": round(stats["p50_s"], 5),
                     "p99_s": round(stats["p99_s"], 5)})
+
+        # same-bucket coalescing: identical stream served request-at-a-time
+        # vs batched into one vmapped dispatch per <=BATCH same-sig group
+        # (per-request key folding keeps the two bit-identical; the chaos
+        # suite asserts it, here we price the admission win)
+        bucket_reqs = _bucket_stream()
+        srv_s = PermanovaServer(workers=3, block=64)
+        for r in srv_s.serve(bucket_reqs):          # warm the serial bucket
+            assert r.ok
+        out_s, wall_s, _, _ = _measure(srv_s, bucket_reqs)
+        emit("serve/serial_same_bucket", wall_s / len(out_s) * 1e6,
+             f"studies_per_s={len(out_s)/wall_s:.2f} batch=1",
+             extra={"studies_per_s": round(len(out_s) / wall_s, 2),
+                    "batch": 1, "requests": len(out_s)})
+
+        srv_b = PermanovaServer(workers=3, block=64, max_batch=BATCH)
+        for r in srv_b.serve(bucket_reqs, batched=True):  # warm batched jaxprs
+            assert r.ok
+        out_b, wall_b, _, _ = _measure(srv_b, bucket_reqs, batched=True)
+        speedup = wall_s / wall_b
+        emit("serve/batched_same_bucket", wall_b / len(out_b) * 1e6,
+             f"studies_per_s={len(out_b)/wall_b:.2f} batch={BATCH} "
+             f"speedup_vs_serial={speedup:.2f}x",
+             extra={"studies_per_s": round(len(out_b) / wall_b, 2),
+                    "batch": BATCH, "requests": len(out_b),
+                    "speedup_vs_serial": round(speedup, 2)})
 
         # chaos: same stream, one worker killed mid-bag on a warm server;
         # the delta over warm_stream is the price of re-dispatching the

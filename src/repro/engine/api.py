@@ -385,18 +385,28 @@ class PermanovaManyResult:
                         else self.ordination.study(s)))
 
 
-def _pad_ragged_studies(dms: Sequence, groupings: Sequence, n_groups: int):
+def _pad_ragged_studies(dms: Sequence, groupings: Sequence, n_groups: int,
+                        n_pad: Optional[int] = None):
     """Pad a ragged study list to one (S, n_max, n_max) stack.
 
     Pad distance rows/cols are zero and pad labels carry the SENTINEL
     group `n_groups` — one past the one-hot width, so every s_W form
     sees them contribute exactly nothing (zero one-hot row on the matmul
-    path; zero mat2 entries everywhere else)."""
+    path; zero mat2 entries everywhere else).
+
+    n_pad: optional FIXED bucket width — pad to `n_pad` rows instead of
+    the batch max, so successive calls with different study mixes keep
+    hitting the same compiled program (the serving bucket contract)."""
     if len(dms) != len(groupings):
         raise ValueError(f"ragged input: {len(dms)} matrices vs "
                          f"{len(groupings)} groupings")
     sizes = [int(np.asarray(d).shape[0]) for d in dms]
     n = max(sizes)
+    if n_pad is not None:
+        if int(n_pad) < n:
+            raise ValueError(
+                f"n_pad={n_pad} is smaller than the largest study (n={n})")
+        n = int(n_pad)
     s_count = len(dms)
     dm_stack = np.zeros((s_count, n, n), np.float32)
     g_stack = np.full((s_count, n), n_groups, np.int32)     # sentinel pad
@@ -524,7 +534,8 @@ def _build_study_designs(groupings, covariates, strata, weights, *,
 def _permanova_many_design(dms, groupings, *, covariates, strata, weights,
                            n_groups: int, n_perms: int, key,
                            impl: str, chunk, memory_budget_bytes, backend,
-                           mesh, ordination) -> "PermanovaManyResult":
+                           mesh, ordination,
+                           n_pad=None) -> "PermanovaManyResult":
     """Multi-study dense-design path: stacked or ragged studies, one
     vmapped per-column contraction, study axis shardable over 'data'.
 
@@ -535,7 +546,8 @@ def _permanova_many_design(dms, groupings, *, covariates, strata, weights,
     ragged = isinstance(dms, (list, tuple))
     if ragged:
         sizes = [int(np.asarray(d).shape[0]) for d in dms]
-        dms_pad, _, n_valid = _pad_ragged_studies(dms, groupings, n_groups)
+        dms_pad, _, n_valid = _pad_ragged_studies(dms, groupings, n_groups,
+                                                  n_pad=n_pad)
         dms = dms_pad
         s_count, n = (int(v) for v in dms.shape[:2])
     else:
@@ -643,13 +655,21 @@ def permanova_many(dms: Union[Array, Sequence[Array]],
                    backend: Optional[str] = None,
                    mesh=None,
                    covariates=None, strata=None, weights=None,
-                   ordination: Optional[int] = None) -> PermanovaManyResult:
+                   ordination: Optional[int] = None,
+                   n_pad: Optional[int] = None) -> PermanovaManyResult:
     """PERMANOVA over a stack of studies in one planned, shardable program.
 
     dms:        (S, n, n) distance matrices — or a RAGGED list of
                 (n_s, n_s) matrices, padded internally under one plan
                 (pad rows zero, pad labels a sentinel group; per-study
                 dof/s_T use the true n_s, recorded in `n_valid`).
+    n_pad:      optional fixed BUCKET width for ragged input: studies are
+                padded to `n_pad` rows (not the batch max), so repeated
+                calls with different study mixes of the same bucket reuse
+                one compiled program — the batched-serving entry point
+                (`n_valid` stays a traced per-study vector, so no shape
+                in the program depends on the mix). Ignored for stacked
+                input, which is already uniformly shaped.
     groupings:  (S, n) int labels in [0, n_groups) (a list for ragged
                 input); n_groups must be shared — it sets the one-hot
                 width (the serving scenario runs many users through one
@@ -695,11 +715,11 @@ def permanova_many(dms: Union[Array, Sequence[Array]],
             weights=weights, n_groups=n_groups, n_perms=n_perms, key=key,
             impl=impl, chunk=chunk,
             memory_budget_bytes=memory_budget_bytes, backend=backend,
-            mesh=mesh, ordination=ordination)
+            mesh=mesh, ordination=ordination, n_pad=n_pad)
     ragged = isinstance(dms, (list, tuple))
     if ragged:
         dms, groupings, n_valid = _pad_ragged_studies(dms, groupings,
-                                                      n_groups)
+                                                      n_groups, n_pad=n_pad)
     else:
         dms = jnp.asarray(dms)
         groupings = jnp.asarray(groupings, dtype=jnp.int32)

@@ -106,6 +106,75 @@ def _step_masked_cols(mat2, basis, strata, n_valid, key, lo, *, fn, chunk,
     return fn(mat2, fstat.basis_perm_factors(basis, perms))
 
 
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked_many(mat2, grouping, n_valid, inv_gs, key, lo, *, fn,
+                      chunk, identity_first):
+    """Batched-bucket label step: the vmapped cousin of `_step_masked`.
+
+    All leading-S operands are stacked same-bucket studies; `n_valid` is a
+    traced (S,) vector so one compiled program serves any mix of true
+    sample counts within the bucket. Each study draws its labels from ITS
+    OWN key folded by the GLOBAL permutation index, so row s of the
+    result is bit-identical to an unbatched `_step_masked` call with that
+    study's operands (asserted by the serve batched-vs-serial tests)."""
+    def one(m2, g, nv, igs, k):
+        gperms = permutations.masked_permutation_batch_dyn(
+            k, g, nv, lo, chunk, identity_first=identity_first)
+        return fn(m2, gperms, igs)
+    return jax.vmap(one)(mat2, grouping, n_valid, inv_gs, key)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked_strata_many(mat2, grouping, strata, n_valid, inv_gs, key,
+                             lo, *, fn, chunk, identity_first):
+    def one(m2, g, st, nv, igs, k):
+        stm = permutations.masked_strata(st, nv)
+        gperms = permutations.strata_label_batch_dyn(
+            k, g, stm, lo, chunk, identity_first=identity_first)
+        return fn(m2, gperms, igs)
+    return jax.vmap(one)(mat2, grouping, strata, n_valid, inv_gs, key)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "chunk", "identity_first"))
+def _step_masked_cols_many(mat2, basis, strata, n_valid, key, lo, *, fn,
+                           chunk, identity_first):
+    from repro.core import fstat
+
+    def one(m2, bs, st, nv, k):
+        stm = permutations.masked_strata(st, nv)
+        perms = permutations.strata_permutation_batch_dyn(
+            k, stm, lo, chunk, identity_first=identity_first)
+        return fn(m2, fstat.basis_perm_factors(bs, perms))
+    return jax.vmap(one)(mat2, basis, strata, n_valid, key)
+
+
+def sw_block_many(mat2, grouping, n_valid, inv_gs, keys, lo: int, *, fn,
+                  block: int, strata=None):
+    """One label-mode serving block for a BATCH of same-bucket studies:
+    (S, block) s_W values for global permutation indices [lo, lo+block)
+    across all S studies in one dispatch. Operands carry a leading study
+    axis (shardable over the 'data' mesh axis when the caller device_puts
+    them with a NamedSharding); `keys` is the (S,) stack of per-study PRNG
+    keys, so study s's column is bit-identical to `sw_block` on study s
+    alone. Plain batches pass strata=None."""
+    if strata is None:
+        return _step_masked_many(mat2, grouping, n_valid, inv_gs, keys,
+                                 jnp.int32(lo), fn=fn, chunk=block,
+                                 identity_first=True)
+    return _step_masked_strata_many(mat2, grouping, strata, n_valid, inv_gs,
+                                    keys, jnp.int32(lo), fn=fn, chunk=block,
+                                    identity_first=True)
+
+
+def sw_cols_block_many(mat2, basis, strata, n_valid, keys, lo: int, *, fn,
+                       block: int):
+    """One dense-design serving block for a batch of same-bucket studies:
+    (S, block, K) per-column statistics in one dispatch."""
+    return _step_masked_cols_many(mat2, basis, strata, n_valid, keys,
+                                  jnp.int32(lo), fn=fn, chunk=block,
+                                  identity_first=True)
+
+
 def sw_block(mat2, grouping, n_valid, inv_gs, key, lo: int, *, fn,
              block: int, strata=None):
     """One label-mode serving block: s_W for global permutation indices

@@ -48,6 +48,11 @@ def _pa_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--inject-death", action="store_true",
                     help="replay the stream with a worker killed mid-"
                          "request and assert bit-identical results")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="replay the stream with same-bucket requests "
+                         "coalesced into batched dispatches of up to this "
+                         "many studies; asserts bit-identity against the "
+                         "serial run and zero warm retraces")
     ap.add_argument("--trace", default=None,
                     help="write a Chrome trace of the serve session")
 
@@ -130,6 +135,40 @@ def cmd_permanova(args: argparse.Namespace) -> int:
         return 1
     if args.trace:
         print(f"[serve.pa] trace written to {args.trace}")
+
+    if args.batch:
+        # batched smoke: same stream coalesced by shape bucket; the
+        # per-request fold_in(key, global_index) draws make the batched
+        # dispatch bit-identical to serial serving, and a second warm
+        # replay must reuse every traced jaxpr (fixed batch composition)
+        from repro.obs import jaxhooks
+        from repro.serve.permanova import PermanovaServer
+
+        with obs.session():
+            srv = PermanovaServer(workers=args.workers, block=args.block,
+                                  queue_limit=args.queue_limit,
+                                  max_batch=args.batch)
+            batched = srv.serve(reqs, batched=True, max_batch=args.batch)
+            for c, b in zip(clean, batched):
+                assert b.ok, f"{b.request_id} failed batched: {b.error}"
+                assert float(c.result.f_stat) == float(b.result.f_stat), \
+                    f"{c.request_id}: F diverged under batching"
+                assert float(c.result.p_value) == float(b.result.p_value), \
+                    f"{c.request_id}: p diverged under batching"
+                assert np.array_equal(np.asarray(c.result.f_perms),
+                                      np.asarray(b.result.f_perms)), \
+                    f"{c.request_id}: permutation set diverged under batching"
+            before = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+            warm = srv.serve(reqs, batched=True, max_batch=args.batch)
+            after = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+            assert all(r.ok for r in warm)
+            assert after == before, \
+                f"warm batched replay retraced {after - before:.0f} jaxprs"
+            n_b = obs.metrics.value("serve.batches", 0.0)
+            n_br = obs.metrics.value("serve.batched_requests", 0.0)
+        print(f"[serve.pa] batched: max_batch={args.batch} "
+              f"batches={n_b:.0f} batched_requests={n_br:.0f} -> "
+              f"bit-identical to serial, 0 warm retraces")
 
     if args.inject_death:
         # chaos smoke: kill worker 0 two blocks into the stream; the

@@ -19,6 +19,7 @@ from repro.obs.core import (
     device_sync,
     disable,
     dropped_events,
+    emit_complete,
     enable,
     enabled,
     events,
@@ -36,7 +37,7 @@ __all__ = [
     "core", "jaxhooks", "metrics", "trace",
     "span", "enable", "disable", "enabled", "session",
     "trace_enabled", "metrics_enabled", "events", "clear",
-    "set_buffer_cap", "buffer_cap", "dropped_events",
+    "set_buffer_cap", "buffer_cap", "dropped_events", "emit_complete",
     "maybe_block", "device_sync", "record_device_memory",
     "report", "stage_rows",
 ]

@@ -231,6 +231,33 @@ def device_sync(x, name: str = "sync"):
     return x
 
 
+def emit_complete(name: str, start_ns: int, end_ns: int,
+                  attrs: Optional[dict] = None) -> None:
+    """Append a complete (`ph: "X"`) trace event with caller-supplied
+    wall-clock bounds (perf_counter_ns values).
+
+    Batched serving uses this to record one `serve.step` event per
+    request in a coalesced dispatch: the requests overlap in time, so
+    they cannot be expressed as nested `span()` context managers on the
+    contextvar stack. No-op while tracing is disabled.
+    """
+    if not _trace_on:
+        return
+    ev = {
+        "name": name,
+        "cat": "repro",
+        "ph": "X",
+        "ts": (int(start_ns) - _t0_ns) / 1e3,   # microseconds
+        "dur": max(0, int(end_ns) - int(start_ns)) / 1e3,
+        "pid": os.getpid(),
+        "tid": threading.get_ident(),
+        "args": dict(attrs) if attrs else {},
+    }
+    with _events_lock:
+        _events.append(ev)
+        _trim_events_locked()
+
+
 def events() -> list:
     """Snapshot of the completed-span buffer (trace_event dicts)."""
     with _events_lock:

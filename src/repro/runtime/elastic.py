@@ -18,6 +18,13 @@ can treat the job as a bag of idempotent BLOCKS of permutation indices:
 This is the cross-node layer ABOVE the per-pod pjit computation: each
 "worker" here stands for one pod-level shard_map job (DESIGN.md section 4).
 
+A block's values may carry trailing axes: the batched serving path runs
+one bag of permutation blocks across a whole SAME-BUCKET BATCH of
+studies (each block computes an (hi-lo, S) slab in one vmapped
+dispatch), and every fault-tolerance mechanism — re-dispatch,
+speculation, zombie fencing — applies to the slab unchanged, because
+the slab is still a pure function of (keys, lo).
+
 `ElasticBlockExecutor` is the serving-grade engine: a deterministic,
 single-threaded simulation of the dispatch loop, wired to the
 `runtime.heartbeat.HeartbeatMonitor` failure detector (liveness is the
@@ -169,11 +176,16 @@ class ElasticBlockExecutor:
             on_commit: Optional[Callable[[int], None]] = None):
         """Execute all not-yet-done blocks.
 
-        compute_block(lo, hi) -> (hi-lo,) values — worker identity is
+        compute_block(lo, hi) -> (hi-lo, ...) values — worker identity is
         deliberately NOT an argument: global-index key folding makes the
         result a pure function of the index range, which is the whole
-        fault-tolerance story.
-        block_spans: [(lo, hi)] per block id; `out` spans max hi.
+        fault-tolerance story. Values may carry trailing axes (a block
+        bag SPANNING A BATCH of same-bucket studies returns (hi-lo, S)
+        slabs — one batched dispatch per block); `out` must then be
+        provided with matching trailing shape. Re-dispatch, speculation,
+        and zombie fencing treat the whole slab as the idempotent unit.
+        block_spans: [(lo, hi)] per block id; `out` spans max hi along
+        axis 0.
         done: optional (n_blocks,) bool mask — resume support; completed
         blocks are never recomputed.
         Returns (out, done, ExecReport).
@@ -183,6 +195,9 @@ class ElasticBlockExecutor:
             raise ValueError(f"{len(spans)} spans for {self.n_blocks} blocks")
         n_slots = max(hi for _, hi in spans) if spans else 0
         out = np.zeros((n_slots,), np.float32) if out is None else out
+        if out.shape[0] < n_slots:
+            raise ValueError(
+                f"out axis 0 is {out.shape[0]}, spans reach {n_slots}")
         done = (np.zeros((self.n_blocks,), bool) if done is None
                 else np.asarray(done, bool).copy())
         self._report = rep = ExecReport(n_blocks=self.n_blocks)

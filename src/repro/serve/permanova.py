@@ -19,6 +19,22 @@ Layers:
     existing bucket (asserted by the obs retrace counter). The planned
     impl per bucket is persisted in the autotune cache under
     `serveplan|...` keys, so plan decisions also survive restarts.
+  * BATCH COALESCING — queued requests that land in the SAME bucket are
+    coalesced into ONE dispatch: operands are stacked along a leading
+    study axis (shardable over the 'data' mesh axis) and every
+    permutation block runs through the vmapped batched steps
+    (scheduler.sw_block_many / sw_cols_block_many). Each study keeps its
+    own PRNG key folded by the GLOBAL permutation index, so batched
+    results are bit-identical to serial execution of the same requests.
+    Blocks span the largest n_perms in the batch; a shorter study's tail
+    indices are computed-and-discarded (harmless: draws fold by global
+    index). Elastic block bags therefore span the whole batch — a worker
+    death loses (block x batch) work, re-dispatched exactly as before.
+  * ASYNC ADMISSION — submit() returns a concurrent.futures.Future.
+    Background worker threads (start()/stop()) drain the bounded queue,
+    coalescing same-bucket neighbours up to `max_batch`, and complete
+    the futures; the cooperative single-threaded pump() remains as a
+    serial shim (and the bit-identity reference path).
   * ELASTIC EXECUTION — blocks run through
     runtime.elastic.ElasticBlockExecutor, wired to the
     runtime.heartbeat.HeartbeatMonitor failure detector: dead workers'
@@ -33,25 +49,38 @@ Layers:
     for transient failures (simulated device OOM, full fleet loss);
     checkpoint/resume of partial s_W accumulators through
     checkpoint/manager.py so a restarted server finishes in-flight work
-    instead of replaying it.
+    instead of replaying it. Deadline-degraded requests additionally
+    keep their partial s_W in memory and are OPPORTUNISTICALLY RESUMED
+    in idle capacity: the permutation tail is finished exactly and the
+    full-n_perms result is pushed to `ServeResult.final` (a Future) —
+    the degraded answer is an interim, not a dead end.
 
 Determinism note: serving uses the MASKED permutation generators for
 every request (pad rows stay inert), so a request's null draws are a
 deterministic function of (seed, global index, bucket mask) — identical
-across failure modes, fleet sizes, and restarts, but a distinct stream
-from the unpadded engine.run() draws (PR 4's ragged contract).
+across failure modes, fleet sizes, batch compositions, and restarts, but
+a distinct stream from the unpadded engine.run() draws (PR 4's ragged
+contract). Because the draws depend on the bucket MASK, a checkpoint
+written under one `bucket_sizes` configuration is NOT resumable under
+another: restart with drifted buckets ignores the checkpoint (warn-once
++ `serve.ckpt_bucket_drift` counter) and recomputes from scratch.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
+import pathlib
 import shutil
+import threading
 import time
 from collections import deque
+from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as _obs
@@ -63,6 +92,8 @@ from repro.core.permanova import (PermanovaResult, TermResult, f_from_sw)
 from repro.engine import planner, registry, scheduler
 from repro.runtime.elastic import AllWorkersDead, ElasticBlockExecutor
 from repro.runtime.faultinject import FaultInjector, SimulatedOOM
+
+_log = logging.getLogger("repro.serve")
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +127,11 @@ class ServeResult:
     statistics over `n_perms_done` permutations and `p_ci` is a
     Monte-Carlo confidence interval for the p-value the full-n_perms run
     would report (the result contract's graceful-degradation flag).
+    When the server runs with opportunistic resume (the default),
+    `final` is a Future that later receives the EXACT full-n_perms
+    ServeResult, computed from the kept partial s_W in idle capacity.
+    batched=True marks results produced by a coalesced same-bucket
+    dispatch (bit-identical to the serial path by construction).
     """
     request_id: str
     status: str
@@ -108,6 +144,8 @@ class ServeResult:
     wall_s: float = 0.0
     bucket: str = ""
     report: object = None      # runtime.elastic.ExecReport of the last try
+    batched: bool = False
+    final: Optional[Future] = None
 
     @property
     def ok(self) -> bool:
@@ -125,7 +163,8 @@ class RetryPolicy:
 
 
 def mc_pvalue_ci(n_ge: int, m: int, n_perms_full: int,
-                 conf: float = 0.95) -> Tuple[float, float]:
+                 conf: float = 0.95,
+                 use_scipy: Optional[bool] = None) -> Tuple[float, float]:
     """Predictive CI for the p-value the FULL-n_perms run would report.
 
     A degraded response completed m of n_perms_full permutations with
@@ -137,27 +176,50 @@ def mc_pvalue_ci(n_ge: int, m: int, n_perms_full: int,
     covers the full run's actual p-value — not merely the limiting
     exceedance probability, which the full run's own Monte-Carlo noise
     can escape.
+
+    The interval is always ordered and brackets the degraded point
+    estimate p_hat = (n_ge + 1)/(m + 1), including at the extremes
+    (0 hits or all hits): quantiles are clamped into [0, rest] and the
+    bounds into [1/(n_perms_full+1), 1], under both the scipy and the
+    normal-approximation paths. use_scipy: None (default) tries scipy
+    and falls back; True requires scipy; False forces the fallback.
     """
     m, k, n_full = int(m), int(n_ge), int(n_perms_full)
     rest = max(n_full - m, 0)
     if rest == 0:
         p = (k + 1.0) / (n_full + 1.0)
         return (p, p)
+    p_hat = (k + 1.0) / (m + 1.0)
     a, b = k + 0.5, m - k + 0.5
     alpha = 1.0 - conf
-    try:
-        from scipy.stats import betabinom
-        b_lo = int(betabinom.ppf(alpha / 2, rest, a, b))
-        b_hi = int(betabinom.ppf(1 - alpha / 2, rest, a, b))
-    except Exception:       # no scipy: normal approx to the predictive
+    b_lo = b_hi = None
+    if use_scipy is None or use_scipy:
+        try:
+            from scipy.stats import betabinom
+            q_lo = float(betabinom.ppf(alpha / 2, rest, a, b))
+            q_hi = float(betabinom.ppf(1 - alpha / 2, rest, a, b))
+            if math.isfinite(q_lo) and math.isfinite(q_hi):
+                b_lo, b_hi = int(q_lo), int(q_hi)
+        except Exception:
+            if use_scipy:
+                raise
+    if b_lo is None or b_hi is None:   # normal approx to the predictive
         mean = rest * a / (a + b)
         var = (rest * a * b * (a + b + rest)) / ((a + b) ** 2
                                                  * (a + b + 1.0))
         z = 1.959963984540054 if conf >= 0.95 else 1.6448536269514722
-        b_lo = max(0, int(math.floor(mean - z * math.sqrt(var))))
-        b_hi = min(rest, int(math.ceil(mean + z * math.sqrt(var))))
-    return ((k + b_lo + 1.0) / (n_full + 1.0),
-            (k + b_hi + 1.0) / (n_full + 1.0))
+        sd = math.sqrt(max(var, 0.0))
+        b_lo = int(math.floor(mean - z * sd))
+        b_hi = int(math.ceil(mean + z * sd))
+    b_lo = min(max(b_lo, 0), rest)
+    b_hi = min(max(b_hi, 0), rest)
+    if b_lo > b_hi:
+        b_lo, b_hi = b_hi, b_lo
+    lo = (k + b_lo + 1.0) / (n_full + 1.0)
+    hi = (k + b_hi + 1.0) / (n_full + 1.0)
+    lo = max(min(lo, p_hat), 1.0 / (n_full + 1.0))
+    hi = min(max(hi, p_hat), 1.0)
+    return (lo, hi)
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +232,29 @@ _MODE_COLS = "cols"
 
 
 @dataclasses.dataclass
+class _Class:
+    """Light request classification: everything the admission layer needs
+    to route a request to its bucket WITHOUT touching the distance
+    matrix (bucket signature = (n_pad, n_groups, mode, k_cols))."""
+    mode: str
+    n: int
+    n_groups: int
+    n_pad: int
+    k_cols: int
+    design: Optional[design_mod.Design]
+    grouping: np.ndarray
+
+
+@dataclasses.dataclass
 class _Prepared:
+    """Admission-side request state. Array operands are HOST (numpy)
+    arrays: the execution paths device_put them once per dispatch unit —
+    per request on the serial path, per stacked batch on the coalesced
+    path — so admitting a request costs no eager device traffic. The
+    PRNG key is likewise derived from `req.seed` at dispatch (the
+    batched path folds a whole batch of seeds in one vmapped call).
+    Cols-mode `basis`/`strata` come out of `design.pad_design` as device
+    arrays and stay that way (they are bucket-shaped already)."""
     req: StudyRequest
     mode: str
     n: int                      # true sample count
@@ -178,15 +262,14 @@ class _Prepared:
     n_groups: int
     k_cols: int                 # 0 on label modes
     n_total: int                # n_perms + 1
-    mat2: "jax.Array"           # (n_pad, n_pad) f32, pad rows zero
-    grouping: "jax.Array"       # (n_pad,) i32, sentinel-padded
+    mat2: np.ndarray            # (n_pad, n_pad) f32, pad rows zero
+    grouping: np.ndarray        # (n_pad,) i32, sentinel-padded
     strata: Optional["jax.Array"]
     basis: Optional["jax.Array"]
-    inv_gs: Optional["jax.Array"]
+    inv_gs: Optional[np.ndarray]
     design: Optional[design_mod.Design]
     s_t: float
-    key: "jax.Array"
-    n_valid: "jax.Array"
+    n_valid: np.int32
 
 
 @dataclasses.dataclass
@@ -203,11 +286,38 @@ class _Bucket:
                 + (f",k={k}" if k else "") + f")->{self.impl}")
 
 
+@dataclasses.dataclass
+class _QItem:
+    """Admission-queue entry: the request, the caller's future, and the
+    lazily computed bucket signature used for coalescing."""
+    req: StudyRequest
+    future: Optional[Future] = None
+    sig: Optional[tuple] = None
+
+
+@dataclasses.dataclass
+class _ResumeWork:
+    """A deadline-degraded request's kept partial state, queued for
+    opportunistic completion in idle capacity (serial layout)."""
+    p: _Prepared
+    bucket: _Bucket
+    out: np.ndarray
+    done: np.ndarray
+    spans: List[Tuple[int, int]]
+    res: ServeResult
+    future: Future
+
+
 def _next_bucket(n: int, sizes: Optional[List[int]]) -> int:
     if sizes:
         for s in sorted(sizes):
             if s >= n:
                 return int(s)
+        raise ValueError(
+            f"request has n={n} samples but the largest configured bucket "
+            f"size is {max(sizes)}; add a larger entry to bucket_sizes= "
+            "or pass bucket_sizes=None for open-ended power-of-two "
+            "buckets")
     b = 16
     while b < n:
         b *= 2
@@ -219,12 +329,35 @@ class ServerOverloaded(RuntimeError):
     full — the hard-backpressure signal."""
 
 
+_drift_warned = False     # warn-once latch for checkpoint bucket drift
+
+_KEYS_VMAPPED = jax.jit(jax.vmap(jax.random.key))
+
+
+def _stack_request_keys(seeds) -> "jax.Array":
+    """(S,) typed PRNG keys for a batch of request seeds in ONE jitted
+    dispatch — each row is bit-identical to jax.random.key(seed) on that
+    study alone, so the coalesced dispatch draws the same permutations
+    as serial serving. Seeds outside uint32 (never produced by the CLI
+    or tests, but legal on StudyRequest) fall back to per-study keys."""
+    if all(0 <= int(s) < 2 ** 32 for s in seeds):
+        return _KEYS_VMAPPED(np.asarray(seeds, np.uint32))
+    return jnp.stack([jax.random.key(int(s)) for s in seeds])
+
+
 class PermanovaServer:
     """Always-on multi-tenant PERMANOVA service (see module docstring).
 
     workers / block: the elastic fleet size and the permutation-block
     granularity (the unit of re-dispatch, speculation, and checkpoint).
     queue_limit: bounded admission queue; submissions past it are SHED.
+    max_batch: coalescing bound — a drain pass batches up to this many
+    queued same-bucket requests into one stacked dispatch.
+    mesh: optional jax Mesh with a 'data' axis; batched dispatches then
+    device_put their study axis sharded over it (wrap-padded to the
+    axis size, engine.api's divisibility contract).
+    opportunistic_resume: keep degraded requests' partial s_W and finish
+    the permutation tail in idle capacity (ServeResult.final).
     clock / injector: injectable time and faults — production uses the
     real monotonic clock and no faults; chaos tests drive both.
     ckpt_dir: enables checkpoint/resume of in-flight partial s_W.
@@ -234,6 +367,9 @@ class PermanovaServer:
                  queue_limit: int = 64,
                  bucket_sizes: Optional[List[int]] = None,
                  backend: Optional[str] = None,
+                 max_batch: int = 8,
+                 mesh=None,
+                 opportunistic_resume: bool = True,
                  heartbeat_timeout: float = 5.0,
                  straggler_factor: float = 4.0,
                  clock: Optional[Callable[[], float]] = None,
@@ -247,6 +383,9 @@ class PermanovaServer:
         self.queue_limit = int(queue_limit)
         self.bucket_sizes = bucket_sizes
         self.backend = backend or planner.default_backend()
+        self.max_batch = max(1, int(max_batch))
+        self.mesh = mesh
+        self.opportunistic_resume = bool(opportunistic_resume)
         self.heartbeat_timeout = float(heartbeat_timeout)
         self.straggler_factor = float(straggler_factor)
         self.clock = clock or time.monotonic
@@ -256,10 +395,18 @@ class PermanovaServer:
         self.ckpt_dir = ckpt_dir
         self.checkpoint_every = int(checkpoint_every)
         self._rng = np.random.default_rng(0)     # retry jitter (seeded)
-        self._queue: deque = deque()
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._exec_lock = threading.RLock()      # one dispatch at a time
+        self._queue: deque = deque()             # _QItem entries
+        self._resume_q: deque = deque()          # _ResumeWork entries
         self._buckets: Dict[tuple, _Bucket] = {}
         self._lat = deque(maxlen=int(latency_window))  # (t_end, dur_s, ok)
         self._seq = 0
+        self._threads: List[threading.Thread] = []
+        self._stopping = False
+        self._abandon = False
+        self._inflight = 0
 
     # -- admission --------------------------------------------------------
     @property
@@ -272,65 +419,305 @@ class PermanovaServer:
         should slow down before submissions start shedding."""
         return len(self._queue) >= max(1, int(0.8 * self.queue_limit))
 
-    def submit(self, req: StudyRequest, *, shed: str = "result"):
-        """Admit one request. When the bounded queue is full the request
-        is SHED: with shed='result' (default) a ServeResult(status='shed')
-        is returned immediately; with shed='raise' ServerOverloaded is
-        raised (hard backpressure for synchronous callers)."""
-        if not req.request_id:
-            req.request_id = f"req{self._seq}"
-        self._seq += 1
-        if len(self._queue) >= self.queue_limit:
-            _obs.metrics.inc("serve.requests_shed")
-            if shed == "raise":
-                raise ServerOverloaded(
-                    f"admission queue full ({self.queue_limit})")
-            return ServeResult(request_id=req.request_id, status="shed",
-                               error="admission queue full")
-        self._queue.append(req)
-        _obs.metrics.inc("serve.requests_admitted")
-        _obs.metrics.gauge_set("serve.queue_depth", len(self._queue))
-        return None
+    def submit(self, req: StudyRequest, *, shed: str = "result") -> Future:
+        """Admit one request; returns a Future resolving to its
+        ServeResult (completed by pump(), serve(), or the background
+        worker threads). When the bounded queue is full the request is
+        SHED: with shed='result' (default) the future resolves
+        immediately to ServeResult(status='shed'); with shed='raise'
+        ServerOverloaded is raised (hard backpressure for synchronous
+        callers). A request that cannot fit any configured bucket
+        resolves immediately to status='failed' instead of poisoning the
+        drain loop."""
+        fut: Future = Future()
+        with self._cv:
+            if not req.request_id:
+                req.request_id = f"req{self._seq}"
+            self._seq += 1
+            if len(self._queue) >= self.queue_limit:
+                _obs.metrics.inc("serve.requests_shed")
+                if shed == "raise":
+                    raise ServerOverloaded(
+                        f"admission queue full ({self.queue_limit})")
+                fut.set_result(ServeResult(
+                    request_id=req.request_id, status="shed",
+                    error="admission queue full"))
+                return fut
+            try:
+                n = int(np.asarray(req.grouping).shape[0])
+                _next_bucket(n, self.bucket_sizes)
+            except ValueError as e:
+                _obs.metrics.inc("serve.requests_failed")
+                fut.set_result(ServeResult(
+                    request_id=req.request_id, status="failed",
+                    error=f"ValueError: {e}"))
+                return fut
+            self._queue.append(_QItem(req=req, future=fut))
+            _obs.metrics.inc("serve.requests_admitted")
+            _obs.metrics.gauge_set("serve.queue_depth", len(self._queue))
+            self._cv.notify()
+        return fut
 
     def pump(self, max_requests: Optional[int] = None) -> List[ServeResult]:
-        """Process queued requests FIFO; returns their results."""
-        out = []
-        while self._queue and (max_requests is None
-                               or len(out) < max_requests):
-            req = self._queue.popleft()
-            _obs.metrics.gauge_set("serve.queue_depth", len(self._queue))
-            out.append(self.process(req))
+        """Process queued requests FIFO, one at a time; returns their
+        results. This is the single-threaded SERIAL shim — no batch
+        coalescing — and doubles as the bit-identity reference for the
+        batched path."""
+        out: List[ServeResult] = []
+        while True:
+            with self._cv:
+                if not self._queue or (max_requests is not None
+                                       and len(out) >= max_requests):
+                    break
+                item = self._queue.popleft()
+                _obs.metrics.gauge_set("serve.queue_depth",
+                                       len(self._queue))
+            res = self.process(item.req)
+            self._finish(item, res)
+            out.append(res)
         return out
 
-    def serve(self, reqs: List[StudyRequest]) -> List[ServeResult]:
-        """Convenience: submit everything (shed results inline), pump."""
-        shed = {}
-        for i, r in enumerate(reqs):
-            res = self.submit(r)
-            if res is not None:
-                shed[i] = res
-        done = self.pump()
-        out, it = [], iter(done)
-        for i in range(len(reqs)):
-            out.append(shed[i] if i in shed else next(it))
-        return out
+    def drain_batched(self, max_batch: Optional[int] = None
+                      ) -> List[ServeResult]:
+        """Drain the queue with same-bucket coalescing: each pass pops
+        the head request plus every queued request sharing its bucket
+        signature (up to max_batch) and executes them as ONE stacked
+        dispatch."""
+        out: List[ServeResult] = []
+        mb = self.max_batch if max_batch is None else max(1, int(max_batch))
+        while True:
+            batch = self._pop_batch(mb)
+            if not batch:
+                return out
+            out.extend(self._process_batch(batch))
+
+    def serve(self, reqs: List[StudyRequest], *,
+              batched: bool = False,
+              max_batch: Optional[int] = None) -> List[ServeResult]:
+        """Convenience: submit everything, drain, return results in
+        request order (shed results land inline). batched=True coalesces
+        same-bucket requests into stacked dispatches; the default drains
+        serially through pump(). When background workers are running
+        (start()), this just submits and waits on the futures."""
+        futs = [self.submit(r) for r in reqs]
+        if not self._threads:
+            if batched:
+                self.drain_batched(max_batch)
+            else:
+                self.pump()
+        return [f.result() for f in futs]
+
+    # -- background workers ----------------------------------------------
+    def start(self, threads: int = 2) -> None:
+        """Start background admission workers: each drains the queue
+        (coalescing same-bucket requests up to max_batch), completes
+        futures, and — when the queue is empty — opportunistically
+        finishes degraded requests' permutation tails."""
+        with self._cv:
+            if self._threads:
+                return
+            self._stopping = False
+            self._abandon = False
+            for i in range(max(1, int(threads))):
+                t = threading.Thread(target=self._worker_loop,
+                                     name=f"permanova-serve-{i}",
+                                     daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    def stop(self, *, drain: bool = True,
+             timeout: Optional[float] = None) -> None:
+        """Stop the background workers. drain=True (default) waits for
+        the admission and resume queues to empty first; drain=False
+        abandons queued work (its futures stay pending)."""
+        with self._cv:
+            if drain:
+                while self._queue or self._resume_q or self._inflight:
+                    self._cv.wait(timeout=0.1)
+            self._stopping = True
+            self._abandon = not drain
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads = []
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while (not self._stopping and not self._queue
+                       and not self._resume_q):
+                    self._cv.wait(timeout=0.2)
+                if self._abandon:
+                    return
+                if self._stopping and not self._queue \
+                        and not self._resume_q:
+                    return
+            batch = self._pop_batch(self.max_batch)
+            if batch:
+                with self._cv:
+                    self._inflight += 1
+                try:
+                    self._process_batch(batch)
+                finally:
+                    with self._cv:
+                        self._inflight -= 1
+                        self._cv.notify_all()
+                continue
+            work = None
+            with self._cv:
+                if self._resume_q and not self._queue:
+                    work = self._resume_q.popleft()
+                    self._inflight += 1
+            if work is not None:
+                try:
+                    self._run_resume(work)
+                finally:
+                    with self._cv:
+                        self._inflight -= 1
+                        self._cv.notify_all()
+
+    def _finish(self, item: _QItem, res: ServeResult) -> None:
+        if item.future is not None and not item.future.done():
+            item.future.set_result(res)
+        with self._cv:
+            self._cv.notify_all()
+
+    # -- batch coalescing -------------------------------------------------
+    def _sig_of(self, item: _QItem) -> Optional[tuple]:
+        """Bucket signature of a queued request (cached on the entry).
+        Classification failures complete the future as status='failed'
+        and return None — one bad request never poisons the drain."""
+        if item.sig is not None:
+            return item.sig
+        try:
+            c = self._classify(item.req)
+        except Exception as e:
+            _obs.metrics.inc("serve.requests_failed")
+            self._finish(item, ServeResult(
+                request_id=item.req.request_id, status="failed",
+                error=f"{type(e).__name__}: {e}"))
+            return None
+        item.sig = (c.n_pad, c.n_groups, c.mode, c.k_cols)
+        return item.sig
+
+    def _pop_batch(self, max_batch: int) -> Optional[List[_QItem]]:
+        """Pop the head request plus every queued request with the same
+        bucket signature, up to max_batch, preserving FIFO order within
+        the batch. Returns None when the queue is empty."""
+        with self._cv:
+            while self._queue:
+                head = self._queue.popleft()
+                sig = self._sig_of(head)
+                if sig is None:
+                    continue
+                batch = [head]
+                if max_batch > 1 and self._queue:
+                    rest: List[_QItem] = []
+                    for it in self._queue:
+                        s = self._sig_of(it)
+                        if s is None:
+                            continue
+                        if len(batch) < max_batch and s == sig:
+                            batch.append(it)
+                        else:
+                            rest.append(it)
+                    self._queue = deque(rest)
+                _obs.metrics.gauge_set("serve.queue_depth",
+                                       len(self._queue))
+                return batch
+            return None
+
+    def _process_batch(self, items: List[_QItem]) -> List[ServeResult]:
+        """Execute one coalesced batch; completes each item's future and
+        returns the results in item order."""
+        with self._exec_lock:
+            return self._process_batch_locked(items)
+
+    def _process_batch_locked(self, items: List[_QItem]
+                              ) -> List[ServeResult]:
+        results: Dict[int, ServeResult] = {}
+        live: List[Tuple[_QItem, _Prepared]] = []
+        for it in items:
+            try:
+                live.append((it, self._prepare(it.req)))
+            except Exception as e:
+                r = ServeResult(request_id=it.req.request_id,
+                                status="failed",
+                                error=f"{type(e).__name__}: {e}")
+                _obs.metrics.inc("serve.steps")
+                _obs.metrics.inc("serve.requests_failed")
+                self._finish(it, r)
+                results[id(it)] = r
+        # Requests holding a resumable checkpoint peel off to the serial
+        # path: their partial state lives in the serial block layout.
+        batch = [(it, p) for it, p in live if not self._has_resumable(p)]
+        serial = [it for it, p in live if self._has_resumable(p)]
+        if len(batch) == 1:
+            it = batch[0][0]
+            serial.insert(0, it)
+            batch = []
+        if batch:
+            preps = [p for _, p in batch]
+            S = len(preps)
+            _obs.metrics.inc("serve.batches")
+            _obs.metrics.inc("serve.batched_requests", S)
+            _obs.metrics.observe("serve.batch_size", S)
+            t0 = self.clock()
+            t0_ns = time.perf_counter_ns()
+            try:
+                with _obs.span("serve.batch",
+                               {"size": S, "bucket": str(preps[0].n_pad)}):
+                    rs = self._execute_batch(preps, t0)
+            except Exception as e:   # non-transient batch failure
+                rs = [ServeResult(request_id=p.req.request_id,
+                                  status="failed",
+                                  error=f"{type(e).__name__}: {e}")
+                      for p in preps]
+            t1_ns = time.perf_counter_ns()
+            wall = self.clock() - t0
+            for (it, p), r in zip(batch, rs):
+                r.wall_s = wall
+                self._lat.append((self.clock(), wall, r.ok))
+                _obs.emit_complete("serve.step", t0_ns, t1_ns,
+                                   {"request": r.request_id, "batch": S})
+                _obs.metrics.inc("serve.steps")
+                if r.status in ("ok", "degraded"):
+                    _obs.metrics.inc("serve.requests_completed")
+                    if r.degraded:
+                        _obs.metrics.inc("serve.requests_degraded")
+                elif r.status == "failed":
+                    _obs.metrics.inc("serve.requests_failed")
+                self._finish(it, r)
+                results[id(it)] = r
+        for it in serial:
+            r = self.process(it.req)
+            self._finish(it, r)
+            results[id(it)] = r
+        return [results[id(it)] for it in items]
+
+    def _has_resumable(self, p: _Prepared) -> bool:
+        if self.ckpt_dir is None:
+            return False
+        d = pathlib.Path(self.ckpt_dir) / p.req.request_id
+        return ckpt_mod.latest_step(d) is not None
 
     # -- per-request processing ------------------------------------------
     def process(self, req: StudyRequest) -> ServeResult:
-        t0 = self.clock()
-        with _obs.span("serve.step", {"request": req.request_id}):
-            res = self._process_with_retries(req, t0)
-        dur = self.clock() - t0
-        res.wall_s = dur
-        self._lat.append((self.clock(), dur, res.ok))
-        _obs.metrics.inc("serve.steps")
-        if res.status in ("ok", "degraded"):
-            _obs.metrics.inc("serve.requests_completed")
-            if res.degraded:
-                _obs.metrics.inc("serve.requests_degraded")
-        elif res.status == "failed":
-            _obs.metrics.inc("serve.requests_failed")
-        return res
+        with self._exec_lock:
+            t0 = self.clock()
+            with _obs.span("serve.step", {"request": req.request_id}):
+                res = self._process_with_retries(req, t0)
+            dur = self.clock() - t0
+            res.wall_s = dur
+            self._lat.append((self.clock(), dur, res.ok))
+            _obs.metrics.inc("serve.steps")
+            if res.status in ("ok", "degraded"):
+                _obs.metrics.inc("serve.requests_completed")
+                if res.degraded:
+                    _obs.metrics.inc("serve.requests_degraded")
+            elif res.status == "failed":
+                _obs.metrics.inc("serve.requests_failed")
+            return res
 
     def _process_with_retries(self, req: StudyRequest,
                               t0: float) -> ServeResult:
@@ -363,24 +750,11 @@ class PermanovaServer:
         (sleep or time.sleep)(dt)
 
     # -- preparation ------------------------------------------------------
-    def _prepare(self, req: StudyRequest) -> _Prepared:
-        import jax.numpy as jnp
-
-        if (req.dm is None) == (req.x is None):
-            raise ValueError("provide exactly one of dm= or x=")
+    def _classify(self, req: StudyRequest) -> _Class:
         grouping = np.asarray(req.grouping, np.int32)
         n = int(grouping.shape[0])
-        if req.dm is not None:
-            dm = np.asarray(req.dm, np.float32)
-        else:
-            with _obs.span("serve.stage1", {"metric": req.metric}):
-                dm = np.asarray(distance_mod.distance_matrix(
-                    jnp.asarray(req.x), req.metric), np.float32)
-        if dm.shape != (n, n):
-            raise ValueError(f"dm is {dm.shape}, grouping has n={n}")
         n_groups = (int(req.n_groups) if req.n_groups is not None
                     else int(grouping.max()) + 1)
-
         dense = req.covariates is not None or req.weights is not None
         design = None
         if dense:
@@ -394,18 +768,35 @@ class PermanovaServer:
                                       n_groups=n_groups)
             mode = (_MODE_STRATA if design.mode == design_mod.MODE_LABELS
                     else _MODE_COLS)
-            dense = mode == _MODE_COLS
         else:
             mode = _MODE_LABELS
-
+        k_cols = design.k_cols if mode == _MODE_COLS else 0
         n_pad = _next_bucket(n, self.bucket_sizes)
+        return _Class(mode=mode, n=n, n_groups=n_groups, n_pad=n_pad,
+                      k_cols=k_cols, design=design, grouping=grouping)
+
+    def _prepare(self, req: StudyRequest) -> _Prepared:
+        if (req.dm is None) == (req.x is None):
+            raise ValueError("provide exactly one of dm= or x=")
+        c = self._classify(req)
+        n, n_groups, mode, n_pad = c.n, c.n_groups, c.mode, c.n_pad
+        design = c.design
+        if req.dm is not None:
+            dm = np.asarray(req.dm, np.float32)
+        else:
+            with _obs.span("serve.stage1", {"metric": req.metric}):
+                dm = np.asarray(distance_mod.distance_matrix(
+                    jnp.asarray(req.x), req.metric), np.float32)
+        if dm.shape != (n, n):
+            raise ValueError(f"dm is {dm.shape}, grouping has n={n}")
+
         mat2 = np.zeros((n_pad, n_pad), np.float32)
         mat2[:n, :n] = dm * dm
         g_pad = np.full((n_pad,), n_groups, np.int32)    # sentinel pad
-        g_pad[:n] = grouping
+        g_pad[:n] = c.grouping
         strata_pad = basis = inv_gs = None
         k_cols = 0
-        if dense:
+        if mode == _MODE_COLS:
             dpad = design_mod.pad_design(design, n_pad)
             basis = jnp.asarray(dpad.basis)
             k_cols = dpad.k_cols
@@ -414,59 +805,66 @@ class PermanovaServer:
             strata_pad = jnp.asarray(st, jnp.int32)
             design = dpad
         else:
-            inv_gs = permutations.inv_group_sizes(jnp.asarray(g_pad),
-                                                  n_groups)
+            # host-side twin of permutations.inv_group_sizes: eager jnp
+            # bincount/scatter costs ~1.5 ms per request, which would be
+            # the admission bottleneck once batching amortises the blocks
+            # (same float32 values: integer counts, one IEEE division)
+            sizes = np.bincount(g_pad, minlength=n_groups)[:n_groups]
+            sizes = sizes.astype(np.float32)
+            inv_gs = np.where(
+                sizes > 0, 1.0 / np.maximum(sizes, 1.0), 0.0) \
+                .astype(np.float32)
             if mode == _MODE_STRATA:
                 st = np.zeros((n_pad,), np.int32)
                 st[:n] = np.asarray(design.strata, np.int32)[:n]
-                strata_pad = jnp.asarray(st)
+                strata_pad = st
         s_t = float(mat2.sum()) / 2.0 / n    # pad rows are zero
         return _Prepared(
             req=req, mode=mode, n=n, n_pad=n_pad, n_groups=n_groups,
             k_cols=k_cols, n_total=int(req.n_perms) + 1,
-            mat2=jnp.asarray(mat2), grouping=jnp.asarray(g_pad),
+            mat2=mat2, grouping=g_pad,
             strata=strata_pad, basis=basis, inv_gs=inv_gs, design=design,
-            s_t=s_t, key=jax.random.key(int(req.seed)),
-            n_valid=jnp.int32(n))
+            s_t=s_t, n_valid=np.int32(n))
 
     # -- bucket / compiled-program cache ---------------------------------
     def _bucket_for(self, p: _Prepared) -> _Bucket:
         key = (p.n_pad, p.n_groups, p.mode, p.k_cols)
-        b = self._buckets.get(key)
-        if b is not None:
-            b.hits += 1
-            _obs.metrics.inc("serve.bucket_hits")
+        with self._lock:
+            b = self._buckets.get(key)
+            if b is not None:
+                b.hits += 1
+                _obs.metrics.inc("serve.bucket_hits")
+                return b
+            _obs.metrics.inc("serve.bucket_misses")
+            cache_key = (f"serveplan|{self.backend}|n{p.n_pad}|g{p.n_groups}"
+                         f"|{p.mode}|k{p.k_cols}")
+            impl = tuning = None
+            entry = planner.measured_entry(cache_key)
+            if entry:
+                try:
+                    spec = registry.get(entry["impl"])
+                    impl = entry["impl"]
+                    tuning = {k: v for k, v in (entry.get("tuning") or {})
+                              .items() if k in spec.tuning}
+                except KeyError:
+                    impl = None
+            if impl is None:
+                pl = planner.plan(
+                    p.n_pad, max(p.n_total, self.block),
+                    p.n_groups if p.n_groups else max(p.k_cols, 2),
+                    backend=self.backend, chunk=self.block,
+                    n_cols=p.k_cols if p.mode == _MODE_COLS else None)
+                impl, tuning = pl.impl, dict(pl.tuning)
+                planner.record_entry(cache_key, {
+                    "impl": impl, "tuning": tuning, "block": self.block,
+                    "reason": pl.reason})
+            if p.mode == _MODE_COLS:
+                fn = registry.bound_cols(impl, **tuning)
+            else:
+                fn = registry.get(impl).bound(**tuning)
+            b = _Bucket(key=key, impl=impl, tuning=tuning, fn=fn, hits=1)
+            self._buckets[key] = b
             return b
-        _obs.metrics.inc("serve.bucket_misses")
-        cache_key = (f"serveplan|{self.backend}|n{p.n_pad}|g{p.n_groups}"
-                     f"|{p.mode}|k{p.k_cols}")
-        impl = tuning = None
-        entry = planner.measured_entry(cache_key)
-        if entry:
-            try:
-                spec = registry.get(entry["impl"])
-                impl = entry["impl"]
-                tuning = {k: v for k, v in (entry.get("tuning") or {})
-                          .items() if k in spec.tuning}
-            except KeyError:
-                impl = None
-        if impl is None:
-            pl = planner.plan(
-                p.n_pad, max(p.n_total, self.block),
-                p.n_groups if p.n_groups else max(p.k_cols, 2),
-                backend=self.backend, chunk=self.block,
-                n_cols=p.k_cols if p.mode == _MODE_COLS else None)
-            impl, tuning = pl.impl, dict(pl.tuning)
-            planner.record_entry(cache_key, {
-                "impl": impl, "tuning": tuning, "block": self.block,
-                "reason": pl.reason})
-        if p.mode == _MODE_COLS:
-            fn = registry.bound_cols(impl, **tuning)
-        else:
-            fn = registry.get(impl).bound(**tuning)
-        b = _Bucket(key=key, impl=impl, tuning=tuning, fn=fn, hits=1)
-        self._buckets[key] = b
-        return b
 
     # -- execution --------------------------------------------------------
     def _spans(self, p: _Prepared) -> List[Tuple[int, int]]:
@@ -475,27 +873,38 @@ class PermanovaServer:
                 for lo in range(0, p.n_total, block)]
 
     def _compute_block_fn(self, p: _Prepared, b: _Bucket):
+        # one device_put per operand per REQUEST (closed over by every
+        # block call) — _Prepared carries host arrays so admission itself
+        # does no device traffic
         block = min(self.block, p.n_total)
+        key = jax.random.key(int(p.req.seed))
+        mat2 = jnp.asarray(p.mat2)
+        n_valid = jnp.int32(p.n)
         if p.mode == _MODE_COLS:
+            basis, strata = p.basis, p.strata
+
             def compute(lo, hi):
                 with _obs.span("serve.block", {"lo": lo}):
                     s = scheduler.sw_cols_block(
-                        p.mat2, p.basis, p.strata, p.n_valid, p.key, lo,
+                        mat2, basis, strata, n_valid, key, lo,
                         fn=b.fn, block=block)
                     return np.asarray(s)[: hi - lo]
         else:
+            grouping = jnp.asarray(p.grouping)
+            inv_gs = jnp.asarray(p.inv_gs)
+            strata = jnp.asarray(p.strata) if p.strata is not None else None
+
             def compute(lo, hi):
                 with _obs.span("serve.block", {"lo": lo}):
                     s = scheduler.sw_block(
-                        p.mat2, p.grouping, p.n_valid, p.inv_gs, p.key, lo,
-                        fn=b.fn, block=block, strata=p.strata)
+                        mat2, grouping, n_valid, inv_gs, key, lo,
+                        fn=b.fn, block=block, strata=strata)
                     return np.asarray(s)[: hi - lo]
         return compute
 
     def _ckpt_mgr(self, req: StudyRequest):
         if self.ckpt_dir is None:
             return None
-        import pathlib
         return ckpt_mod.CheckpointManager(
             pathlib.Path(self.ckpt_dir) / req.request_id, keep=2)
 
@@ -510,7 +919,7 @@ class PermanovaServer:
 
         mgr = self._ckpt_mgr(req)
         if mgr is not None:
-            done, out = self._maybe_resume(mgr, req, done, out, n_blocks)
+            done, out = self._maybe_resume(mgr, p, done, out, n_blocks)
 
         deadline = req.deadline_s
 
@@ -528,7 +937,7 @@ class PermanovaServer:
             commits_since_ckpt[0] += 1
             if (mgr is not None
                     and commits_since_ckpt[0] % self.checkpoint_every == 0):
-                self._checkpoint(mgr, req, out, done)
+                self._checkpoint(mgr, p, out, done)
 
         exe = ElasticBlockExecutor(
             n_blocks, workers=self.workers, clock=self.clock,
@@ -545,39 +954,299 @@ class PermanovaServer:
                              rep.stale_beats_rejected)
         if not done.all():
             if mgr is not None:
-                self._checkpoint(mgr, req, out, done)
+                self._checkpoint(mgr, p, out, done)
             if not done[0]:
                 return ServeResult(
                     request_id=req.request_id, status="failed",
                     error="deadline expired before the observed statistic",
                     bucket=b.describe(), report=rep)
-            return self._assemble(p, b, out, done, spans, rep,
-                                  degraded=True)
+            res = self._assemble(p, b, out, done, spans, rep,
+                                 degraded=True)
+            self._queue_resume(p, b, out, done, spans, res)
+            return res
         if mgr is not None:
             shutil.rmtree(mgr.directory, ignore_errors=True)   # finished
         return self._assemble(p, b, out, done, spans, rep, degraded=False)
 
+    # -- batched execution ------------------------------------------------
+    def _stack_studies(self, lists, prestacked=()):
+        """Stack per-study operands along a leading study axis. Host
+        (numpy) operand lists are stacked host-side and shipped in ONE
+        device_put per operand per batch; device operands (cols-mode
+        basis) stack with jnp; `prestacked` arrays (the vmapped key
+        batch) already carry the study axis and are appended verbatim.
+        With a 'data' mesh axis configured, wrap-pad the study count up
+        to the axis size and device_put with a leading-'data'
+        NamedSharding (engine.api's study-axis contract); callers slice
+        batch results back to the true S."""
+        stacked = [jnp.asarray(np.stack(a))
+                   if all(isinstance(x, (np.ndarray, np.generic))
+                          for x in a)
+                   else jnp.stack(a) for a in lists]
+        stacked += list(prestacked)
+        if self.mesh is None:
+            return stacked
+        from repro.engine import api as engine_api
+        data_ways, s_pad, wrap = engine_api.study_axis_padding(
+            self.mesh, int(stacked[0].shape[0]))
+        if data_ways <= 1:
+            return stacked
+        if s_pad:
+            stacked = [a[wrap] for a in stacked]
+        return list(engine_api.put_study_sharded(self.mesh, stacked))
+
+    def _execute_batch(self, preps: List[_Prepared],
+                       t0: float) -> List[ServeResult]:
+        """One coalesced same-bucket dispatch: every permutation block is
+        a single vmapped step over the stacked study axis, run through
+        the elastic executor as a bag spanning the WHOLE batch. Per-study
+        keys keep each column bit-identical to the serial path. Handles
+        per-request deadlines (expired members degrade and leave; the
+        rest keep going) and batch-level transient retries."""
+        bkt = self._bucket_for(preps[0])
+        for p in preps[1:]:
+            self._bucket_for(p)     # same key: per-request hit accounting
+        S = len(preps)
+        mode = preps[0].mode
+        max_total = max(p.n_total for p in preps)
+        block = min(self.block, max_total)
+        spans = [(lo, min(lo + block, max_total))
+                 for lo in range(0, max_total, block)]
+        n_blocks = len(spans)
+
+        keys = _stack_request_keys([p.req.seed for p in preps])
+        if mode == _MODE_COLS:
+            mat2_b, basis_b, strata_b, nvalid_b, keys_b = \
+                self._stack_studies([[p.mat2 for p in preps],
+                                     [p.basis for p in preps],
+                                     [p.strata for p in preps],
+                                     [p.n_valid for p in preps]],
+                                    prestacked=(keys,))
+            k_cols = preps[0].k_cols
+            out = np.zeros((max_total, S, k_cols), np.float32)
+
+            def compute(lo, hi):
+                with _obs.span("serve.block", {"lo": lo, "batch": S}):
+                    s = scheduler.sw_cols_block_many(
+                        mat2_b, basis_b, strata_b, nvalid_b, keys_b, lo,
+                        fn=bkt.fn, block=block)
+                    return np.asarray(s).transpose(1, 0, 2)[: hi - lo, :S]
+        else:
+            lists = [[p.mat2 for p in preps], [p.grouping for p in preps],
+                     [p.n_valid for p in preps],
+                     [p.inv_gs for p in preps]]
+            if mode == _MODE_STRATA:
+                lists.append([p.strata for p in preps])
+            ops = self._stack_studies(lists, prestacked=(keys,))
+            mat2_b, grouping_b, nvalid_b, invgs_b = ops[:4]
+            strata_b = ops[4] if mode == _MODE_STRATA else None
+            keys_b = ops[-1]
+            out = np.zeros((max_total, S), np.float32)
+
+            def compute(lo, hi):
+                with _obs.span("serve.block", {"lo": lo, "batch": S}):
+                    s = scheduler.sw_block_many(
+                        mat2_b, grouping_b, nvalid_b, invgs_b, keys_b, lo,
+                        fn=bkt.fn, block=block, strata=strata_b)
+                    return np.asarray(s).T[: hi - lo, :S]
+
+        done = np.zeros((n_blocks,), bool)
+        need = [np.array([lo < p.n_total for (lo, _) in spans], bool)
+                for p in preps]
+        deadlines = [t0 + p.req.deadline_s
+                     if p.req.deadline_s is not None else None
+                     for p in preps]
+        results: List[Optional[ServeResult]] = [None] * S
+        active = set(range(S))
+        retries = 0
+        policy = self.retry
+        while active:
+            dls = [deadlines[i] for i in active if deadlines[i] is not None]
+            earliest = min(dls) if dls else None
+
+            def should_stop() -> bool:
+                return earliest is not None and self.clock() >= earliest
+
+            exe = ElasticBlockExecutor(
+                n_blocks, workers=self.workers, clock=self.clock,
+                heartbeat_timeout=self.heartbeat_timeout,
+                straggler_factor=self.straggler_factor,
+                injector=self.injector or FaultInjector(),
+                max_transient_retries=self.max_transient_retries)
+            try:
+                out, done, rep = exe.run(compute, spans, out=out,
+                                         done=done,
+                                         should_stop=should_stop)
+            except (SimulatedOOM, AllWorkersDead) as e:
+                retries += 1
+                _obs.metrics.inc("serve.request_retries", len(active))
+                if retries > policy.max_retries:
+                    for i in sorted(active):
+                        results[i] = ServeResult(
+                            request_id=preps[i].req.request_id,
+                            status="failed",
+                            error=f"{type(e).__name__}: {e}",
+                            retries=retries - 1, batched=True,
+                            bucket=bkt.describe())
+                    active.clear()
+                    break
+                backoff = min(policy.base_backoff_s * (2 ** (retries - 1)),
+                              policy.max_backoff_s)
+                backoff *= 1.0 + policy.jitter * float(self._rng.uniform())
+                self._sleep(backoff)
+                continue
+            if rep.stale_beats_rejected:
+                _obs.metrics.inc("serve.zombies_fenced",
+                                 rep.stale_beats_rejected)
+            for i in sorted(active):
+                if bool(done[need[i]].all()):
+                    results[i] = self._assemble_from_batch(
+                        preps[i], bkt, out, done, spans, rep, i,
+                        degraded=False, retries=retries)
+                    active.discard(i)
+            if not active:
+                break
+            # should_stop fired: degrade every member past its deadline.
+            now = self.clock()
+            for i in sorted(active):
+                dl = deadlines[i]
+                if dl is None or now < dl:
+                    continue
+                if not done[0]:
+                    results[i] = ServeResult(
+                        request_id=preps[i].req.request_id,
+                        status="failed",
+                        error=("deadline expired before the observed "
+                               "statistic"),
+                        bucket=bkt.describe(), report=rep, batched=True,
+                        retries=retries)
+                else:
+                    results[i] = self._assemble_from_batch(
+                        preps[i], bkt, out, done, spans, rep, i,
+                        degraded=True, retries=retries)
+                active.discard(i)
+        return [r for r in results]
+
+    def _assemble_from_batch(self, p: _Prepared, bkt: _Bucket, out, done,
+                             spans, rep, i: int, *, degraded: bool,
+                             retries: int) -> ServeResult:
+        """Slice batch member i back into the serial layout and reuse the
+        serial assembly (identical arithmetic => identical results)."""
+        if p.mode == _MODE_COLS:
+            out_i = np.ascontiguousarray(out[: p.n_total, i, :])
+        else:
+            out_i = np.ascontiguousarray(out[: p.n_total, i])
+        spans_i: List[Tuple[int, int]] = []
+        done_i: List[bool] = []
+        for bid, (lo, hi) in enumerate(spans):
+            if lo >= p.n_total:
+                break
+            spans_i.append((lo, min(hi, p.n_total)))
+            done_i.append(bool(done[bid]))
+        done_arr = np.asarray(done_i, bool)
+        res = self._assemble(p, bkt, out_i, done_arr, spans_i, rep,
+                             degraded=degraded)
+        res.batched = True
+        res.retries = retries
+        if degraded:
+            mgr = self._ckpt_mgr(p.req)
+            if mgr is not None:
+                self._checkpoint(mgr, p, out_i, done_arr)
+            self._queue_resume(p, bkt, out_i, done_arr, spans_i, res)
+        return res
+
+    # -- opportunistic resume of degraded results -------------------------
+    def _queue_resume(self, p: _Prepared, bkt: _Bucket, out, done, spans,
+                      res: ServeResult) -> None:
+        """Keep a degraded request's partial s_W and queue the
+        permutation tail for completion in idle capacity; `res.final`
+        receives the exact full-n_perms ServeResult."""
+        if not self.opportunistic_resume or bool(np.asarray(done).all()):
+            return
+        fut: Future = Future()
+        res.final = fut
+        with self._cv:
+            self._resume_q.append(_ResumeWork(
+                p=p, bucket=bkt, out=out, done=np.asarray(done, bool),
+                spans=list(spans), res=res, future=fut))
+            self._cv.notify()
+        _obs.metrics.inc("serve.resumes_queued")
+
+    @property
+    def resume_backlog(self) -> int:
+        return len(self._resume_q)
+
+    def resume_degraded(self, max_items: Optional[int] = None
+                        ) -> List[ServeResult]:
+        """Synchronously finish queued degraded tails (the cooperative
+        twin of the background workers' idle-time resume). Returns the
+        exact results, which are also pushed to each ServeResult.final."""
+        out: List[ServeResult] = []
+        while True:
+            with self._cv:
+                if not self._resume_q or (max_items is not None
+                                          and len(out) >= max_items):
+                    return out
+                work = self._resume_q.popleft()
+            out.append(self._run_resume(work))
+
+    def _run_resume(self, w: _ResumeWork) -> ServeResult:
+        with self._exec_lock:
+            try:
+                exe = ElasticBlockExecutor(
+                    len(w.spans), workers=self.workers, clock=self.clock,
+                    heartbeat_timeout=self.heartbeat_timeout,
+                    straggler_factor=self.straggler_factor,
+                    injector=self.injector or FaultInjector(),
+                    max_transient_retries=self.max_transient_retries)
+                out, done, rep = exe.run(
+                    self._compute_block_fn(w.p, w.bucket), w.spans,
+                    out=w.out, done=w.done)
+                res = self._assemble(w.p, w.bucket, out, done, w.spans,
+                                     rep, degraded=False)
+                res.retries = w.res.retries
+                res.batched = w.res.batched
+                _obs.metrics.inc("serve.resumes_completed")
+                mgr = self._ckpt_mgr(w.p.req)
+                if mgr is not None:
+                    shutil.rmtree(mgr.directory, ignore_errors=True)
+            except Exception as e:
+                res = ServeResult(request_id=w.p.req.request_id,
+                                  status="failed",
+                                  error=f"{type(e).__name__}: {e}")
+            if not w.future.done():
+                w.future.set_result(res)
+            return res
+
     # -- checkpoint/resume ------------------------------------------------
-    def _checkpoint(self, mgr, req: StudyRequest, out: np.ndarray,
+    def _checkpoint(self, mgr, p: _Prepared, out: np.ndarray,
                     done: np.ndarray) -> None:
         step = int(done.sum())
         mgr.save({"s_w": out, "done": done.astype(np.uint8)}, step=step,
-                 extras={"request_id": req.request_id,
-                         "n_perms": int(req.n_perms),
-                         "block": self.block, "seed": int(req.seed)},
+                 extras={"request_id": p.req.request_id,
+                         "n_perms": int(p.req.n_perms),
+                         "block": self.block, "seed": int(p.req.seed),
+                         "n_pad": int(p.n_pad), "mode": p.mode},
                  blocking=True)
         _obs.metrics.inc("serve.checkpoints")
 
-    def _maybe_resume(self, mgr, req: StudyRequest, done, out, n_blocks):
+    def _maybe_resume(self, mgr, p: _Prepared, done, out, n_blocks):
         step = mgr.latest_step()
         if step is None:
             return done, out
+        req = p.req
         try:
             tree, manifest = mgr.restore(
                 {"s_w": out, "done": done.astype(np.uint8)})
         except Exception:
             return done, out      # unreadable partial state: recompute
-        ex = manifest.get("extras", {})
+        ex = manifest.get("extras", {}) or {}
+        # Masked draws depend on the bucket mask: a checkpoint written
+        # under a different n_pad is NOT resumable — mixing the streams
+        # silently corrupts results. Ignore it and recompute.
+        if int(ex.get("n_pad", -1)) != int(p.n_pad):
+            self._note_bucket_drift(req, ex.get("n_pad"), p.n_pad)
+            return done, out
         if (ex.get("block") != self.block
                 or ex.get("n_perms") != int(req.n_perms)
                 or ex.get("seed") != int(req.seed)):
@@ -589,6 +1258,19 @@ class PermanovaServer:
         _obs.metrics.inc("serve.resumed_requests")
         _obs.metrics.inc("serve.resumed_blocks", float(done_l.sum()))
         return done_l.copy(), out_l.copy()
+
+    def _note_bucket_drift(self, req: StudyRequest, old_pad,
+                           new_pad: int) -> None:
+        global _drift_warned
+        _obs.metrics.inc("serve.ckpt_bucket_drift")
+        if not _drift_warned:
+            _drift_warned = True
+            _log.warning(
+                "ignoring checkpoint for %s: saved bucket n_pad=%s no "
+                "longer matches current n_pad=%s (bucket_sizes drift); "
+                "recomputing from scratch. Further drops are counted in "
+                "serve.ckpt_bucket_drift without logging.",
+                req.request_id, old_pad, new_pad)
 
     # -- result assembly --------------------------------------------------
     def _assemble(self, p: _Prepared, b: _Bucket, out, done, spans, rep,
@@ -658,19 +1340,24 @@ class PermanovaServer:
         """Rolling serving stats from the internal latency ring: requests
         per second over the window, p50/p99 step latency, queue depth,
         bucket inventory. (serve_stats_from_events computes the same view
-        from exported `serve.step` trace spans.)"""
+        from exported `serve.step` trace spans.) Well-defined on empty
+        and single-sample windows: a zero-width window (e.g. under a
+        virtual clock) reports the duration-sum rate, never inf."""
         if not self._lat:
             return {"requests": 0, "requests_per_s": 0.0,
                     "p50_s": 0.0, "p99_s": 0.0,
                     "queue_depth": len(self._queue),
                     "buckets": len(self._buckets)}
-        ts = [t for t, _, _ in self._lat]
-        durs = sorted(d for _, d, _ in self._lat)
-        span_s = max(ts) - min(ts) + durs[-1]
+        lat = list(self._lat)
+        ts = [t for t, _, _ in lat]
+        durs = sorted(d for _, d, _ in lat)
         n = len(durs)
+        span_s = max(ts) - min(ts) + durs[-1]
+        if span_s <= 0.0:
+            span_s = float(sum(durs))
         return {
             "requests": n,
-            "requests_per_s": n / span_s if span_s > 0 else float("inf"),
+            "requests_per_s": n / span_s if span_s > 0.0 else 0.0,
             "p50_s": durs[int(0.50 * (n - 1))],
             "p99_s": durs[int(0.99 * (n - 1))],
             "queue_depth": len(self._queue),
@@ -681,7 +1368,11 @@ class PermanovaServer:
 def serve_stats_from_events(events: Optional[list] = None) -> dict:
     """Requests/sec and p50/p99 step latency from `serve.step` trace
     spans (the ROADMAP observability follow-on): pass a trace_event list
-    or default to the live obs buffer."""
+    or default to the live obs buffer. Batched dispatches emit one
+    `serve.step` event PER REQUEST over the shared batch window, so the
+    requests/sec here reflects coalesced throughput. Empty and
+    single-event windows are well-defined (0.0 rps for a zero-width
+    window, never inf)."""
     evs = _obs.events() if events is None else events
     steps = [e for e in evs
              if e.get("name") == "serve.step" and e.get("ph") == "X"]
@@ -692,7 +1383,10 @@ def serve_stats_from_events(events: Optional[list] = None) -> dict:
     t_lo = min(e["ts"] for e in steps) / 1e6
     t_hi = max((e["ts"] + e["dur"]) for e in steps) / 1e6
     n = len(durs)
-    span_s = max(t_hi - t_lo, 1e-9)
-    return {"requests": n, "requests_per_s": n / span_s,
+    span_s = t_hi - t_lo
+    if span_s <= 0.0:
+        span_s = float(sum(durs))
+    return {"requests": n,
+            "requests_per_s": n / span_s if span_s > 0.0 else 0.0,
             "p50_s": durs[int(0.50 * (n - 1))],
             "p99_s": durs[int(0.99 * (n - 1))]}

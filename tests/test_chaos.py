@@ -286,6 +286,217 @@ class TestCorruptPlanCache:
         planner.load_autotune_cache(reload=True)
 
 
+def _batch_reqs(study, *, n_perms=127, deadline_idx=None,
+                deadline_s=None):
+    """Four same-bucket requests with distinct seeds (the coalescing
+    unit for the batched chaos cases)."""
+    dm, g = study
+    out = []
+    for s in range(4):
+        r = StudyRequest(grouping=g, dm=dm, n_perms=n_perms, seed=s,
+                         request_id=f"b{s}")
+        if deadline_idx == s:
+            r.deadline_s = deadline_s
+        out.append(r)
+    return out
+
+
+class TestBatchedChaos:
+    @pytest.fixture(scope="class")
+    def clean_batch(self, study):
+        """Failure-free SERIAL results — the reference every batched and
+        faulted run must reproduce bit-for-bit."""
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock())
+        return srv.serve(_batch_reqs(study))
+
+    def test_batched_matches_serial(self, study, clean_batch):
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock())
+        out = srv.serve(_batch_reqs(study), batched=True)
+        for a, c in zip(out, clean_batch):
+            assert a.batched
+            _assert_identical(a, c)
+
+    def test_batched_survives_worker_death(self, study, clean_batch):
+        inj = FaultInjector(seed=21).kill_worker_after_blocks(0, 1)
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock(),
+                              injector=inj)
+        out = srv.serve(_batch_reqs(study), batched=True)
+        for a, c in zip(out, clean_batch):
+            _assert_identical(a, c)
+        assert any(any("kill worker=0" in h for h in a.report.history)
+                   for a in out)
+
+    def test_batched_survives_fleet_loss_via_retry(self, study,
+                                                   clean_batch):
+        inj = FaultInjector(seed=22)
+        for w in range(3):
+            inj.kill_worker_after_blocks(w, 0)
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock(),
+                              injector=inj)
+        out = srv.serve(_batch_reqs(study), batched=True)
+        for a, c in zip(out, clean_batch):
+            _assert_identical(a, c)
+        assert all(a.retries >= 1 for a in out)
+
+    def test_batched_deadline_degrades_one_member(self, study,
+                                                  clean_batch):
+        # one member carries a deadline; it degrades while the other
+        # three finish exactly — then idle-capacity resume pushes the
+        # EXACT result to the degraded caller's `final` future.
+        inj = FaultInjector(seed=23).delay_block(None, 0.2)
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock(),
+                              injector=inj)
+        out = srv.serve(_batch_reqs(study, deadline_idx=1, deadline_s=1.0),
+                        batched=True)
+        assert [r.status for r in out] == ["ok", "degraded", "ok", "ok"]
+        for i in (0, 2, 3):
+            _assert_identical(out[i], clean_batch[i])
+        deg = out[1]
+        assert 0 < deg.n_perms_done < 127 and deg.p_ci is not None
+        # degraded null is a prefix of the clean full null (same stream)
+        m = deg.n_perms_done
+        assert np.array_equal(
+            np.asarray(deg.result.f_perms),
+            np.asarray(clean_batch[1].result.f_perms)[: m + 1])
+        lo, hi = deg.p_ci
+        assert lo <= float(clean_batch[1].result.p_value) <= hi
+        # opportunistic resume: the permutation tail completes exactly
+        assert deg.final is not None and srv.resume_backlog == 1
+        (exact,) = srv.resume_degraded()
+        _assert_identical(exact, clean_batch[1])
+        assert exact.n_perms_done == 127
+        assert deg.final.done() and deg.final.result() is exact
+
+    def test_serial_degraded_resume_exact(self, study, clean):
+        # the serial path gets the same opportunistic-resume contract
+        inj = FaultInjector(seed=24).delay_block(None, 0.2)
+        dm, g = study
+        srv = PermanovaServer(workers=3, block=16, clock=VirtualClock(),
+                              injector=inj)
+        res = srv.process(StudyRequest(grouping=g, dm=dm, n_perms=127,
+                                       seed=0, deadline_s=1.0))
+        assert res.status == "degraded" and res.final is not None
+        (exact,) = srv.resume_degraded()
+        _assert_identical(exact, clean)
+        assert res.final.result() is exact
+
+
+class TestBucketDriftRestart:
+    def test_restart_with_changed_buckets_recomputes(self, study,
+                                                     tmp_path):
+        from repro import obs
+        dm, g = study
+        # phase 1: bucket_sizes=[32] — deadline kills the request
+        # mid-flight, partial s_W checkpointed under n_pad=32
+        inj = FaultInjector(seed=31).delay_block(None, 0.2)
+        srv1 = PermanovaServer(workers=2, block=16, bucket_sizes=[32],
+                               clock=VirtualClock(), injector=inj,
+                               ckpt_dir=tmp_path, checkpoint_every=2)
+        r1 = srv1.process(StudyRequest(grouping=g, dm=dm, n_perms=255,
+                                       seed=0, deadline_s=1.0,
+                                       request_id="drift-me"))
+        assert r1.status == "degraded"
+        assert (tmp_path / "drift-me").exists()
+
+        # phase 2: restart with bucket_sizes=[24] — the padded mask
+        # changed, so the checkpointed s_W stream is NOT resumable; the
+        # server must ignore it (counter, no crash) and recompute
+        obs.enable(trace=False, metrics=True)
+        try:
+            snap0 = obs.metrics.snapshot()
+            srv2 = PermanovaServer(workers=2, block=16, bucket_sizes=[24],
+                                   ckpt_dir=tmp_path)
+            r2 = srv2.process(StudyRequest(grouping=g, dm=dm, n_perms=255,
+                                           seed=0, request_id="drift-me"))
+            d = obs.metrics.counter_delta(snap0)
+        finally:
+            obs.disable()
+        assert r2.status == "ok"
+        assert d.get("serve.ckpt_bucket_drift", 0) >= 1.0
+        assert not d.get("serve.resumed_requests")
+        assert r2.report.committed == r2.report.n_blocks  # full recompute
+        clean24 = PermanovaServer(workers=2, block=16,
+                                  bucket_sizes=[24]).process(
+            StudyRequest(grouping=g, dm=dm, n_perms=255, seed=0))
+        assert np.array_equal(np.asarray(r2.result.f_perms),
+                              np.asarray(clean24.result.f_perms))
+
+    def test_same_buckets_still_resume(self, study, tmp_path):
+        # control: identical bucket_sizes across the restart DOES resume
+        dm, g = study
+        inj = FaultInjector(seed=32).delay_block(None, 0.2)
+        srv1 = PermanovaServer(workers=2, block=16, bucket_sizes=[32],
+                               clock=VirtualClock(), injector=inj,
+                               ckpt_dir=tmp_path, checkpoint_every=2)
+        r1 = srv1.process(StudyRequest(grouping=g, dm=dm, n_perms=255,
+                                       seed=0, deadline_s=1.0,
+                                       request_id="stay-me"))
+        assert r1.status == "degraded"
+        srv2 = PermanovaServer(workers=2, block=16, bucket_sizes=[32],
+                               ckpt_dir=tmp_path)
+        r2 = srv2.process(StudyRequest(grouping=g, dm=dm, n_perms=255,
+                                       seed=0, request_id="stay-me"))
+        assert r2.status == "ok"
+        assert r2.report.committed < r2.report.n_blocks   # real resume
+
+
+class TestDegradedCiExtremes:
+    """Satellite: the beta-binomial predictive CI must stay clamped and
+    ordered at the extremes (0 hits / all hits) on BOTH quantile paths,
+    and always bracket the degraded point estimate (k+1)/(m+1)."""
+
+    def _paths(self):
+        paths = [False]            # normal-approx fallback, always on
+        try:
+            import scipy.stats  # noqa: F401
+            paths.append(True)
+        except ImportError:
+            pass
+        return paths
+
+    def _check(self, k, m, n_full, use_scipy):
+        lo, hi = mc_pvalue_ci(k, m, n_full, use_scipy=use_scipy)
+        p_hat = (k + 1.0) / (m + 1.0)
+        assert lo <= hi, (k, m, n_full, use_scipy)
+        assert lo <= p_hat <= hi, (k, m, n_full, use_scipy, lo, hi)
+        assert lo >= 1.0 / (n_full + 1.0)
+        assert hi <= 1.0
+
+    def test_extremes_both_paths(self):
+        for use_scipy in self._paths():
+            for m, n_full in [(1, 999), (10, 999), (255, 999), (1, 2),
+                              (50, 51)]:
+                self._check(0, m, n_full, use_scipy)     # zero hits
+                self._check(m, m, n_full, use_scipy)     # all hits
+            self._check(0, 1, 10 ** 6, use_scipy)        # tiny m, huge n
+
+    def test_property_lo_p_hi(self):
+        try:
+            from hypothesis import given, settings
+            from hypothesis import strategies as st
+        except ImportError:
+            rng = np.random.default_rng(0)
+            for _ in range(300):
+                n_full = int(rng.integers(1, 10000))
+                m = int(rng.integers(0, n_full + 1))
+                k = int(rng.integers(0, m + 1))
+                for use_scipy in self._paths():
+                    self._check(k, m, n_full, use_scipy)
+            return
+
+        paths = self._paths()
+
+        @settings(max_examples=200, deadline=None)
+        @given(data=st.data(), n_full=st.integers(1, 10000))
+        def prop(data, n_full):
+            m = data.draw(st.integers(0, n_full))
+            k = data.draw(st.integers(0, m))
+            for use_scipy in paths:
+                self._check(k, m, n_full, use_scipy)
+
+        prop()
+
+
 def _sum_blocks(lo, hi):
     """Deterministic stand-in for an s_W block: value = f(global index)."""
     return np.sqrt(np.arange(lo, hi, dtype=np.float32) + 1.0)

@@ -67,6 +67,34 @@ class TestSingleHostContracts:
                                        atol=1e-5)
             assert many.study(s).n_objects == sizes[s]
 
+    def test_ragged_fixed_bucket_n_pad(self):
+        """n_pad= pins the padded width to a serving bucket: results are
+        invariant to the extra pad rows (masked draws depend on n_valid,
+        not the batch max), and an undersized bucket is a clear error."""
+        sizes = (14, 23, 17)
+        studies = [_dm(m, seed=60 + i) for i, m in enumerate(sizes)]
+        key = jax.random.key(4)
+        base = engine.permanova_many([d for d, _ in studies],
+                                     [g for _, g in studies],
+                                     n_groups=G, n_perms=29, key=key)
+        bucket = engine.permanova_many([d for d, _ in studies],
+                                       [g for _, g in studies],
+                                       n_groups=G, n_perms=29, key=key,
+                                       n_pad=32)
+        # same n_valid trace, wider pad: the extra zero rows change only
+        # the fp32 reduction tree, not the statistics
+        assert np.array_equal(np.asarray(bucket.n_valid), sizes)
+        np.testing.assert_allclose(np.asarray(bucket.f_perms[:, 0]),
+                                   np.asarray(base.f_perms[:, 0]),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(bucket.s_t),
+                                   np.asarray(base.s_t), rtol=1e-5)
+        with pytest.raises(ValueError, match="n_pad"):
+            engine.permanova_many([d for d, _ in studies],
+                                  [g for _, g in studies],
+                                  n_groups=G, n_perms=29, key=key,
+                                  n_pad=16)
+
     def test_ragged_studies_draw_independent_nulls(self):
         d, g = _dm(19, seed=7)
         many = engine.permanova_many([d, d, d], [g, g, g], n_groups=G,

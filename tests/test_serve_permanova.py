@@ -10,7 +10,8 @@ from repro.core.distance import distance_matrix
 from repro.core.permanova import permanova
 from repro.obs import jaxhooks
 from repro.serve.permanova import (PermanovaServer, ServerOverloaded,
-                                   StudyRequest, serve_stats_from_events)
+                                   StudyRequest, _next_bucket,
+                                   serve_stats_from_events)
 
 
 @pytest.fixture(scope="module")
@@ -194,3 +195,195 @@ class TestTelemetry:
         assert d.get("serve.requests_admitted") == 1.0
         assert d.get("serve.requests_shed") == 1.0
         assert d.get("serve.requests_completed") == 1.0
+
+
+def _same_bucket_reqs(studies, n_perms=63):
+    """Six requests with mixed n (23/19/30) that all land in the n=32
+    power-of-two bucket — the coalescing unit."""
+    return [StudyRequest(grouping=g, dm=dm, n_perms=n_perms, seed=i)
+            for i, (dm, g) in enumerate(studies * 2)]
+
+
+class TestBatched:
+    def test_batched_bit_identical_to_pump(self, studies):
+        serial = PermanovaServer(workers=2, block=16).serve(
+            _same_bucket_reqs(studies))
+        srv = PermanovaServer(workers=2, block=16, max_batch=8)
+        batched = srv.serve(_same_bucket_reqs(studies), batched=True)
+        assert [r.status for r in serial] == ["ok"] * 6
+        for a, b in zip(serial, batched):
+            assert b.status == "ok" and b.batched and not a.batched
+            # bit-identity: full permutation set, not just the summary
+            assert np.array_equal(np.asarray(a.result.f_perms),
+                                  np.asarray(b.result.f_perms))
+            assert float(a.result.p_value) == float(b.result.p_value)
+            assert float(a.result.f_stat) == float(b.result.f_stat)
+        # one bucket, one hit per request — same accounting as serial
+        assert srv._buckets[(32, 3, "labels", 0)].hits == 6
+
+    def test_mixed_n_perms_same_bucket(self, studies):
+        # blocks span the longest sweep; shorter members' tails are
+        # computed-and-discarded without perturbing their draws
+        dm, g = studies[0]
+        reqs = [StudyRequest(grouping=g, dm=dm, n_perms=np_, seed=s)
+                for s, np_ in enumerate((31, 63, 15))]
+        serial = PermanovaServer(workers=2, block=16).serve(
+            [StudyRequest(grouping=g, dm=dm, n_perms=np_, seed=s)
+                for s, np_ in enumerate((31, 63, 15))])
+        batched = PermanovaServer(workers=2, block=16).serve(
+            reqs, batched=True)
+        for a, b in zip(serial, batched):
+            assert b.status == "ok" and b.n_perms_done == a.n_perms_done
+            assert np.array_equal(np.asarray(a.result.f_perms),
+                                  np.asarray(b.result.f_perms))
+
+    def test_batched_zero_warm_retraces(self, studies):
+        obs.enable(trace=False, metrics=True)
+        try:
+            srv = PermanovaServer(workers=2, block=16, max_batch=3)
+            srv.serve(_same_bucket_reqs(studies)[:3], batched=True)
+            before = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+            out = srv.serve(_same_bucket_reqs(studies)[3:], batched=True)
+            after = obs.metrics.value(jaxhooks.RETRACES, 0.0)
+        finally:
+            obs.disable()
+        assert [r.status for r in out] == ["ok"] * 3
+        assert after - before == 0.0
+
+    def test_submit_returns_future_completed_by_pump(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=1)
+        fut = srv.submit(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        assert not fut.done()
+        (res,) = srv.pump()
+        assert fut.done() and fut.result() is res
+        assert res.status == "ok"
+
+    def test_async_worker_threads(self, studies):
+        srv = PermanovaServer(workers=2, block=16, max_batch=4)
+        srv.start(threads=2)
+        try:
+            futs = [srv.submit(r) for r in _same_bucket_reqs(studies)]
+            out = [f.result(timeout=300) for f in futs]
+        finally:
+            srv.stop()
+        assert [r.status for r in out] == ["ok"] * 6
+        serial = PermanovaServer(workers=2, block=16).serve(
+            _same_bucket_reqs(studies))
+        for a, b in zip(serial, out):
+            assert np.array_equal(np.asarray(a.result.f_perms),
+                                  np.asarray(b.result.f_perms))
+
+    def test_batch_telemetry(self, studies):
+        obs.enable(trace=True, metrics=True)
+        try:
+            obs.clear()
+            snap0 = obs.metrics.snapshot()
+            srv = PermanovaServer(workers=2, block=16, max_batch=8)
+            srv.serve(_same_bucket_reqs(studies), batched=True)
+            d = obs.metrics.counter_delta(snap0)
+            evs = obs.events()
+        finally:
+            obs.disable()
+            obs.clear()
+        assert d.get("serve.batches", 0) >= 1
+        assert d.get("serve.batched_requests") == 6.0
+        hist = obs.metrics.REGISTRY.histogram("serve.batch_size")
+        assert hist.count >= 1 and hist.max <= 8
+        # one serve.step event per request, sharing the batch window —
+        # coalesced throughput is visible to serve_stats_from_events
+        stats = serve_stats_from_events(evs)
+        assert stats["requests"] == 6
+        assert np.isfinite(stats["requests_per_s"])
+        assert any(e["name"] == "serve.batch" for e in evs)
+
+    def test_cols_mode_batched_matches_serial(self, studies):
+        dm, g = studies[0]
+        rng = np.random.default_rng(3)
+        cov = rng.normal(size=dm.shape[0])
+        reqs = lambda: [StudyRequest(grouping=g, dm=dm, covariates=cov,
+                                     n_perms=31, seed=s) for s in range(3)]
+        serial = PermanovaServer(workers=2, block=16).serve(reqs())
+        batched = PermanovaServer(workers=2, block=16).serve(
+            reqs(), batched=True)
+        for a, b in zip(serial, batched):
+            assert a.status == b.status == "ok"
+            assert np.array_equal(np.asarray(a.result.f_perms),
+                                  np.asarray(b.result.f_perms))
+            for ta, tb in zip(a.result.terms, b.result.terms):
+                assert float(ta.p_value) == float(tb.p_value)
+
+
+class TestBucketOverflow:
+    def test_next_bucket_overflow_raises(self):
+        with pytest.raises(ValueError, match="largest configured bucket"):
+            _next_bucket(40, [16, 32])
+        assert _next_bucket(40, None) == 64        # open-ended default
+        assert _next_bucket(30, [16, 32]) == 32
+
+    def test_process_overflow_fails_cleanly(self, studies):
+        dm, g = studies[2]                         # n=30
+        srv = PermanovaServer(bucket_sizes=[16, 24])
+        res = srv.process(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        assert res.status == "failed"
+        assert "bucket" in res.error
+
+    def test_submit_overflow_fails_future_pump_survives(self, studies):
+        (dm_ok, g_ok), _, (dm_big, g_big) = studies   # n=23 / n=30
+        srv = PermanovaServer(bucket_sizes=[24])
+        f_bad = srv.submit(StudyRequest(grouping=g_big, dm=dm_big,
+                                        n_perms=9))
+        f_ok = srv.submit(StudyRequest(grouping=g_ok, dm=dm_ok, n_perms=9))
+        assert f_bad.done()
+        assert f_bad.result().status == "failed"
+        assert "bucket" in f_bad.result().error
+        out = srv.pump()                           # loop must not crash
+        assert len(out) == 1 and out[0].status == "ok"
+        assert f_ok.result().status == "ok"
+
+    def test_batched_stream_with_overflow_member(self, studies):
+        (dm_ok, g_ok), _, (dm_big, g_big) = studies
+        srv = PermanovaServer(bucket_sizes=[24], max_batch=4)
+        out = srv.serve([StudyRequest(grouping=g_big, dm=dm_big, n_perms=9),
+                         StudyRequest(grouping=g_ok, dm=dm_ok, n_perms=9)],
+                        batched=True)
+        assert [r.status for r in out] == ["failed", "ok"]
+
+
+class TestStatsEdgeCases:
+    def test_stats_empty_window(self):
+        s = PermanovaServer().stats()
+        assert s["requests"] == 0 and s["requests_per_s"] == 0.0
+        assert s["p50_s"] == 0.0 and s["p99_s"] == 0.0
+
+    def test_stats_single_sample_not_inf(self, studies):
+        from repro.runtime.faultinject import VirtualClock
+        dm, g = studies[0]
+        # virtual clock: zero-width window — the old span formula
+        # reported rps=inf here
+        srv = PermanovaServer(workers=1, clock=VirtualClock())
+        srv.process(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        s = srv.stats()
+        assert s["requests"] == 1
+        assert np.isfinite(s["requests_per_s"])
+        assert s["p50_s"] == s["p99_s"]
+
+    def test_stats_single_sample_real_clock(self, studies):
+        dm, g = studies[0]
+        srv = PermanovaServer(workers=1)
+        srv.process(StudyRequest(grouping=g, dm=dm, n_perms=9))
+        s = srv.stats()
+        assert np.isfinite(s["requests_per_s"])
+        assert s["requests_per_s"] > 0.0
+
+    def test_event_stats_empty_and_tiny_windows(self):
+        assert serve_stats_from_events([]) == {
+            "requests": 0, "requests_per_s": 0.0,
+            "p50_s": 0.0, "p99_s": 0.0}
+        one = [{"name": "serve.step", "ph": "X", "ts": 5.0, "dur": 2.0}]
+        s = serve_stats_from_events(one)
+        assert s["requests"] == 1 and np.isfinite(s["requests_per_s"])
+        assert s["p50_s"] == s["p99_s"] == pytest.approx(2.0 / 1e6)
+        zero = [{"name": "serve.step", "ph": "X", "ts": 5.0, "dur": 0.0}]
+        s = serve_stats_from_events(zero)
+        assert s["requests"] == 1 and s["requests_per_s"] == 0.0
