@@ -125,6 +125,52 @@ def run(emit):
                  f"mat2_mib={4*ns*ns/2**20:.1f} "
                  f"p={float(res.p_value):.3f}")
 
+    # out-of-core slab streaming: the same fused sweeps with the feature
+    # table on DISK (tiny device budget forces residency below hbm), WARM
+    # wall-clock. rows_s is the sweep's sample-row throughput; stall_frac
+    # is prefetcher wait time over sweep wall-clock — the double-buffered
+    # overlap claim is real only while it stays well under 1 (CI gates the
+    # smoke config at < 0.2).
+    import tempfile
+    from repro import obs as _obs
+    from repro.data import slabcache as _slabcache
+    from repro.obs import metrics as _ometrics
+    n_ooc, d_ooc, perms_o = 768, 64, 199
+    x_ooc, g_ooc = _study(n_ooc, d_ooc)
+    with tempfile.TemporaryDirectory() as td, _obs.session():
+        cache = _slabcache.build_slab_cache(td + "/cache",
+                                            np.asarray(x_ooc),
+                                            slab_rows=256)
+        for mat, row_name in (("fused", "ooc_stream"),
+                              ("fused-kernel", "ooc_fused-kernel")):
+            def go_o():
+                r = pipeline.pipeline(cache, g_ooc, metric="braycurtis",
+                                      n_perms=perms_o, materialize=mat,
+                                      device_budget_bytes=1024,
+                                      key=jax.random.key(0))
+                jax.block_until_ready(r.f_perms)
+                return r
+            go_o()                             # compile + warm
+            before = _ometrics.snapshot()["counters"]
+            t0 = time.perf_counter()
+            res_o = go_o()
+            t = time.perf_counter() - t0
+            stall_s = (_ometrics.value("prefetch.stall_ms")
+                       - before.get("prefetch.stall_ms", 0.0)) / 1e3
+            read_b = (_ometrics.value("prefetch.bytes")
+                      - before.get("prefetch.bytes", 0.0))
+            stall_frac = stall_s / t if t > 0 else 0.0
+            emit(f"pipeline/{row_name}", t * 1e6,
+                 f"n={n_ooc} perms={perms_o} rows_s={n_ooc/t:.0f} "
+                 f"read_mib={read_b/2**20:.1f} "
+                 f"stall_frac={stall_frac:.3f} "
+                 f"p={float(res_o.p_value):.3f}",
+                 extra={"rows_per_s": round(n_ooc / t, 1),
+                        "stall_frac": round(stall_frac, 4),
+                        "disk_read_mib": round(read_b / 2**20, 2),
+                        "slab_rows": cache.slab_rows,
+                        "n_slabs": cache.n_slabs})
+
     # partial/covariate designs: 1 factor + 2 covariates through the same
     # bridges (the design subsystem's per-column contraction) — wall-clock
     # + the peak-memory model columns, mirroring the scale rows above

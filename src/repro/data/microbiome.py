@@ -43,6 +43,39 @@ def synthetic_study(n_samples: int, n_features: int, n_groups: int, *,
     return x, grouping
 
 
+def synthetic_sparse_counts(n_samples: int, n_features: int, *,
+                            density: float = 0.1, seed: int = 0,
+                            cache_dir=None, slab_rows: int = 1024,
+                            fmt: str = "dense", n_groups: int = 8):
+    """EMP-scale sparse count table written STRAIGHT into a slab cache.
+
+    Generates one row slab at a time (rng seeded per (seed, slab), so any
+    slab is reproducible independently) and appends it to a
+    SlabCacheWriter — the dense (n, d) array never exists, which is the
+    point: this is the ingestion path for tables bigger than memory.
+    fmt='csr' stores presence structure only (the packed-bit jaccard
+    diet). Returns (SlabCache, grouping (n,) int32).
+    """
+    from repro.data import slabcache as _slabcache
+    if cache_dir is None:
+        raise ValueError("synthetic_sparse_counts writes a slab cache; "
+                         "pass cache_dir=")
+    slab_rows = max(1, min(int(slab_rows), n_samples))
+    writer = _slabcache.SlabCacheWriter(cache_dir, d=n_features,
+                                        slab_rows=slab_rows, fmt=fmt)
+    for slab_idx, lo in enumerate(range(0, n_samples, slab_rows)):
+        rows = min(slab_rows, n_samples - lo)
+        rng = np.random.default_rng((seed, slab_idx))
+        x = rng.gamma(0.7, 1.0, size=(rows, n_features)).astype(np.float32)
+        x[rng.random((rows, n_features)) >= density] = 0.0
+        writer.append(x)
+    cache = writer.finalize()
+    grng = np.random.default_rng((seed, 0x6772))   # distinct label stream
+    grouping = grng.integers(0, n_groups, size=n_samples).astype(np.int32)
+    grouping[:n_groups] = np.arange(n_groups)   # every group non-empty
+    return cache, grouping
+
+
 def synthetic_design(n_samples: int, *, covariate_names=("age", "depth"),
                      n_strata: int = 0, weighted: bool = False,
                      seed: int = 0):

@@ -103,6 +103,26 @@ def main():
                     help="pin the stage-1 distance impl (e.g. "
                          "'braycurtis.blocked', 'euclidean.pallas'); "
                          "'auto' = pipeline planner")
+    ap.add_argument("--features-cache", default=None, metavar="DIR",
+                    help="run out of core from a disk slab cache at DIR "
+                         "(built from the synthetic study on first use): "
+                         "the feature table never lives in memory — slabs "
+                         "stream through the async prefetcher into the "
+                         "fused sweep; implies the pipeline path")
+    ap.add_argument("--cache-format", default="dense",
+                    choices=["dense", "csr"],
+                    help="slab-cache storage when building --features-"
+                         "cache: raw f32 rows, or csr presence structure "
+                         "(jaccard only — reads nonzeros, not zeros)")
+    ap.add_argument("--slab-rows", type=int, default=None, metavar="R",
+                    help="slab height when building --features-cache "
+                         "(default: planner's plan_slab_rows for the "
+                         "device budget)")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="device-memory budget grading the feature "
+                         "residency tier (hbm/host/disk) for "
+                         "--features-cache runs; small values force the "
+                         "out-of-core sweep")
     ap.add_argument("--pcoa", type=int, default=None, metavar="K",
                     help="also compute the top-K PCoA ordination axes "
                          "(coordinates + explained variance) from the "
@@ -181,9 +201,32 @@ def main():
         fused_tuning = pipeline.registry.precision_tuning(
             args.feat_precision)
 
+    features = jnp.asarray(x)
+    if args.features_cache is not None:
+        import os
+        from repro.data import slabcache
+        from repro.pipeline import planner as _pplanner
+        dev_budget = (None if args.device_budget_mb is None
+                      else args.device_budget_mb * 2**20)
+        if os.path.exists(os.path.join(args.features_cache,
+                                       slabcache.META_NAME)):
+            features = slabcache.SlabCache.open(args.features_cache)
+        else:
+            rows = args.slab_rows or _pplanner.plan_slab_rows(
+                args.samples, args.features,
+                device_budget_bytes=dev_budget)
+            features = slabcache.build_slab_cache(
+                args.features_cache, x, slab_rows=rows,
+                fmt=args.cache_format)
+            print(f"[permanova] built slab cache {args.features_cache}: "
+                  f"{features.n_slabs} slabs x {features.slab_rows} rows, "
+                  f"{features.disk_bytes/2**20:.1f} MiB on disk "
+                  f"({args.cache_format})")
+
     if args.from_features or args.materialize != "auto" \
             or args.dist_impl != "auto" or args.shard_rows is not None \
-            or args.pcoa is not None or design_path:
+            or args.pcoa is not None or design_path \
+            or args.features_cache is not None:
         if args.distributed:
             ap.error("--distributed is not supported with the pipeline "
                      "path (--from-features/--materialize/--dist-impl); "
@@ -198,14 +241,16 @@ def main():
             mesh = make_host_mesh(model_ways=args.shard_rows)
         t0 = time.time()
         res = pipeline.pipeline(
-            jnp.asarray(x), jnp.asarray(grouping), metric=args.metric,
+            features, jnp.asarray(grouping), metric=args.metric,
             n_perms=args.perms, key=jax.random.key(args.seed),
             dist_impl=args.dist_impl, sw_impl=impl,
             materialize=args.materialize, chunk=args.chunk,
             fused_impl=args.fused_impl, fused_tuning=fused_tuning,
             mesh=mesh, ordination=args.pcoa,
             covariates=covariates, strata=strata, weights=weights,
-            memory_budget_bytes=budget, autotune=args.autotune)
+            memory_budget_bytes=budget, autotune=args.autotune,
+            device_budget_bytes=(None if args.device_budget_mb is None
+                                 else args.device_budget_mb * 2**20))
         jax.block_until_ready(res.f_perms)
         t_pa = time.time() - t0
         print(f"[permanova] n={args.samples} groups={args.groups} "

@@ -31,7 +31,7 @@ from repro.obs.core import (
     trace_enabled,
 )
 from repro.obs.jaxhooks import record_device_memory
-from repro.obs.report import report, stage_rows
+from repro.obs.report import budget_violations, report, stage_rows
 
 __all__ = [
     "core", "jaxhooks", "metrics", "trace",
@@ -39,5 +39,5 @@ __all__ = [
     "trace_enabled", "metrics_enabled", "events", "clear",
     "set_buffer_cap", "buffer_cap", "dropped_events", "emit_complete",
     "maybe_block", "device_sync", "record_device_memory",
-    "report", "stage_rows",
+    "report", "stage_rows", "budget_violations",
 ]

@@ -14,14 +14,41 @@ markdown table helper.
 
 from __future__ import annotations
 
+import fnmatch
 import os
 import sys
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 
 PEAK_GBPS_ENV = "REPRO_OBS_PEAK_GBPS"
+
+
+def budget_violations(budgets: Dict[str, float]) -> list:
+    """Check traced span totals against a wall-clock SLO budget table.
+
+    budgets maps an fnmatch pattern over span NAMES (e.g. 'stage1.*',
+    'fusedk.chunk') to the maximum TOTAL seconds all matching spans may
+    have spent together. Returns one dict per violated entry — empty
+    list = every budget held. A pattern matching no spans is not a
+    violation (the stage may legitimately not have run)."""
+    table = _trace.stage_table()
+    out = []
+    for pattern, limit_s in budgets.items():
+        names = [n for n in table if fnmatch.fnmatch(n, pattern)]
+        if not names:
+            continue
+        total = sum(table[n]["total_s"] for n in names)
+        if total > float(limit_s):
+            out.append({
+                "pattern": pattern,
+                "budget_s": float(limit_s),
+                "measured_s": total,
+                "stages": sorted(names),
+            })
+    out.sort(key=lambda v: -(v["measured_s"] - v["budget_s"]))
+    return out
 
 
 def reference_gbps(backend: Optional[str] = None) -> float:
@@ -72,9 +99,15 @@ def stage_rows(*, peak_gbps: Optional[float] = None,
 
 
 def report(*, peak_gbps: Optional[float] = None, flag_fraction: float = 0.5,
-           backend: Optional[str] = None, file=sys.stdout) -> str:
+           backend: Optional[str] = None,
+           budgets: Optional[Dict[str, float]] = None,
+           file=sys.stdout) -> str:
     """Render (and print, unless file=None) the per-stage
-    predicted-vs-measured table plus the counter/gauge snapshot."""
+    predicted-vs-measured table plus the counter/gauge snapshot.
+
+    budgets: optional SLO table (fnmatch span pattern -> max total
+    seconds, see budget_violations) — appends a budget-status section,
+    flagging every entry over its limit."""
     from repro.roofline.report import render_table
     ref = peak_gbps if peak_gbps is not None else reference_gbps(backend)
     rows = stage_rows(peak_gbps=ref, flag_fraction=flag_fraction,
@@ -103,6 +136,20 @@ def report(*, peak_gbps: Optional[float] = None, flag_fraction: float = 0.5,
             ["stage (no traffic model)", "calls", "measured s"],
             [[n, str(a["calls"]), f"{a['total_s']:.4f}"]
              for n, a in other]))
+
+    if budgets:
+        viol = budget_violations(budgets)
+        bad = {v["pattern"]: v for v in viol}
+        table = _trace.stage_table()
+        lines.append("")
+        lines.append("wall-clock SLO budgets:")
+        for pattern, limit_s in sorted(budgets.items()):
+            names = [n for n in table if fnmatch.fnmatch(n, pattern)]
+            total = sum(table[n]["total_s"] for n in names)
+            status = ("OVER" if pattern in bad
+                      else ("ok" if names else "not run"))
+            lines.append(f"  {pattern}: {total:.4f}s of {limit_s:g}s "
+                         f"budget [{status}]")
 
     snap = _metrics.snapshot()
     if snap["counters"] or snap["gauges"] or snap["histograms"]:

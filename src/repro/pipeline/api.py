@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import warnings
 from typing import Dict, Optional
 
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 from repro import engine
 from repro import obs as _obs
 from repro.core import design as _design
+from repro.data import slabcache as _slabcache
 from repro.core import permutations
 from repro.core.permanova import (PermanovaResult, f_from_sw,
                                   p_value_from_null)
@@ -110,10 +112,18 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
              ordination: Optional[int] = None,
              covariates=None, strata=None, weights=None,
              autotune: bool = False,
+             device_budget_bytes: Optional[float] = None,
+             host_budget_bytes: Optional[float] = None,
              trace=None) -> PermanovaResult:
     """Full features→p-value PERMANOVA under one joint plan.
 
-    x:           (n, d) abundance table (raw features, NOT distances).
+    x:           (n, d) abundance table (raw features, NOT distances) — or
+                 a data.SlabCache (or its directory path): the feature
+                 table stays on DISK and the planner grades its residency
+                 tier against device_budget_bytes; below 'hbm' the sweep
+                 runs out of core (async double-buffered slab prefetch
+                 into the fused contraction), F/p bit-identical to the
+                 in-memory bridges at the same slab boundaries.
     materialize: 'auto' | 'dense' | 'stream' | 'fused' | 'fused-kernel' —
                  whether the (n, n) matrix is built outright, streamed into
                  a single buffer, never materialized at all, or (fused-
@@ -166,9 +176,27 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
                 fused_impl=fused_impl, fused_tuning=fused_tuning,
                 backend=backend, mesh=mesh, ordination=ordination,
                 covariates=covariates, strata=strata, weights=weights,
-                autotune=autotune, trace=None)
+                autotune=autotune,
+                device_budget_bytes=device_budget_bytes,
+                host_budget_bytes=host_budget_bytes, trace=None)
     if key is None:
         key = jax.random.key(0)
+    if isinstance(x, (str, os.PathLike)):
+        x = _slabcache.SlabCache.open(x)
+    if isinstance(x, _slabcache.SlabCache):
+        return _pipeline_ooc(
+            x, grouping, metric=metric, n_perms=n_perms, key=key,
+            n_groups=n_groups, dist_impl=dist_impl, sw_impl=sw_impl,
+            materialize=materialize, row_block=row_block, chunk=chunk,
+            memory_budget_bytes=memory_budget_bytes,
+            matrix_budget_bytes=matrix_budget_bytes,
+            slab_budget_bytes=slab_budget_bytes, dist_tuning=dist_tuning,
+            sw_tuning=sw_tuning, fused_impl=fused_impl,
+            fused_tuning=fused_tuning, backend=backend, mesh=mesh,
+            ordination=ordination, covariates=covariates, strata=strata,
+            weights=weights, autotune=autotune,
+            device_budget_bytes=device_budget_bytes,
+            host_budget_bytes=host_budget_bytes)
     x = jnp.asarray(x)
     if x.ndim != 2:
         raise ValueError(f"features must be (n, d); got shape {x.shape}")
@@ -366,6 +394,166 @@ def pipeline(x: Array, grouping: Array, *, metric: str = "braycurtis",
         res,
         method=f"pipeline[{pl.dist_impl}->{pl.materialize}->{executed_sw}]",
         plan=plan_str, ordination=ordn)
+
+
+def _pipeline_ooc(cache: "_slabcache.SlabCache", grouping, *, metric: str,
+                  n_perms: int, key, n_groups, dist_impl, sw_impl,
+                  materialize, row_block, chunk, memory_budget_bytes,
+                  matrix_budget_bytes, slab_budget_bytes, dist_tuning,
+                  sw_tuning, fused_impl, fused_tuning, backend, mesh,
+                  ordination, covariates, strata, weights, autotune,
+                  device_budget_bytes, host_budget_bytes
+                  ) -> PermanovaResult:
+    """pipeline() when the features live in a slab cache.
+
+    The planner grades the residency tier from the f32 footprint: 'hbm'
+    loads the cache once and reruns the ordinary in-memory path (same
+    plan, same programs); 'host'/'disk' run the out-of-core sweep — the
+    async prefetcher stages slab k+1 while slab k's distance tiles are
+    assembled and contracted by the UNCHANGED fused steps, so F/p are
+    bit-identical to the in-memory bridges at row_block == slab_rows.
+    """
+    n, d = cache.n, cache.d
+    n_total = n_perms + 1
+    if mesh is not None:
+        raise ValueError("slab-cache features run single-device; mesh "
+                         "execution needs the resident table")
+    if cache.fmt == "csr" and metric != "jaccard":
+        raise ValueError(
+            f"csr slab caches store presence structure only; metric "
+            f"{metric!r} needs the dense format (jaccard reads it)")
+
+    design = None
+    if isinstance(grouping, _design.Design):
+        if covariates is not None or strata is not None \
+                or weights is not None:
+            raise ValueError("pass covariates/strata/weights either to "
+                             "pipeline() or inside the Design, not both")
+        design = grouping
+    elif covariates is not None or strata is not None or weights is not None:
+        design = _design.build(
+            grouping=None if grouping is None else
+            jnp.asarray(grouping, jnp.int32),
+            covariates=covariates, strata=strata, weights=weights,
+            n_groups=n_groups, n=n)
+    if design is not None and design.is_plain_labels:
+        grouping, n_groups, design = (design.grouping, design.n_groups,
+                                      None)
+    dense_mode = design is not None and design.mode == _design.MODE_DENSE
+    k = design.k_cols if dense_mode else None
+    if design is None:
+        grouping = jnp.asarray(grouping, jnp.int32)
+        if n_groups is None:
+            n_groups = int(jnp.max(grouping)) + 1
+        n_groups_plan = n_groups
+    else:
+        if design.n != n:
+            raise ValueError(f"design is for n={design.n}, cache is "
+                             f"({n}, {d})")
+        n_groups_plan = (design.n_groups if design.n_groups is not None
+                         else design.rank)
+
+    pl = _planner.plan_pipeline(
+        n, d, n_total, n_groups_plan, metric=metric, backend=backend,
+        dist_impl=dist_impl, materialize=materialize, row_block=row_block,
+        matrix_budget_bytes=matrix_budget_bytes,
+        slab_budget_bytes=slab_budget_bytes,
+        memory_budget_bytes=memory_budget_bytes, sw_impl=sw_impl,
+        chunk=chunk, sw_tuning=sw_tuning, fused_impl=fused_impl,
+        fused_tuning=fused_tuning, design_cols=k, features_on_disk=True,
+        slab_rows=cache.slab_rows, features_disk_bytes=cache.disk_bytes,
+        device_budget_bytes=device_budget_bytes,
+        host_budget_bytes=host_budget_bytes)
+
+    if pl.residency == "hbm":
+        # the f32 table fits the device budget: stream the cache into
+        # memory ONCE and run the ordinary resident path
+        res = pipeline(
+            cache.to_array(), grouping if design is None else design,
+            metric=metric, n_perms=n_perms, key=key, n_groups=n_groups,
+            dist_impl=dist_impl, sw_impl=sw_impl, materialize=materialize,
+            row_block=row_block, chunk=chunk,
+            memory_budget_bytes=memory_budget_bytes,
+            matrix_budget_bytes=matrix_budget_bytes,
+            slab_budget_bytes=slab_budget_bytes, dist_tuning=dist_tuning,
+            sw_tuning=sw_tuning, fused_impl=fused_impl,
+            fused_tuning=fused_tuning, backend=backend,
+            ordination=ordination, autotune=autotune)
+        return dataclasses.replace(
+            res, plan=f"{res.plan} | features=slab-cache(residency=hbm)")
+
+    if ordination is not None:
+        raise ValueError(
+            "ordination needs resident features; raise "
+            "device_budget_bytes (residency must reach 'hbm') or run it "
+            "separately on a subsample")
+    if autotune:
+        warnings.warn(
+            "autotune=True ignored out of core: the shoot-outs run on "
+            "resident operands", stacklevel=3)
+
+    dspec = _registry.get(pl.dist_impl)
+    prepare, rows_fn, _ = dspec.bound(
+        **{**pl.dist_tuning, **(dist_tuning or {})})
+    onepass = pl.materialize == "fused-kernel"
+
+    span_attrs = None
+    if _obs.trace_enabled():
+        predicted = _registry.ooc_disk_traffic_bytes(cache.n_slabs,
+                                                     cache.disk_bytes)
+        _obs.metrics.inc("pipeline.predicted_bytes", predicted)
+        span_attrs = {"bridge": f"ooc-{pl.materialize}",
+                      "residency": pl.residency,
+                      "predicted_bytes": predicted}
+    with _obs.span("bridge.ooc", span_attrs):
+        if design is None:
+            inv_gs = permutations.inv_group_sizes(grouping, n_groups)
+            s_w, s_t, ost = _streaming.fused_sw_ooc(
+                cache, rows_fn, prepare, grouping, inv_gs, key, n_total,
+                chunk=pl.sw.chunk, onepass=onepass)
+        elif dense_mode:
+            s_cols, s_t, ost = _streaming.fused_sw_ooc_design(
+                cache, rows_fn, prepare, design, key, n_total,
+                chunk=pl.sw.chunk, onepass=onepass)
+        else:
+            inv_gs = permutations.inv_group_sizes(design.grouping,
+                                                  design.n_groups)
+            s_w, s_t, ost = _streaming.fused_sw_ooc(
+                cache, rows_fn, prepare, design.grouping, inv_gs, key,
+                n_total, chunk=pl.sw.chunk, strata=design.strata,
+                onepass=onepass)
+        if span_attrs is not None:
+            # the span's attrs merge at __exit__, so the measured overlap
+            # evidence lands in the trace artifact
+            span_attrs["stall_ms"] = round(ost.stall_s * 1e3, 3)
+            span_attrs["disk_bytes_read"] = ost.disk_bytes_read
+    _obs.record_device_memory()
+
+    sweep = (f"residency={pl.residency} slabs={ost.n_slabs}"
+             f"x{ost.slab_rows} chunks={ost.n_chunks} "
+             f"read={ost.disk_bytes_read/2**20:.1f}MiB "
+             f"stall={ost.stall_s*1e3:.1f}ms/{ost.sweep_s*1e3:.0f}ms")
+    if design is None:
+        f_all = f_from_sw(jnp.asarray(s_w, jnp.float32),
+                          jnp.float32(s_t), n, n_groups)
+        res = PermanovaResult(
+            f_stat=f_all[0], p_value=p_value_from_null(f_all),
+            s_t=jnp.float32(s_t), s_w=jnp.asarray(s_w[0], jnp.float32),
+            f_perms=f_all, n_objects=n, n_groups=n_groups,
+            n_perms=n_perms, method=f"pipeline[ooc-{pl.materialize}]",
+            plan=sweep)
+    elif dense_mode:
+        res = engine.design_result(
+            jnp.asarray(s_cols, jnp.float32), design, n_objects=n,
+            n_perms=n_perms,
+            method=f"pipeline-design[ooc-{pl.materialize}]", plan=sweep)
+    else:
+        res = engine.api.label_design_result(
+            jnp.asarray(s_w, jnp.float32), jnp.float32(s_t), design,
+            n_objects=n, n_perms=n_perms,
+            method=f"pipeline[ooc-{pl.materialize}+strata]",
+            plan=f"{sweep} strata")
+    return dataclasses.replace(res, plan=f"{pl.describe()} :: {res.plan}")
 
 
 def _pipeline_design(x: Array, design: "_design.Design", *, metric: str,

@@ -51,6 +51,11 @@ DEFAULT_SLAB_BUDGET_BYTES = 128 * 1024 ** 2
 MIN_ROW_BLOCK = 8
 MAX_ROW_BLOCK = 4096
 PALLAS_MIN_N = 256
+# Residency budgets for the out-of-core decision: the f32 feature table must
+# fit the device budget to run the resident bridges, and the host budget
+# only grades the bandwidth model (page-cache-warm vs cold disk reads).
+DEFAULT_DEVICE_BUDGET_BYTES = 2 * 1024 ** 3
+DEFAULT_HOST_BUDGET_BYTES = 32 * 1024 ** 3
 
 MATERIALIZE_MODES = ("dense", "stream", "fused", "fused-kernel")
 
@@ -73,12 +78,36 @@ class PipelinePlan:
     n: int = 0                            # problem shape (for explain())
     d: int = 0
     n_groups: int = 0
+    residency: str = "hbm"                # where the features LIVE during
+                                          # the sweep (registry tier)
+    slab_rows: int = 0                    # on-disk slab height when the
+                                          # features come from a slab cache
+    disk_bytes: int = 0                   # slab-cache on-disk footprint
 
     def explain(self) -> str:
-        """describe() plus the precision-aware memory-traffic model: the
-        predicted feature-slab HBM bytes and peak workset per precision
-        choice for the planned fused impl, with the planned one marked."""
+        """describe() plus the residency-tier bandwidth table (when the
+        features stream from a slab cache) and the precision-aware
+        memory-traffic model: the predicted feature-slab HBM bytes and
+        peak workset per precision choice for the planned fused impl,
+        with the planned one marked."""
         lines = [self.describe()]
+        if self.residency != "hbm" and self.slab_rows and self.n:
+            n_slabs = -(-self.n // self.slab_rows)
+            traffic = _dreg.ooc_disk_traffic_bytes(n_slabs, self.disk_bytes)
+            gbps = _dreg.tier_bandwidth_gbps(self.residency, self.backend)
+            lines.append(
+                f"residency: {self.residency} (features "
+                f"{4 * self.n * self.d / 2**20:.0f} MiB f32 exceed the "
+                f"device budget; {n_slabs} slabs x {self.slab_rows} rows)")
+            lines.append("tier bandwidth model (GB/s): " + ", ".join(
+                f"{t}={_dreg.tier_bandwidth_gbps(t, self.backend):.1f}"
+                for t in _dreg.RESIDENCY_TIERS))
+            lines.append(
+                f"predicted slab-cache traffic per sweep: "
+                f"{traffic / 2**20:.1f} MiB ({n_slabs + 1} passes over "
+                f"{self.disk_bytes / 2**20:.1f} MiB on disk, independent "
+                f"of n_perms), ~{traffic / (gbps * 1e9) * 1e3:.1f} ms at "
+                f"the {self.residency} tier")
         if self.materialize != "fused-kernel" or not self.fused_impl \
                 or not self.n:
             return "\n".join(lines)
@@ -202,6 +231,22 @@ def _pick_row_block(n: int, d: int, impl: _dreg.DistanceImpl,
     return max(MIN_ROW_BLOCK, min(block, n))
 
 
+def plan_slab_rows(n: int, d: int, *,
+                   device_budget_bytes: Optional[float] = None) -> int:
+    """Slab height for BUILDING a cache destined for the OOC sweep: the
+    largest power-of-two block whose live device footprint — one feature
+    row slab + one column slab in flight plus the assembled (slab, n) m2
+    row slab — stays a small fraction of the device budget, leaving the
+    rest to the permutation chunks."""
+    budget = (DEFAULT_DEVICE_BUDGET_BYTES if device_budget_bytes is None
+              else device_budget_bytes)
+    per_slab = budget / 16.0
+    block = MAX_ROW_BLOCK
+    while block > MIN_ROW_BLOCK and 4.0 * block * (2 * d + n) > per_slab:
+        block //= 2
+    return max(MIN_ROW_BLOCK, min(block, n))
+
+
 def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
                   metric: str = "braycurtis",
                   backend: Optional[str] = None,
@@ -216,7 +261,12 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
                   sw_tuning: Optional[Dict[str, int]] = None,
                   fused_impl: Optional[str] = None,
                   fused_tuning: Optional[Dict[str, int]] = None,
-                  design_cols: Optional[int] = None
+                  design_cols: Optional[int] = None,
+                  features_on_disk: bool = False,
+                  slab_rows: Optional[int] = None,
+                  features_disk_bytes: Optional[int] = None,
+                  device_budget_bytes: Optional[float] = None,
+                  host_budget_bytes: Optional[float] = None
                   ) -> PipelinePlan:
     """Resolve the full two-stage plan for one problem.
 
@@ -229,12 +279,49 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     multi-factor designs) — the permutation-state workset models are
     sized for K design columns instead of G groups, and the engine plan
     is restricted to the matmul-family dense companions.
+
+    features_on_disk: the features come from a slab cache (slab_rows is
+    its build-time slab height, features_disk_bytes its on-disk size).
+    The planner grades the residency tier from the f32 footprint against
+    the device/host budgets; below 'hbm' it forces the out-of-core sweep:
+    a fused bridge with row_block == slab_rows (the slab IS the row
+    block) and the one-jit XLA form (the megakernel needs resident
+    features).
     """
     backend = backend or _eplanner.default_backend()
     matrix_budget = (DEFAULT_MATRIX_BUDGET_BYTES
                      if matrix_budget_bytes is None else matrix_budget_bytes)
     slab_budget = (DEFAULT_SLAB_BUDGET_BYTES
                    if slab_budget_bytes is None else slab_budget_bytes)
+
+    residency = "hbm"
+    if features_on_disk:
+        if not slab_rows:
+            raise ValueError("features_on_disk=True requires slab_rows "
+                             "(the cache's build-time slab height)")
+        residency = _dreg.residency_tier(
+            4.0 * n * d,
+            device_budget_bytes=(DEFAULT_DEVICE_BUDGET_BYTES
+                                 if device_budget_bytes is None
+                                 else device_budget_bytes),
+            host_budget_bytes=(DEFAULT_HOST_BUDGET_BYTES
+                               if host_budget_bytes is None
+                               else host_budget_bytes))
+    ooc = residency != "hbm"
+    if ooc:
+        if materialize not in (None, "auto", "fused", "fused-kernel"):
+            raise ValueError(
+                f"features exceed the device budget (residency="
+                f"{residency!r}); the {materialize!r} bridge needs a "
+                "resident (n,n) operand — use materialize='auto'/'fused'/"
+                "'fused-kernel' or raise device_budget_bytes")
+        ooc_auto = materialize in (None, "auto")
+        if ooc_auto:
+            materialize = "fused-kernel"
+        # The disk slab IS the unit of streaming: the sweep assembles one
+        # (slab_rows, n) m2 row slab at a time, so the row block is not a
+        # free knob out of core.
+        row_block = int(slab_rows)
 
     if dist_impl is None or dist_impl == "auto":
         dname, dreason = _pick_dist_impl(metric, backend, n, d, slab_budget)
@@ -256,6 +343,9 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
             raise ValueError(f"materialize={materialize!r}; expected one of "
                              f"{MATERIALIZE_MODES}")
         mat, mreason = materialize, "caller-pinned materialization"
+        if ooc and ooc_auto:
+            mreason = (f"features exceed the device budget (residency="
+                       f"{residency}); out-of-core slab sweep")
 
     if row_block is None:
         # Size the row block against the ROWS working set: the stream/fused
@@ -309,7 +399,15 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     f_impl = None
     f_tuning: Dict[str, int] = {}
     if mat == "fused-kernel":
-        if fused_impl in (None, "auto"):
+        if ooc and fused_impl in (None, "auto"):
+            # The Pallas megakernel reads the whole resident feature table;
+            # out of core only the one-jit XLA sweep applies (it consumes
+            # the assembled m2 row slab).
+            xla = _dreg.fused_names(metric=metric, kind="xla")
+            if not xla:  # pragma: no cover - every metric registers one
+                raise KeyError(f"no XLA fused impl for metric {metric!r}")
+            f_impl, freason = xla[0], "one-jit XLA sweep over disk slabs"
+        elif fused_impl in (None, "auto"):
             f_impl, freason = _pick_fused_impl(metric, backend, n,
                                                fused_tuning)
         else:
@@ -320,6 +418,11 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
         if fspec.metric != metric:
             raise ValueError(f"fused impl {f_impl!r} computes "
                              f"{fspec.metric!r}, not {metric!r}")
+        if ooc and fspec.kind != "xla":
+            raise ValueError(
+                f"fused impl {f_impl!r} ({fspec.kind} kind) needs the "
+                "resident feature table; out-of-core sweeps require the "
+                "XLA form")
         # Resolution order: registry defaults <- caller PRECISION knobs
         # (they select which measured entry applies) <- persisted tile
         # measurement at that precision <- caller tile overrides.
@@ -341,11 +444,17 @@ def plan_pipeline(n: int, d: int, n_perms: int, n_groups: int, *,
     dist_tuning = dict(dspec.tuning)
     if "block" in dist_tuning:
         dist_tuning["block"] = row_block
+    if ooc and _dreg.precision_tag(f_tuning) != "f32":
+        raise ValueError(
+            "out-of-core sweeps run f32 only: the reduced-precision slabs "
+            "need a global calibration pass over the resident table")
     return PipelinePlan(
         metric=metric, dist_impl=dname, dist_tuning=dist_tuning,
         materialize=mat, row_block=row_block, sw=sw, backend=backend,
         reason=f"{dreason}; {mreason}", fused_impl=f_impl,
-        fused_tuning=f_tuning, n=n, d=d, n_groups=n_groups)
+        fused_tuning=f_tuning, n=n, d=d, n_groups=n_groups,
+        residency=residency, slab_rows=int(slab_rows or 0),
+        disk_bytes=int(features_disk_bytes or 0))
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ the s_W registry keeps dataflow orthogonal to scheduling.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
@@ -30,6 +31,75 @@ import jax.numpy as jnp
 from repro.core import distance as _dist
 
 Array = object
+
+
+# ---------------------------------------------------------------------------
+# Residency tiers: one bandwidth model for every level features can live at.
+# The planner's working-set arithmetic is the single source of truth from
+# VMEM down to disk — the MI300A unified-memory residency argument extended
+# one tier below HBM (out-of-core slab streaming).
+# ---------------------------------------------------------------------------
+
+RESIDENCY_TIERS = ("vmem", "hbm", "host", "disk")
+
+# Model bandwidths (B/s). vmem: TPU-class on-chip SRAM order of magnitude;
+# hbm resolves per backend from the paper's measured numbers; host: DDR-class
+# staging the prefetcher reads through; disk: NVMe-class sequential read.
+# $REPRO_TIER_GBPS_<TIER> overrides any of them (GB/s).
+_VMEM_BPS = 22e12
+_HOST_BPS = 64e9
+_DISK_BPS = 2e9
+
+
+def tier_bandwidth_gbps(tier: str, backend: Optional[str] = None) -> float:
+    """Modelled bandwidth of one residency tier in GB/s ('hbm' is the
+    backend's device-memory roof: the paper's STREAM-triad numbers on
+    MI300A families, the v5e HBM roof on TPU)."""
+    if tier not in RESIDENCY_TIERS:
+        raise ValueError(f"unknown residency tier {tier!r}; "
+                         f"one of {RESIDENCY_TIERS}")
+    override = os.environ.get(f"REPRO_TIER_GBPS_{tier.upper()}")
+    if override:
+        return float(override)
+    if tier == "vmem":
+        return _VMEM_BPS / 1e9
+    if tier == "host":
+        return _HOST_BPS / 1e9
+    if tier == "disk":
+        return _DISK_BPS / 1e9
+    from repro import hw
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    if backend == "tpu":
+        return hw.TPU_V5E.hbm_bandwidth / 1e9
+    if backend == "gpu":
+        return hw.MI300A_GPU_STREAM_TRIAD / 1e9
+    return hw.MI300A_CPU_STREAM_TRIAD / 1e9
+
+
+def residency_tier(feature_bytes: float, *, device_budget_bytes: float,
+                   host_budget_bytes: float) -> str:
+    """Where the feature table LIVES during the sweep: 'hbm' while its f32
+    form fits the device budget (stream the cache once, then run the
+    in-memory bridges), 'host'/'disk' otherwise (out-of-core slab
+    streaming; the tiers differ only in the bandwidth the traffic model
+    charges — page-cache-warm vs cold reads)."""
+    if feature_bytes <= device_budget_bytes:
+        return "hbm"
+    if feature_bytes <= host_budget_bytes:
+        return "host"
+    return "disk"
+
+
+def ooc_disk_traffic_bytes(n_slabs: int, disk_bytes: float) -> float:
+    """Modelled bytes read from the slab cache for ONE full OOC sweep: per
+    row slab, the row operand plus the entire column stream — (n_slabs+1)
+    passes over the on-disk table. Independent of n_perms: every
+    permutation chunk consumes the LIVE assembled row slab, so the
+    permutation axis adds no disk traffic (that is the whole point of
+    fusing the sweep into the stream)."""
+    return float(disk_bytes) * (int(n_slabs) + 1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -42,6 +42,7 @@ streaming into the centering — no second pass over the matrix.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -680,6 +681,229 @@ def fused_kernel_sw_design(xprep: Array, rows_fn: Callable, design,
             design, key, n_total, row_block=row_block, chunk=chunk)
     raise ValueError(f"unknown fused-kernel impl {impl!r}; "
                      "expected 'pallas' or 'xla'")
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core fused sweeps: the feature table never exists in memory. Disk
+# slabs arrive through the async prefetcher (slab k+1 staged while slab k's
+# tiles contract), each (slab_rows, n) m2 row slab is assembled from
+# (slab, slab) distance tiles, and the UNCHANGED fused steps consume it —
+# so the statistic is bit-identical to the in-memory bridges at the same
+# slab boundaries by construction.
+# ---------------------------------------------------------------------------
+
+class OocStats(NamedTuple):
+    """Execution evidence: how the out-of-core sweep actually ran."""
+    n_total: int
+    chunk: int
+    n_chunks: int
+    slab_rows: int
+    n_slabs: int
+    disk_bytes_read: int     # actual bytes through the prefetcher
+    stall_s: float           # consumer time blocked on slab I/O
+    sweep_s: float           # whole-sweep wall clock
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows_fn", "prep_fn", "block", "n"))
+def _ooc_m2_tile(x_rows, x_cols, lo_r, lo_c, *, rows_fn, prep_fn, block, n):
+    """One (block, block) m2 tile from two RAW feature slabs: metric prep
+    (row-local for every registered metric) then distance rows, squared,
+    with pad rows/cols and the exact diagonal zeroed by GLOBAL ids.
+    lo_r/lo_c are traced, so one compiled program serves the whole sweep
+    — zero warm retraces regardless of slab count."""
+    drows = rows_fn(prep_fn(x_rows), prep_fn(x_cols))
+    gi = lo_r + jnp.arange(block)
+    gj = lo_c + jnp.arange(block)
+    valid = (gi < n)[:, None] & (gj < n)[None, :] \
+        & (gi[:, None] != gj[None, :])
+    return jnp.where(valid, drows * drows, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_chunks", "block",
+                                             "n", "n_groups"))
+def _ooc_rowslab_onepass(m2rows, grouping, strata, inv_gs, key, lo_r, *,
+                         chunk, n_chunks, block, n, n_groups):
+    """ONE dispatch covering every permutation chunk of one assembled m2
+    row slab (the fused-kernel form out of core: scan inside, so the slab
+    is read from HBM once per chunk without per-chunk host syncs)."""
+    chunk_los = jnp.arange(n_chunks) * chunk
+
+    def chunk_body(_, lo_p):
+        if strata is None:
+            g = permutations.permutation_batch_dyn(key, grouping, lo_p,
+                                                   chunk)
+        else:
+            g = permutations.strata_label_batch_dyn(key, grouping, strata,
+                                                    lo_p, chunk)
+        e = fstat.onehot_perm_factors(g, inv_gs, m2rows.dtype)
+        e_pad = jnp.pad(e, ((0, 0), (0, (-n) % block), (0, 0)))
+        e_rows = jax.lax.dynamic_slice(e_pad, (0, lo_r, 0),
+                                       (chunk, block, n_groups))
+        return None, fstat.sw_matmul_contract(m2rows, e, e_rows)
+
+    _, sws = jax.lax.scan(chunk_body, None, chunk_los)
+    return sws.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_chunks", "block",
+                                             "n", "k_cols", "groups"))
+def _ooc_rowslab_onepass_cols(m2rows, basis, strata, key, lo_r, *,
+                              chunk, n_chunks, block, n, k_cols, groups=()):
+    """_ooc_rowslab_onepass for DENSE designs (per-column contraction)."""
+    chunk_los = jnp.arange(n_chunks) * chunk
+
+    def chunk_body(_, lo_p):
+        perms = permutations.strata_permutation_batch_dyn(key, strata, lo_p,
+                                                          chunk)
+        v = fstat.basis_perm_factors(basis, perms)
+        v_pad = jnp.pad(v, ((0, 0), (0, (-n) % block), (0, 0)))
+        v_rows = jax.lax.dynamic_slice(v_pad, (0, lo_r, 0),
+                                       (chunk, block, k_cols))
+        if groups:
+            return None, fstat.sw_cols_contract_sparse(m2rows, v, v_rows,
+                                                       groups)
+        return None, fstat.sw_cols_contract(m2rows, v, v_rows)
+
+    _, scs = jax.lax.scan(chunk_body, None, chunk_los)
+    return scs.reshape(-1, k_cols)
+
+
+def _ooc_sweep(cache, rows_fn, prep_fn, consume, *, prefetch_depth=2):
+    """Drive one full OOC pass: for each row slab r, prefetch slab r then
+    the whole column stream, assemble the (slab_rows, n) m2 row slab from
+    tiles, and hand it to `consume(lo_r, m2rows)`. The prefetcher thread
+    is torn down even when consume raises mid-sweep. Returns the drained
+    prefetcher (for its I/O counters)."""
+    from repro.data import slabcache as _slabcache
+    n, block, n_slabs = cache.n, cache.slab_rows, cache.n_slabs
+    pf = _slabcache.SlabPrefetcher(cache, _slabcache.ooc_schedule(n_slabs),
+                                   depth=prefetch_depth, pad_to=block)
+    try:
+        it = iter(pf)
+        for r in range(n_slabs):
+            _, x_rows = next(it)
+            lo_r = r * block
+            with _obs.span("ooc.row_slab", {"lo": lo_r}):
+                tiles = []
+                for c in range(n_slabs):
+                    _, x_cols = next(it)
+                    tiles.append(_ooc_m2_tile(
+                        x_rows, x_cols, jnp.int32(lo_r),
+                        jnp.int32(c * block), rows_fn=rows_fn,
+                        prep_fn=prep_fn, block=block, n=n))
+                m2 = jnp.concatenate(tiles, axis=1)[:, :n]
+                consume(lo_r, m2)
+    finally:
+        pf.close()
+    return pf
+
+
+def fused_sw_ooc(cache, rows_fn: Callable, prep_fn: Callable,
+                 grouping: Array, inv_gs: Array, key: jax.Array,
+                 n_total: int, *, chunk: int,
+                 strata: Optional[Array] = None, onepass: bool = False,
+                 prefetch_depth: int = 2):
+    """s_W with the feature table on DISK: slab-cache streaming into the
+    fused contraction. onepass=False reuses `_fused_sw_step` verbatim (the
+    'fused' bridge out of core — bit-identical partial sums in the same
+    accumulation order as `fused_sw` at row_block == slab_rows);
+    onepass=True runs one dispatch per row slab (the 'fused-kernel' form).
+
+    Returns (s_w float64 (n_total,), s_t float, OocStats).
+    """
+    n = cache.n
+    block = cache.slab_rows
+    n_groups = int(inv_gs.shape[0])
+    chunk = int(max(1, min(chunk, n_total)))
+    n_chunks = -(-n_total // chunk)
+    grouping = jnp.asarray(grouping, jnp.int32)
+    out = np.zeros((n_total,), np.float64)
+    s_t_sum = 0.0
+
+    def consume(lo_r, m2):
+        nonlocal s_t_sum
+        s_t_sum += float(jnp.sum(m2))
+        if onepass:
+            sws = _ooc_rowslab_onepass(
+                m2, grouping, strata, inv_gs, key, jnp.int32(lo_r),
+                chunk=chunk, n_chunks=n_chunks, block=block, n=n,
+                n_groups=n_groups)
+            out[:] += np.asarray(sws[:n_total], np.float64)
+        else:
+            for lo_p in range(0, n_total, chunk):
+                sw = _fused_sw_step(
+                    m2, grouping, strata, inv_gs, key, jnp.int32(lo_r),
+                    jnp.int32(lo_p), chunk=chunk, block=block, n=n,
+                    n_groups=n_groups)
+                hi = min(lo_p + chunk, n_total)
+                out[lo_p:hi] += np.asarray(sw[: hi - lo_p], np.float64)
+
+    t0 = time.perf_counter()
+    pf = _ooc_sweep(cache, rows_fn, prep_fn, consume,
+                    prefetch_depth=prefetch_depth)
+    sweep_s = time.perf_counter() - t0
+    _obs.metrics.inc("fused.row_slabs", cache.n_slabs)
+    _obs.metrics.inc("fused.chunk_steps", cache.n_slabs * n_chunks)
+    stats = OocStats(
+        n_total=n_total, chunk=chunk, n_chunks=n_chunks, slab_rows=block,
+        n_slabs=cache.n_slabs, disk_bytes_read=pf.bytes_read,
+        stall_s=pf.stall_s, sweep_s=sweep_s)
+    return out, s_t_sum / 2.0 / n, stats
+
+
+def fused_sw_ooc_design(cache, rows_fn: Callable, prep_fn: Callable,
+                        design, key: jax.Array, n_total: int, *,
+                        chunk: int, block_sparse: bool = True,
+                        onepass: bool = False, prefetch_depth: int = 2):
+    """fused_sw_ooc for DENSE designs (covariates / strata / weights):
+    the per-column contraction over disk-streamed m2 row slabs. Returns
+    (s_cols float64 (n_total, K), s_t float, OocStats)."""
+    n = cache.n
+    block = cache.slab_rows
+    k = design.k_cols
+    basis = design.basis
+    strata = (design.strata if design.strata is not None
+              else jnp.zeros((n,), jnp.int32))
+    groups = ()
+    if block_sparse and design.strata is not None:
+        groups = fstat.sparse_col_groups(basis, design.strata)
+        if len(groups) <= 1:
+            groups = ()
+    chunk = int(max(1, min(chunk, n_total)))
+    n_chunks = -(-n_total // chunk)
+    out = np.zeros((n_total, k), np.float64)
+    s_t_sum = 0.0
+
+    def consume(lo_r, m2):
+        nonlocal s_t_sum
+        s_t_sum += float(jnp.sum(m2))
+        if onepass:
+            scs = _ooc_rowslab_onepass_cols(
+                m2, basis, strata, key, jnp.int32(lo_r), chunk=chunk,
+                n_chunks=n_chunks, block=block, n=n, k_cols=k,
+                groups=groups)
+            out[:] += np.asarray(scs[:n_total], np.float64)
+        else:
+            for lo_p in range(0, n_total, chunk):
+                sc = _fused_sw_step_cols(
+                    m2, basis, strata, key, jnp.int32(lo_r),
+                    jnp.int32(lo_p), chunk=chunk, block=block, n=n,
+                    k_cols=k, groups=groups)
+                hi = min(lo_p + chunk, n_total)
+                out[lo_p:hi] += np.asarray(sc[: hi - lo_p], np.float64)
+
+    t0 = time.perf_counter()
+    pf = _ooc_sweep(cache, rows_fn, prep_fn, consume,
+                    prefetch_depth=prefetch_depth)
+    sweep_s = time.perf_counter() - t0
+    _obs.metrics.inc("fused.row_slabs", cache.n_slabs)
+    _obs.metrics.inc("fused.chunk_steps", cache.n_slabs * n_chunks)
+    stats = OocStats(
+        n_total=n_total, chunk=chunk, n_chunks=n_chunks, slab_rows=block,
+        n_slabs=cache.n_slabs, disk_bytes_read=pf.bytes_read,
+        stall_s=pf.stall_s, sweep_s=sweep_s)
+    return out, s_t_sum / 2.0 / n, stats
 
 
 # ---------------------------------------------------------------------------
